@@ -1,0 +1,184 @@
+"""Benchmark harness — one function per paper figure/table.
+
+Prints ``name,us_per_call,derived`` CSV rows. The Canny benchmarks run
+REAL wall-clock measurements on this host (the pipeline is CPU-feasible);
+the LM table reads the dry-run artifacts.
+
+  fig8_9_suboptimal_vs_optimal   paper figs 8–9: serial vs pattern-parallel
+  stage_breakdown                paper §2.2.1 steps 1–4
+  load_balance                   paper figs 11–12 (exact tile counts)
+  image_size_scaling             paper §2.2 ("high quality images")
+  hysteresis_modes               paper claim C3 (serial vs parallel fixpoint)
+  roofline_table                 §Roofline summary from experiments/dryrun
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import statistics
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.canny import (
+    CannyParams,
+    canny_reference,
+    gaussian_reference,
+    hysteresis_reference,
+    make_canny,
+    nms_reference,
+    sobel_reference,
+)
+from repro.core.canny.gaussian import gaussian_stage
+from repro.core.canny.hysteresis import double_threshold, hysteresis_fixpoint, hysteresis_stage
+from repro.core.canny.nms import nms_stage
+from repro.core.canny.sobel import sobel_stage
+from repro.core.patterns.dist import StencilCtx
+from repro.core.patterns.partition import tile_counts
+from repro.data.images import synthetic_image
+
+PARAMS = CannyParams(sigma=1.4, low=0.08, high=0.2)
+CTX = StencilCtx(None, "edge")
+ROWS: list[tuple[str, float, str]] = []
+
+
+def row(name: str, us: float, derived: str = "") -> None:
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def _timeit(fn, n=5, warmup=1) -> float:
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return statistics.median(ts) * 1e6  # µs
+
+
+# ---------------------------------------------------------------------------
+def fig8_9_suboptimal_vs_optimal(h=512, w=512):
+    """Serial numpy CED vs pattern-parallel backends (figs 8–9 analogue)."""
+    img = synthetic_image(h, w, seed=1)
+    jimg = jnp.asarray(img)
+
+    us_serial = _timeit(lambda: canny_reference(img, PARAMS), n=3)
+    row("canny_suboptimal_serial_numpy_512", us_serial, "paper fig8 baseline")
+
+    for backend in ("jnp", "pallas", "fused"):
+        det = make_canny(PARAMS, backend=backend)
+        us = _timeit(lambda: np.asarray(det(jimg)))
+        row(
+            f"canny_optimal_{backend}_512",
+            us,
+            f"speedup_vs_serial={us_serial/us:.1f}x",
+        )
+
+
+def stage_breakdown(h=512, w=512):
+    """Per-stage time (paper §2.2.1 steps 1–4), numpy vs pattern-parallel."""
+    img = synthetic_image(h, w, seed=2)
+    blur = gaussian_reference(img, PARAMS)
+    mag, dirs = sobel_reference(blur, PARAMS)
+    nms = nms_reference(mag, dirs)
+    jimg, jblur = jnp.asarray(img), jnp.asarray(blur)
+    jmag, jdirs, jnms = jnp.asarray(mag), jnp.asarray(dirs), jnp.asarray(nms)
+
+    g = jax.jit(lambda x: gaussian_stage(x, CTX, PARAMS))
+    s = jax.jit(lambda x: sobel_stage(x, CTX, PARAMS))
+    nz = jax.jit(lambda m, d: nms_stage(m, d, CTX))
+    hy = jax.jit(lambda m: hysteresis_stage(m, PARAMS, CTX))
+
+    row("stage1_gaussian_numpy", _timeit(lambda: gaussian_reference(img, PARAMS), n=3))
+    row("stage1_gaussian_pattern", _timeit(lambda: np.asarray(g(jimg))))
+    row("stage2_sobel_numpy", _timeit(lambda: sobel_reference(blur, PARAMS), n=3))
+    row("stage2_sobel_pattern", _timeit(lambda: np.asarray(s(jblur)[0])))
+    row("stage3_nms_numpy", _timeit(lambda: nms_reference(mag, dirs), n=1), "O(HW) python")
+    row("stage3_nms_pattern", _timeit(lambda: np.asarray(nz(jmag, jdirs))))
+    row("stage4_hysteresis_serial_bfs", _timeit(lambda: hysteresis_reference(nms, PARAMS), n=3), "paper keeps serial")
+    row("stage4_hysteresis_parallel_fixpoint", _timeit(lambda: np.asarray(hy(jnms))), "beyond-paper")
+
+
+def load_balance():
+    """Exact per-shard pixel counts (paper figs 11–12: even utilization)."""
+    for shards in (4, 8, 16):
+        counts = tile_counts((4096, 4096), (shards, 1)).ravel()
+        skew = (counts.max() - counts.min()) / counts.max()
+        row(
+            f"load_balance_{shards}shards",
+            0.0,
+            f"min={counts.min()} max={counts.max()} skew={skew:.4f}",
+        )
+
+
+def image_size_scaling():
+    """Throughput across image sizes (paper: 'high quality images')."""
+    det = make_canny(PARAMS, backend="jnp")
+    for size in (128, 256, 512, 1024):
+        img = jnp.asarray(synthetic_image(size, size, seed=3))
+        us = _timeit(lambda: np.asarray(det(img)))
+        mpxs = size * size / us
+        row(f"canny_scaling_{size}px", us, f"{mpxs:.2f} MPx/s")
+
+
+def hysteresis_modes(h=512, w=512):
+    """Claim C3: the 'forced serial' stage vs the parallel fixpoint."""
+    img = synthetic_image(h, w, seed=4)
+    blur = gaussian_reference(img, PARAMS)
+    mag, dirs = sobel_reference(blur, PARAMS)
+    nms = nms_reference(mag, dirs)
+    jn = jnp.asarray(nms)
+
+    us_serial = _timeit(lambda: hysteresis_reference(nms, PARAMS), n=3)
+    row("hysteresis_serial_bfs_512", us_serial, "Amdahl (1-f) stage")
+    for sweeps in (1, 2, 4):
+        fn = jax.jit(
+            lambda m, k=sweeps: hysteresis_fixpoint(
+                *double_threshold(m, PARAMS), StencilCtx(None, "edge"), local_sweeps=k
+            )
+        )
+        us = _timeit(lambda: np.asarray(fn(jn)))
+        row(
+            f"hysteresis_parallel_sweeps{sweeps}_512",
+            us,
+            f"speedup_vs_serial={us_serial/us:.1f}x",
+        )
+
+
+def roofline_table():
+    """LM cells summary from the dry-run artifacts (see EXPERIMENTS.md)."""
+    d = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+    if not d.exists():
+        row("roofline_table", 0.0, "no dryrun artifacts yet")
+        return
+    for f in sorted(d.glob("baseline_*_16x16.json")):
+        j = json.loads(f.read_text())
+        total = j["compute_s"] + j["memory_s"] + j["collective_s"]
+        frac = j["compute_s"] / total if total else 0.0
+        row(
+            f"roofline_{j['arch']}_{j['shape']}",
+            total * 1e6,
+            f"dominant={j['dominant']} compute_frac={frac:.3f} useful={j['useful_ratio']:.3f}",
+        )
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    fig8_9_suboptimal_vs_optimal()
+    stage_breakdown()
+    load_balance()
+    image_size_scaling()
+    hysteresis_modes()
+    roofline_table()
+
+
+if __name__ == "__main__":
+    main()

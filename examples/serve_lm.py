@@ -1,0 +1,35 @@
+"""Serve a small model with batched requests (prefill + decode loop).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--arch smollm-135m]
+"""
+
+import argparse
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.serve import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args()
+    out = serve(
+        args.arch,
+        batch=args.batch,
+        prompt_len=args.prompt_len,
+        gen=args.gen,
+        temperature=args.temperature,
+    )
+    for i, row in enumerate(out[:2]):
+        print(f"request {i}: {row[:24].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Train a language model end-to-end on CPU (reduced config by default).
+
+Demonstrates the LM substrate: deterministic data, jit'd train step,
+AdamW + cosine schedule, async checkpointing, crash-resume.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--arch smollm-135m]
+      [--steps 200] [--full]   # --full trains the real 135M config
+"""
+
+import argparse
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--ckpt-dir", default="train_lm_ckpt")
+    args = ap.parse_args()
+    _, losses = train(
+        args.arch,
+        steps=args.steps,
+        batch=args.batch,
+        seq=args.seq,
+        full=args.full,
+        ckpt_dir=args.ckpt_dir,
+    )
+    print(f"loss: {losses[0]:.4f} → {losses[-1]:.4f} over {len(losses)} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Render EXPERIMENTS.md tables from the dry-run JSON artifacts.
+
+Usage: python experiments/make_tables.py [--tag baseline] [--mesh 16x16]
+Prints markdown to stdout.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+HERE = pathlib.Path(__file__).resolve().parent
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}µs"
+
+
+def fmt_b(x: float | None) -> str:
+    if x is None:
+        return "—"
+    return f"{x/2**30:.1f}GiB"
+
+
+def load(tag: str, mesh: str) -> list[dict]:
+    rows = []
+    for f in sorted(HERE.glob(f"dryrun/{tag}_*_{mesh}.json")):
+        rows.append(json.loads(f.read_text()))
+    return rows
+
+
+def roofline_table(tag: str, mesh: str) -> str:
+    rows = load(tag, mesh)
+    out = [
+        "| arch | shape | compute | memory | collective | dominant | "
+        "MODEL_FLOPS/HLO | args/dev | fits HBM |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        total = r["compute_s"] + r["memory_s"] + r["collective_s"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{fmt_b(r.get('mem_per_dev_bytes'))} | "
+            f"{'✓' if r.get('fits_hbm') else '✗'} |"
+        )
+    return "\n".join(out)
+
+
+def dryrun_table(tag: str) -> str:
+    out = [
+        "| arch | shape | mesh | compile | collective schedule (count × kind) | args/dev |",
+        "|---|---|---|---|---|---|",
+    ]
+    for mesh in ("16x16", "2x16x16"):
+        for r in load(tag, mesh):
+            c = r["collective_detail"]["_counts"]
+            sched = ", ".join(f"{v}×{k}" for k, v in c.items() if v)
+            note = r.get("note", "")
+            compile_s = note.split("compile=")[1].split("s")[0] if "compile=" in note else "?"
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {mesh} | {compile_s}s | "
+                f"{sched or 'none'} | {fmt_b(r.get('mem_per_dev_bytes'))} |"
+            )
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--kind", default="roofline", choices=["roofline", "dryrun"])
+    args = ap.parse_args()
+    if args.kind == "roofline":
+        print(roofline_table(args.tag, args.mesh))
+    else:
+        print(dryrun_table(args.tag))
+
+
+if __name__ == "__main__":
+    main()

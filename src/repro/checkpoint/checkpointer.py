@@ -1,0 +1,159 @@
+"""Checkpoint/restart — async, atomic, mesh-agnostic.
+
+Design for 1000+ nodes:
+  * **Atomic**: write to ``step_N.tmp/`` then ``os.rename`` — a crash
+    mid-write never corrupts the latest checkpoint; restore picks the
+    newest complete step.
+  * **Async**: the device→host copy happens at save() call time (cheap),
+    the file I/O runs on a writer thread off the training critical path;
+    ``wait()`` joins before the next save or at exit.
+  * **Mesh-agnostic**: leaves are stored as full logical arrays (npz
+    chunks) + a JSON manifest with tree structure, dtypes and the step.
+    Restoring onto a *different* mesh is just device_put with the new
+    sharding — elastic scaling (see tests/subproc/elastic.py). On a real
+    multi-host pod each host would write only its addressable shards;
+    the manifest layout (one file per leaf) is chosen so that per-shard
+    files drop in without format changes.
+  * **Integrity**: per-leaf CRC32 in the manifest, verified on restore.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import re
+import shutil
+import threading
+import zlib
+
+import jax
+import numpy as np
+
+_MANIFEST = "manifest.json"
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _flatten_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        out.append((key, leaf))
+    return out
+
+
+class Checkpointer:
+    def __init__(self, directory: str | os.PathLike, keep: int = 3):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree, blocking: bool = False) -> None:
+        """Snapshot to host now; write to disk asynchronously."""
+        self.wait()  # one outstanding write at a time
+        host = [
+            (k, np.asarray(jax.device_get(v)))
+            for k, v in _flatten_with_paths(tree)
+        ]
+
+        def write():
+            tmp = self.dir / f"step_{step}.tmp"
+            final = self.dir / f"step_{step}"
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            manifest = {"step": step, "leaves": []}
+            for key, arr in host:
+                fname = key.replace("/", "__") + ".npy"
+                np.save(tmp / fname, arr, allow_pickle=False)
+                manifest["leaves"].append(
+                    {
+                        "key": key,
+                        "file": fname,
+                        "dtype": str(arr.dtype),
+                        "shape": list(arr.shape),
+                        "crc32": zlib.crc32(arr.tobytes()),
+                    }
+                )
+            (tmp / _MANIFEST).write_text(json.dumps(manifest))
+            if final.exists():
+                shutil.rmtree(final)
+            os.rename(tmp, final)  # atomic publish
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # ------------------------------------------------------------------
+    def latest_step(self) -> int | None:
+        self.wait()
+        steps = []
+        for p in self.dir.iterdir():
+            m = _STEP_RE.match(p.name)
+            if m and (p / _MANIFEST).exists():
+                steps.append(int(m.group(1)))
+        return max(steps) if steps else None
+
+    def restore(self, step: int | None = None, template=None, shardings=None):
+        """Load a checkpoint; optionally re-shard onto a (new) mesh.
+
+        ``template``: a pytree with the same structure (e.g. abstract
+        params) used to rebuild the tree; without it a flat dict is
+        returned. ``shardings``: same-structure tree of NamedShardings —
+        this is the elastic-rescale path (checkpoint saved on mesh A,
+        restored onto mesh B).
+        """
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self.dir / f"step_{step}"
+        manifest = json.loads((d / _MANIFEST).read_text())
+        leaves = {}
+        for ent in manifest["leaves"]:
+            arr = np.load(d / ent["file"], allow_pickle=False)
+            if zlib.crc32(arr.tobytes()) != ent["crc32"]:
+                raise IOError(f"checkpoint corruption in {ent['file']}")
+            leaves[ent["key"]] = arr
+
+        if template is None:
+            return leaves, step
+
+        keys = [k for k, _ in _flatten_with_paths(template)]
+        missing = [k for k in keys if k not in leaves]
+        if missing:
+            raise KeyError(f"checkpoint missing leaves: {missing[:5]}")
+        flat = [leaves[k] for k in keys]
+        if shardings is not None:
+            shard_flat = [s for _, s in _flatten_with_paths(shardings)]
+            flat = [
+                jax.device_put(a, s) for a, s in zip(flat, shard_flat)
+            ]
+        tree = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(template), flat
+        )
+        return tree, step
+
+    # ------------------------------------------------------------------
+    def _gc(self) -> None:
+        steps = sorted(
+            int(_STEP_RE.match(p.name).group(1))
+            for p in self.dir.iterdir()
+            if _STEP_RE.match(p.name) and (p / _MANIFEST).exists()
+        )
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)

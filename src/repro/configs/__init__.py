@@ -1,0 +1,13 @@
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, TrainConfig
+from repro.configs.registry import ARCH_IDS, cells, get_config, get_shape
+
+__all__ = [
+    "SHAPES",
+    "ModelConfig",
+    "ShapeConfig",
+    "TrainConfig",
+    "ARCH_IDS",
+    "cells",
+    "get_config",
+    "get_shape",
+]

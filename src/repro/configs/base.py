@@ -1,0 +1,151 @@
+"""Model/run configuration dataclasses — the framework's single config spine."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One transformer-family architecture (see configs/<arch>.py)."""
+
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int | None = None  # defaults to d_model // n_heads
+
+    # attention
+    attention: str = "gqa"  # gqa | mla
+    window: int | None = None  # sliding-window attention (SWA) width
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    rope_mode: str = "1d"  # 1d | mrope | none
+    # MLA (deepseek)
+    q_lora_rank: int | None = None
+    kv_lora_rank: int | None = None
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int | None = None
+    first_dense_layers: int = 0  # deepseek: leading dense layers
+    moe_every: int = 1  # jamba: MoE every k-th layer
+    n_groups: int = 1  # group-limited routing (deepseek)
+    topk_groups: int = 1
+    router_scale: bool = False  # normalize top-k weights (deepseek)
+
+    # SSM (mamba2 SSD)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 256
+    attn_every: int = 0  # hybrid: attention layer every k-th (jamba 1:8)
+
+    # enc-dec (whisper)
+    is_encdec: bool = False
+    n_enc_layers: int = 0
+    enc_seq: int = 1500  # whisper post-conv frame count (default)
+
+    # vlm
+    vis_frac: float = 0.0  # fraction of the sequence that is patch embeds
+
+    # misc
+    norm_eps: float = 1e-6
+    act: str = "silu"  # silu | gelu
+    mlp_gated: bool = True
+    tie_embeddings: bool = False
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    pos_embed: str = "rope"  # rope | learned | sinusoidal
+    dtype: Any = "bfloat16"
+    sub_quadratic: bool = False  # may run long_500k
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """A tiny same-family config for CPU smoke tests."""
+        small = dict(
+            n_layers=min(self.n_layers, 2 if not self.attn_every else self.attn_every),
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads < self.n_heads else 4,
+            d_ff=256,
+            vocab_size=256,
+            head_dim=32,
+            q_lora_rank=64 if self.q_lora_rank else None,
+            kv_lora_rank=32 if self.kv_lora_rank else None,
+            qk_nope_dim=32,
+            qk_rope_dim=16,
+            v_head_dim=32,
+            n_experts=min(self.n_experts, 8),
+            n_shared_experts=min(self.n_shared_experts, 1),
+            top_k=min(self.top_k, 2),
+            moe_d_ff=64 if self.moe_d_ff else None,
+            first_dense_layers=min(self.first_dense_layers, 1),
+            n_groups=min(self.n_groups, 2),
+            topk_groups=min(self.topk_groups, 1),
+            ssm_state=min(self.ssm_state, 32),
+            ssm_head_dim=min(self.ssm_head_dim, 16) if self.ssm_head_dim else 16,
+            ssm_chunk=16,
+            n_enc_layers=min(self.n_enc_layers, 2),
+            enc_seq=64,
+            window=min(self.window, 32) if self.window else None,
+        )
+        if self.attn_every:
+            small["n_layers"] = self.attn_every  # one full hybrid period
+        small.update(overrides)
+        return dataclasses.replace(self, **small)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524_288, 1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """Optimizer / schedule / runtime knobs."""
+
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    schedule: str = "cosine"  # cosine | linear | constant
+    seed: int = 0
+    remat: str = "selective"  # none | selective | full
+    zero: int = 1  # 0: replicated opt state, 1: ZeRO-1, 3: ZeRO-3 (params too)
+    microbatches: int = 1  # grad accumulation (comm/compute overlap)
+    compress_grads: bool = False  # int8 error-feedback cross-pod reduction

@@ -1,0 +1,35 @@
+"""deepseek-v2-236b [arXiv:2405.04434; hf] — MLA kv_lora=512, 160e top-6.
+
+60L d_model=5120 128H moe_d_ff=1536 vocab=102400, 2 shared + 160 routed
+top-6, group-limited routing (8 groups / top-3), first layer dense
+(d_ff=12288).
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    n_layers=60,
+    d_model=5120,
+    n_heads=128,
+    n_kv_heads=128,
+    d_ff=12288,
+    moe_d_ff=1536,
+    vocab_size=102_400,
+    attention="mla",
+    q_lora_rank=1536,
+    kv_lora_rank=512,
+    qk_nope_dim=128,
+    qk_rope_dim=64,
+    v_head_dim=128,
+    head_dim=192,
+    n_experts=160,
+    n_shared_experts=2,
+    top_k=6,
+    first_dense_layers=1,
+    n_groups=8,
+    topk_groups=3,
+    router_scale=False,
+    rope_theta=10_000.0,
+)

@@ -1,0 +1,36 @@
+"""deepseek-v3-671b [arXiv:2412.19437; hf] — MLA + 256-expert MoE top-8.
+
+61L d_model=7168 128H (MLA kv_lora=512) moe_d_ff=2048 vocab=129280,
+1 shared + 256 routed top-8 (sigmoid scores, normalized, group-limited
+routing 8 groups/top-4), first 3 layers dense (d_ff=18432). MTP is a
+training objective, not an architecture change — not modelled here.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,
+    d_ff=18432,  # dense layers
+    moe_d_ff=2048,
+    vocab_size=129_280,
+    attention="mla",
+    q_lora_rank=1536,
+    kv_lora_rank=512,
+    qk_nope_dim=128,
+    qk_rope_dim=64,
+    v_head_dim=128,
+    head_dim=192,  # qk_nope + qk_rope
+    n_experts=256,
+    n_shared_experts=1,
+    top_k=8,
+    first_dense_layers=3,
+    n_groups=8,
+    topk_groups=4,
+    router_scale=True,
+    rope_theta=10_000.0,
+)

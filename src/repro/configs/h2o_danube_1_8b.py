@@ -1,0 +1,21 @@
+"""h2o-danube-1.8b [arXiv:2401.16818; hf] — llama+mistral mix, SWA.
+
+Sliding-window attention (mistral-style, 4096 window) makes decode
+O(window): the ring-buffer cache qualifies it for long_500k.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="h2o-danube-1.8b",
+    family="dense",
+    n_layers=24,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=6912,
+    vocab_size=32_000,
+    window=4096,
+    sub_quadratic=True,
+    rope_theta=10_000.0,
+)

@@ -1,0 +1,30 @@
+"""jamba-1.5-large-398b [arXiv:2403.19887; hf] — Mamba+attn 1:7, MoE 16e top-2.
+
+72L d_model=8192, attention every 8th layer (GQA kv=8), MoE every 2nd
+layer (16 experts top-2, d_ff=24576). Hybrid → bounded attention state
+under SP → runs long_500k.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    n_layers=72,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=24576,
+    vocab_size=65_536,
+    n_experts=16,
+    top_k=2,
+    moe_every=2,
+    attn_every=8,
+    ssm_state=128,
+    ssm_conv=4,
+    ssm_expand=2,
+    ssm_head_dim=128,
+    ssm_chunk=256,
+    rope_mode="none",  # jamba uses no positional encoding in attn layers
+    sub_quadratic=True,
+)

@@ -1,0 +1,27 @@
+"""mamba2-130m [arXiv:2405.21060] — SSD (state-space duality), attn-free.
+
+24L d_model=768, d_ff=0 (no MLP — the mixer IS the block), ssm_state=128,
+expand 2 → d_inner 1536, head_dim 64 → 24 ssd heads. O(1) decode state →
+runs long_500k.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m",
+    family="ssm",
+    n_layers=24,
+    d_model=768,
+    n_heads=24,  # ssd heads (d_inner / ssm_head_dim)
+    n_kv_heads=24,
+    d_ff=0,
+    vocab_size=50_280,
+    ssm_state=128,
+    ssm_conv=4,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_chunk=256,
+    rope_mode="none",
+    tie_embeddings=True,
+    sub_quadratic=True,
+)

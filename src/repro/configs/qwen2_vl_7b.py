@@ -1,0 +1,23 @@
+"""qwen2-vl-7b [arXiv:2409.12191; hf] — qwen2 backbone + M-RoPE.
+
+Vision frontend is a STUB per the assignment: input_specs provides
+precomputed patch embeddings for the first vis_frac of the sequence and
+(3, B, S) M-RoPE position ids (temporal/height/width).
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b",
+    family="vlm",
+    n_layers=28,
+    d_model=3584,
+    n_heads=28,
+    n_kv_heads=4,
+    d_ff=18944,
+    vocab_size=152_064,
+    qkv_bias=True,
+    rope_mode="mrope",
+    vis_frac=0.25,
+    rope_theta=1_000_000.0,
+)

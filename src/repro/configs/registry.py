@@ -1,0 +1,46 @@
+"""Architecture registry — ``--arch <id>`` resolution."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+
+ARCH_IDS = [
+    "deepseek-v3-671b",
+    "deepseek-v2-236b",
+    "qwen2-7b",
+    "yi-9b",
+    "smollm-135m",
+    "h2o-danube-1.8b",
+    "qwen2-vl-7b",
+    "mamba2-130m",
+    "whisper-large-v3",
+    "jamba-1.5-large-398b",
+]
+
+_MODULES = {a: "repro.configs." + a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(_MODULES[arch])
+    return mod.CONFIG
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def cells() -> list[tuple[str, str]]:
+    """All 40 (arch × shape) cells, with inapplicable ones marked skip."""
+    out = []
+    for a in ARCH_IDS:
+        cfg = get_config(a)
+        for s in SHAPES:
+            skip = None
+            if s == "long_500k" and not cfg.sub_quadratic:
+                skip = "full-attention arch: O(S²) at 500k — skipped per assignment"
+            out.append((a, s, skip))
+    return out

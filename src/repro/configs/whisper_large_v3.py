@@ -1,0 +1,28 @@
+"""whisper-large-v3 [arXiv:2212.04356] — enc-dec, conv frontend STUB.
+
+32 enc + 32 dec layers, d_model=1280, 20 heads (MHA), gelu, layernorm.
+``prefill_32k`` puts seq_len on the ENCODER frame axis (audio is the
+long axis); decoder prefix 448. ``decode_32k`` decodes with a 32k
+decoder self-KV + cross-attention to a 1500-frame encoding.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3",
+    family="encdec",
+    n_layers=32,
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=5120,
+    vocab_size=51_866,
+    is_encdec=True,
+    n_enc_layers=32,
+    enc_seq=1500,
+    act="gelu",
+    mlp_gated=False,
+    norm="layernorm",
+    rope_mode="none",
+    pos_embed="learned",
+)

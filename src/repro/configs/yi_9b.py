@@ -1,0 +1,15 @@
+"""yi-9b [arXiv:2403.04652; hf] — llama-arch dense GQA (kv=4)."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-9b",
+    family="dense",
+    n_layers=48,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=4,
+    d_ff=11008,
+    vocab_size=64_000,
+    rope_theta=10_000.0,
+)

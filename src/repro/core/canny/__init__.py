@@ -1,0 +1,46 @@
+"""Canny Edge Detector — the paper's algorithm, built on parallel patterns.
+
+Public API:
+  CannyParams           — thresholds / σ / magnitude norm
+  canny                 — full pipeline (local or sharded), pure JAX
+  canny_reference       — numpy oracle defining bit-exact semantics
+  stages                — individual stage functions (gaussian/sobel/nms/hysteresis)
+"""
+
+from repro.core.canny.params import CannyParams
+from repro.core.canny.reference import (
+    canny_reference,
+    gaussian_reference,
+    sobel_reference,
+    nms_reference,
+    hysteresis_reference,
+    gaussian_kernel1d,
+)
+from repro.core.canny.pipeline import canny, canny_local_stages, make_canny
+from repro.core.canny.gaussian import gaussian_stage
+from repro.core.canny.sobel import sobel_stage
+from repro.core.canny.nms import nms_stage
+from repro.core.canny.hysteresis import (
+    double_threshold,
+    hysteresis_stage,
+    hysteresis_fixpoint,
+)
+
+__all__ = [
+    "CannyParams",
+    "canny",
+    "make_canny",
+    "canny_local_stages",
+    "canny_reference",
+    "gaussian_reference",
+    "sobel_reference",
+    "nms_reference",
+    "hysteresis_reference",
+    "gaussian_kernel1d",
+    "gaussian_stage",
+    "sobel_stage",
+    "nms_stage",
+    "double_threshold",
+    "hysteresis_stage",
+    "hysteresis_fixpoint",
+]

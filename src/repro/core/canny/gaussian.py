@@ -1,0 +1,34 @@
+"""Gaussian stage (paper step 1) — separable blur as a stencil pattern.
+
+Matches ``reference.gaussian_reference``: horizontal pass then vertical
+pass, taps accumulated in ascending order, edge-replicate borders, f32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.canny.params import CannyParams
+from repro.core.canny.reference import gaussian_kernel1d
+from repro.core.patterns.dist import StencilCtx
+
+
+def gaussian_stage(x: jax.Array, ctx: StencilCtx, params: CannyParams) -> jax.Array:
+    """x: (..., h, w) f32 local block → blurred, same shape."""
+    x = x.astype(jnp.float32)
+    r = params.radius
+    k = jnp.asarray(gaussian_kernel1d(params.sigma, r))
+    w = x.shape[-1]
+    h = x.shape[-2]
+
+    xp = ctx.pad_cols(x, r, pad_mode="edge")
+    tmp = jnp.zeros_like(x)
+    for i in range(2 * r + 1):  # horizontal pass, oracle accumulation order
+        tmp = tmp + k[i] * jax.lax.slice_in_dim(xp, i, i + w, axis=-1)
+
+    tp = ctx.pad_rows(tmp, r, pad_mode="edge")
+    out = jnp.zeros_like(x)
+    for i in range(2 * r + 1):  # vertical pass
+        out = out + k[i] * jax.lax.slice_in_dim(tp, i, i + h, axis=-2)
+    return out

@@ -1,0 +1,32 @@
+"""Canny parameters — one dataclass shared by oracle, jnp, and Pallas paths."""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class CannyParams:
+    """Parameters of the 4-stage Canny detector.
+
+    sigma/radius define the Gaussian stage (radius 2 → the classic 5×5).
+    low/high are absolute magnitude thresholds (low < high). ``l2_norm``
+    picks sqrt(gx²+gy²) (True) vs |gx|+|gy| (False) for gradient
+    magnitude. Semantics (binning, tie-breaking, border handling) are
+    defined by ``reference.canny_reference`` — every implementation must
+    match it bit-for-bit on f32.
+    """
+
+    sigma: float = 1.4
+    radius: int = 2
+    low: float = 0.1
+    high: float = 0.2
+    l2_norm: bool = True
+
+    def __post_init__(self):
+        if self.radius < 1:
+            raise ValueError("radius must be >= 1")
+        if not (0.0 <= self.low < self.high):
+            raise ValueError("need 0 <= low < high")
+        if self.sigma <= 0:
+            raise ValueError("sigma must be positive")

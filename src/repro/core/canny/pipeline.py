@@ -1,0 +1,128 @@
+"""The composed Canny pipeline — GCP shell layer output.
+
+``make_canny`` builds a jitted detector for a given ``CannyParams`` +
+``Dist`` + backend:
+
+  backend="jnp"    — pure-jnp stages (XLA fuses them); the portable path
+  backend="pallas" — per-stage Pallas TPU kernels (kernels/ must register)
+  backend="fused"  — single fused Pallas kernel for gauss+sobel+nms
+                     (beyond-paper: one HBM round-trip instead of three)
+
+Sharded mode wraps the *whole* pipeline in one ``shard_map`` — images are
+batch-sharded over ``dist.batch_axes`` and row-sharded over
+``dist.space_axis``; halos cross shards via ppermute inside the stages.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.canny.params import CannyParams
+from repro.core.canny.gaussian import gaussian_stage
+from repro.core.canny.sobel import sobel_stage
+from repro.core.canny.nms import nms_stage
+from repro.core.canny.hysteresis import hysteresis_stage
+from repro.core.patterns.dist import Dist, StencilCtx
+
+# kernels/ registers callables here at import time (avoids a hard dep)
+_BACKENDS: dict[str, Callable] = {}
+
+
+def register_backend(name: str, fn: Callable) -> None:
+    _BACKENDS[name] = fn
+
+
+def canny_local_stages(
+    img: jax.Array, params: CannyParams, ctx: StencilCtx, local_sweeps: int = 1
+) -> jax.Array:
+    """Run the 4 stages on a (possibly shard-local) block."""
+    blurred = gaussian_stage(img, ctx, params)
+    mag, dirs = sobel_stage(blurred, ctx, params)
+    nms = nms_stage(mag, dirs, ctx)
+    return hysteresis_stage(nms, params, ctx, local_sweeps=local_sweeps)
+
+
+def _resolve_stage_fn(backend: str) -> Callable:
+    if backend == "jnp":
+        return canny_local_stages
+    if backend in _BACKENDS:
+        return _BACKENDS[backend]
+    # lazily import kernels so the core has no hard Pallas dependency
+    try:
+        import repro.kernels.canny_backends  # noqa: F401  (registers)
+    except ImportError as exc:  # pragma: no cover
+        raise ValueError(f"backend {backend!r} unavailable: {exc}") from exc
+    if backend not in _BACKENDS:
+        raise ValueError(f"unknown canny backend: {backend!r}")
+    return _BACKENDS[backend]
+
+
+def make_canny(
+    params: CannyParams = CannyParams(),
+    dist: Dist = Dist(),
+    backend: str = "jnp",
+    local_sweeps: int = 2,
+) -> Callable[[jax.Array], jax.Array]:
+    """Build a jitted canny detector for images shaped (h, w) or (b, h, w)."""
+    stage_fn = _resolve_stage_fn(backend)
+
+    if dist.is_local:
+        ctx = StencilCtx(None, "edge")
+
+        @jax.jit
+        def run_local(img):
+            return stage_fn(img.astype(jnp.float32), params, ctx)
+
+        return run_local
+
+    sync = tuple(dist.batch_axes) + ((dist.space_axis,) if dist.space_axis else ())
+    ctx = StencilCtx(dist.space_axis, "edge", sync_axes=sync)
+    mesh = dist.mesh
+    cache: dict[int, Callable] = {}
+
+    def build(ndim: int) -> Callable:
+        if ndim == 2:
+            spec = P(dist.space_axis, None)
+        elif ndim == 3:
+            batch = dist.batch_axes if dist.batch_axes else None
+            spec = P(batch, dist.space_axis, None)
+        else:
+            raise ValueError(f"expected (h,w) or (b,h,w); got ndim={ndim}")
+
+        local = jax.shard_map(
+            lambda x: stage_fn(x, params, ctx, local_sweeps=local_sweeps)
+            if stage_fn is canny_local_stages
+            else stage_fn(x, params, ctx),
+            mesh=mesh,
+            in_specs=spec,
+            out_specs=spec,
+            check_vma=False,
+        )
+        sharding = NamedSharding(mesh, spec)
+        return jax.jit(
+            lambda x: local(x.astype(jnp.float32)),
+            in_shardings=sharding,
+            out_shardings=sharding,
+        )
+
+    def run(img):
+        fn = cache.get(img.ndim)
+        if fn is None:
+            fn = cache[img.ndim] = build(img.ndim)
+        return fn(img)
+
+    return run
+
+
+def canny(
+    img: jax.Array,
+    params: CannyParams = CannyParams(),
+    dist: Dist = Dist(),
+    backend: str = "jnp",
+) -> jax.Array:
+    """One-shot convenience wrapper around ``make_canny``."""
+    return make_canny(params, dist, backend)(img)

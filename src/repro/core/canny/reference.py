@@ -1,0 +1,138 @@
+"""Pure-numpy Canny oracle — the semantic ground truth.
+
+Every other implementation (jnp stages, sharded stages, Pallas kernels)
+must match these functions bit-for-bit on float32 inputs. Border handling:
+edge-replicate for Gaussian and Sobel; out-of-bounds neighbours count as 0
+for NMS and hysteresis. NMS keeps a pixel iff its magnitude is >= both
+neighbours along the quantized gradient direction. Hysteresis is the
+serial 2-pass BFS the paper treats as the Amdahl bottleneck (claim C3) —
+kept serial here *on purpose* as the paper-faithful baseline.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+
+import numpy as np
+
+from repro.core.canny.params import CannyParams
+
+# tan(22.5°), tan(67.5°) — direction bin boundaries
+_T1 = 0.41421356237309503
+_T2 = 2.414213562373095
+
+
+def gaussian_kernel1d(sigma: float, radius: int) -> np.ndarray:
+    x = np.arange(-radius, radius + 1, dtype=np.float32)
+    k = np.exp(-(x * x) / np.float32(2.0 * sigma * sigma))
+    return (k / k.sum()).astype(np.float32)
+
+
+def _pad_edge(img: np.ndarray, r: int) -> np.ndarray:
+    return np.pad(img, ((r, r), (r, r)), mode="edge")
+
+
+def gaussian_reference(img: np.ndarray, params: CannyParams) -> np.ndarray:
+    """Separable Gaussian blur, edge-replicate borders, f32 accumulation."""
+    img = img.astype(np.float32)
+    r = params.radius
+    k = gaussian_kernel1d(params.sigma, r)
+    h, w = img.shape
+    padded = np.pad(img, ((0, 0), (r, r)), mode="edge")
+    tmp = np.zeros_like(img)
+    for i in range(2 * r + 1):  # horizontal pass
+        tmp += k[i] * padded[:, i : i + w]
+    padded = np.pad(tmp, ((r, r), (0, 0)), mode="edge")
+    out = np.zeros_like(img)
+    for i in range(2 * r + 1):  # vertical pass
+        out += k[i] * padded[i : i + h, :]
+    return out.astype(np.float32)
+
+
+_SOBEL_X = np.array([[-1, 0, 1], [-2, 0, 2], [-1, 0, 1]], dtype=np.float32)
+_SOBEL_Y = np.array([[-1, -2, -1], [0, 0, 0], [1, 2, 1]], dtype=np.float32)
+
+
+def _correlate3(img: np.ndarray, k: np.ndarray) -> np.ndarray:
+    h, w = img.shape
+    p = _pad_edge(img, 1)
+    out = np.zeros_like(img, dtype=np.float32)
+    for dy in range(3):
+        for dx in range(3):
+            out += k[dy, dx] * p[dy : dy + h, dx : dx + w]
+    return out
+
+
+def sobel_reference(img: np.ndarray, params: CannyParams):
+    """Sobel gradients → (magnitude f32, direction-bin uint8).
+
+    Bins: 0 → E/W neighbours, 1 → SE/NW diag (gx·gy > 0), 2 → N/S,
+    3 → SW/NE diag (gx·gy < 0).
+    """
+    img = img.astype(np.float32)
+    gx = _correlate3(img, _SOBEL_X)
+    gy = _correlate3(img, _SOBEL_Y)
+    if params.l2_norm:
+        mag = np.sqrt(gx * gx + gy * gy).astype(np.float32)
+    else:
+        mag = (np.abs(gx) + np.abs(gy)).astype(np.float32)
+    ax, ay = np.abs(gx), np.abs(gy)
+    horiz = ay <= _T1 * ax
+    vert = ay >= _T2 * ax
+    same_sign = (gx * gy) > 0
+    dirs = np.where(horiz, 0, np.where(vert, 2, np.where(same_sign, 1, 3)))
+    return mag, dirs.astype(np.uint8)
+
+
+# neighbour offsets per direction bin: (dy, dx) of the "forward" neighbour
+_NBR = {0: (0, 1), 1: (1, 1), 2: (1, 0), 3: (1, -1)}
+
+
+def nms_reference(mag: np.ndarray, dirs: np.ndarray) -> np.ndarray:
+    """Keep pixels that are >= both neighbours along their gradient bin.
+
+    Out-of-bounds neighbours count as 0.
+    """
+    h, w = mag.shape
+    out = np.zeros_like(mag)
+    for y in range(h):
+        for x in range(w):
+            dy, dx = _NBR[int(dirs[y, x])]
+            m = mag[y, x]
+            n1 = mag[y + dy, x + dx] if 0 <= y + dy < h and 0 <= x + dx < w else 0.0
+            n2 = mag[y - dy, x - dx] if 0 <= y - dy < h and 0 <= x - dx < w else 0.0
+            if m >= n1 and m >= n2:
+                out[y, x] = m
+    return out
+
+
+def hysteresis_reference(nms_mag: np.ndarray, params: CannyParams) -> np.ndarray:
+    """Serial BFS hysteresis (paper-faithful Amdahl-bottleneck stage).
+
+    strong = mag >= high; weak = mag >= low. Final edge set: strong pixels
+    plus weak pixels 8-connected (transitively) to a strong pixel.
+    """
+    strong = nms_mag >= params.high
+    weak = nms_mag >= params.low
+    h, w = nms_mag.shape
+    visited = strong.copy()
+    q = deque(zip(*np.nonzero(strong)))
+    while q:
+        y, x = q.popleft()
+        for dy in (-1, 0, 1):
+            for dx in (-1, 0, 1):
+                if dy == 0 and dx == 0:
+                    continue
+                ny, nx = y + dy, x + dx
+                if 0 <= ny < h and 0 <= nx < w and weak[ny, nx] and not visited[ny, nx]:
+                    visited[ny, nx] = True
+                    q.append((ny, nx))
+    return visited.astype(np.uint8)
+
+
+def canny_reference(img: np.ndarray, params: CannyParams = CannyParams()) -> np.ndarray:
+    """Full 4-stage Canny, serial numpy — the golden output (uint8 0/1)."""
+    blurred = gaussian_reference(img, params)
+    mag, dirs = sobel_reference(blurred, params)
+    nms = nms_reference(mag, dirs)
+    return hysteresis_reference(nms, params)

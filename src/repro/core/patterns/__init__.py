@@ -1,0 +1,51 @@
+"""Structured parallel patterns — the GCP "kernel layer" on TPU.
+
+The paper expresses the Canny pipeline with Cilk Plus structured patterns
+(map / stencil / pipeline / reduce) and lets the runtime schedule them.
+Here the same vocabulary is provided as composable JAX combinators that
+lower to SPMD programs: maps vectorize onto the VPU, stencils exchange
+halos across mesh shards with ``lax.ppermute``, reductions become
+``lax.psum`` trees, scans become (blocked) associative scans, and
+pipelines become double-buffered stage schedules.
+
+Every pattern works in two modes:
+  * local  — no mesh; pure jnp (used by unit tests and single-host runs)
+  * sharded — inside ``jax.shard_map`` over a named mesh axis
+The ``Dist`` spec carries the mesh/axis naming; ``StencilCtx`` abstracts
+"get me my halo" so stage code is identical in both modes.
+"""
+
+from repro.core.patterns.dist import Dist, StencilCtx
+from repro.core.patterns.map import pattern_map, grid_map
+from repro.core.patterns.stencil import (
+    halo_exchange,
+    pad_rows,
+    stencil2d,
+)
+from repro.core.patterns.reduce import pattern_reduce, tree_allreduce
+from repro.core.patterns.scan import blocked_assoc_scan, pattern_scan
+from repro.core.patterns.pipeline import PatternPipeline, pipeline_stages
+from repro.core.patterns.partition import (
+    even_tiles,
+    tile_counts,
+    assert_balanced,
+)
+
+__all__ = [
+    "Dist",
+    "StencilCtx",
+    "pattern_map",
+    "grid_map",
+    "halo_exchange",
+    "pad_rows",
+    "stencil2d",
+    "pattern_reduce",
+    "tree_allreduce",
+    "blocked_assoc_scan",
+    "pattern_scan",
+    "PatternPipeline",
+    "pipeline_stages",
+    "even_tiles",
+    "tile_counts",
+    "assert_balanced",
+]

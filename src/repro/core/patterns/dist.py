@@ -1,0 +1,156 @@
+"""Distribution spec + stencil context shared by all patterns.
+
+``Dist`` names the mesh axes a pattern may use; ``StencilCtx`` gives stage
+code a uniform "extend my rows by a halo" primitive that is a plain
+``jnp.pad`` locally and a ``lax.ppermute`` halo exchange when the row axis
+is sharded. Stage code written against ``StencilCtx`` runs unchanged in
+both worlds — this is the property the paper attributes to structured
+patterns ("parallelism on any underlying parallel architecture").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class Dist:
+    """Where a pattern's data lives.
+
+    Attributes:
+      mesh: the device mesh (None → local mode).
+      batch_axes: mesh axes the leading batch dim is sharded over.
+      space_axis: mesh axis the spatial row axis is sharded over (stencil
+        halos cross this axis). None → rows unsharded.
+    """
+
+    mesh: Mesh | None = None
+    batch_axes: tuple[str, ...] = ()
+    space_axis: str | None = None
+
+    @property
+    def is_local(self) -> bool:
+        return self.mesh is None
+
+    def space_size(self) -> int:
+        if self.mesh is None or self.space_axis is None:
+            return 1
+        return self.mesh.shape[self.space_axis]
+
+
+LOCAL = Dist()
+
+
+class StencilCtx:
+    """Halo provider for stencil stages.
+
+    ``axis_name=None`` → local mode: halos come from ``jnp.pad``.
+    Otherwise the context is being traced inside ``shard_map`` and halos
+    come from neighbour shards via ``lax.ppermute`` (boundary shards are
+    patched with the requested pad mode so results match local mode
+    bit-exactly).
+    """
+
+    def __init__(
+        self,
+        axis_name: str | None = None,
+        pad_mode: str = "edge",
+        sync_axes: tuple[str, ...] | None = None,
+    ):
+        if pad_mode not in ("edge", "zero"):
+            raise ValueError(f"unsupported pad_mode: {pad_mode}")
+        self.axis_name = axis_name
+        self.pad_mode = pad_mode
+        # Axes that convergence decisions must be agreed over. Data-dependent
+        # trip counts (hysteresis) MUST be identical on every device of the
+        # shard_map, or collectives inside the loop body deadlock — so the
+        # consensus spans every mesh axis in use, not just the stencil axis.
+        if sync_axes is None:
+            sync_axes = (axis_name,) if axis_name is not None else ()
+        self.sync_axes = tuple(a for a in sync_axes if a is not None)
+
+    # -- row halo ----------------------------------------------------------
+    def pad_rows(
+        self, x: jax.Array, halo: int, axis: int = -2, pad_mode: str | None = None
+    ) -> jax.Array:
+        """Return ``x`` extended by ``halo`` rows on both sides of ``axis``."""
+        if halo == 0:
+            return x
+        mode = pad_mode or self.pad_mode
+        if self.axis_name is None:
+            return _pad_axis(x, halo, axis, mode)
+        return _halo_exchange(x, halo, axis, self.axis_name, mode)
+
+    # -- width halo (never sharded) ----------------------------------------
+    def pad_cols(
+        self, x: jax.Array, halo: int, axis: int = -1, pad_mode: str | None = None
+    ) -> jax.Array:
+        if halo == 0:
+            return x
+        return _pad_axis(x, halo, axis, pad_mode or self.pad_mode)
+
+    # -- global consensus ---------------------------------------------------
+    def any_global(self, flag: jax.Array) -> jax.Array:
+        """OR-reduce a boolean across ALL sync axes (identity locally)."""
+        if not self.sync_axes:
+            return flag
+        return lax.psum(flag.astype(jnp.int32), self.sync_axes) > 0
+
+    def sum_global(self, value: jax.Array) -> jax.Array:
+        if not self.sync_axes:
+            return value
+        return lax.psum(value, self.sync_axes)
+
+
+def _pad_axis(x: jax.Array, halo: int, axis: int, pad_mode: str) -> jax.Array:
+    pads = [(0, 0)] * x.ndim
+    pads[axis % x.ndim] = (halo, halo)
+    mode = "edge" if pad_mode == "edge" else "constant"
+    return jnp.pad(x, pads, mode=mode)
+
+
+def _halo_exchange(
+    x: jax.Array, halo: int, axis: int, axis_name: str, pad_mode: str
+) -> jax.Array:
+    """Exchange ``halo`` rows with mesh neighbours along ``axis_name``.
+
+    Shard i receives the last ``halo`` rows of shard i-1 (its top halo)
+    and the first ``halo`` rows of shard i+1 (its bottom halo). Boundary
+    shards synthesize the missing halo from the pad mode, making the
+    sharded stencil bit-identical to the unsharded one.
+    """
+    axis = axis % x.ndim
+    n = lax.axis_size(axis_name)
+    if n == 1:
+        return _pad_axis(x, halo, axis, pad_mode)
+
+    size = x.shape[axis]
+    if size < halo:
+        raise ValueError(
+            f"shard extent {size} along axis {axis} smaller than halo {halo}; "
+            "use fewer shards or a smaller stencil radius"
+        )
+    top = lax.slice_in_dim(x, 0, halo, axis=axis)
+    bot = lax.slice_in_dim(x, size - halo, size, axis=axis)
+    # ppermute fills non-receivers with zeros.
+    halo_above = lax.ppermute(bot, axis_name, perm=[(i, i + 1) for i in range(n - 1)])
+    halo_below = lax.ppermute(top, axis_name, perm=[(i, i - 1) for i in range(1, n)])
+
+    if pad_mode == "edge":
+        idx = lax.axis_index(axis_name)
+        first = lax.slice_in_dim(x, 0, 1, axis=axis)
+        last = lax.slice_in_dim(x, size - 1, size, axis=axis)
+        reps = [1] * x.ndim
+        reps[axis] = halo
+        edge_top = jnp.tile(first, reps)
+        edge_bot = jnp.tile(last, reps)
+        halo_above = jnp.where(idx == 0, edge_top, halo_above)
+        halo_below = jnp.where(idx == n - 1, edge_bot, halo_below)
+
+    return jnp.concatenate([halo_above, x, halo_below], axis=axis)

@@ -1,0 +1,50 @@
+"""Geometric partitioning — static even tiling.
+
+The paper's fig. 11/12 shows work-stealing producing even core
+utilization. On an SPMD machine the balance must be (and can be) exact by
+construction: we partition the pixel/batch domain into equal tiles and
+assert the invariant instead of observing it. ``benchmarks/load_balance``
+reports these counts as the analogue of the per-core-usage figures.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def even_tiles(extent: int, parts: int) -> list[tuple[int, int]]:
+    """Split [0, extent) into ``parts`` contiguous near-equal intervals.
+
+    Sizes differ by at most 1 (the optimal static balance).
+    """
+    if parts <= 0:
+        raise ValueError("parts must be positive")
+    base, rem = divmod(extent, parts)
+    tiles = []
+    start = 0
+    for i in range(parts):
+        size = base + (1 if i < rem else 0)
+        tiles.append((start, start + size))
+        start += size
+    assert start == extent
+    return tiles
+
+
+def tile_counts(shape: tuple[int, int], grid: tuple[int, int]) -> np.ndarray:
+    """Pixels per tile for a 2-D even tiling — the load-balance map."""
+    rows = even_tiles(shape[0], grid[0])
+    cols = even_tiles(shape[1], grid[1])
+    return np.array(
+        [[(r1 - r0) * (c1 - c0) for (c0, c1) in cols] for (r0, r1) in rows],
+        dtype=np.int64,
+    )
+
+
+def assert_balanced(counts: np.ndarray, tolerance_ratio: float = 0.02) -> None:
+    """Raise if any shard's work deviates more than ``tolerance_ratio``."""
+    mx, mn = counts.max(), counts.min()
+    if mx == 0:
+        return
+    skew = (mx - mn) / mx
+    if skew > tolerance_ratio:
+        raise AssertionError(f"unbalanced tiling: min={mn} max={mx} skew={skew:.3f}")

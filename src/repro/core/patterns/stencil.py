@@ -1,0 +1,70 @@
+"""Stencil pattern — neighbourhood computation with halo exchange.
+
+The Canny stages (Gaussian, Sobel, NMS, hysteresis dilation) are all
+stencils. On a multicore CPU the halo is implicit (cache lines); on TPU it
+must be staged explicitly. Two levels:
+
+  * across shards — ``lax.ppermute`` halo exchange (this module / StencilCtx)
+  * within a shard — Pallas kernels stage HBM→VMEM row strips with
+    neighbour-block BlockSpecs (see ``repro.kernels``)
+
+``stencil2d`` lifts a "padded block → block" function into a full array
+op, local or sharded.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.patterns.dist import Dist, StencilCtx, _halo_exchange, _pad_axis
+
+
+def pad_rows(x: jax.Array, halo: int, axis: int = -2, pad_mode: str = "edge") -> jax.Array:
+    """Local row padding (the degenerate, unsharded halo)."""
+    return _pad_axis(x, halo, axis, pad_mode)
+
+
+def halo_exchange(
+    x: jax.Array, halo: int, axis_name: str, axis: int = -2, pad_mode: str = "edge"
+) -> jax.Array:
+    """Exchange halo rows across a named mesh axis (shard_map context)."""
+    return _halo_exchange(x, halo, axis, axis_name, pad_mode)
+
+
+def stencil2d(
+    fn: Callable[[jax.Array, StencilCtx], jax.Array],
+    dist: Dist = Dist(),
+    pad_mode: str = "edge",
+) -> Callable[[jax.Array], jax.Array]:
+    """Lift a stencil stage ``fn(x, ctx) -> y`` into a runnable op.
+
+    ``fn`` receives the *local* (sharded) array plus a ``StencilCtx`` it
+    must use for any neighbourhood access. Locally ``ctx`` pads; sharded,
+    ``ctx`` performs ppermute halo exchange. ``fn``'s output must have the
+    same row extent as its input (stencils are shape-preserving here).
+    """
+    if dist.is_local:
+        ctx = StencilCtx(None, pad_mode)
+        return jax.jit(lambda x: fn(x, ctx))
+
+    ctx = StencilCtx(dist.space_axis, pad_mode)
+    ndim_specs = P(*dist.batch_axes, dist.space_axis)
+
+    @jax.jit
+    def run(x):
+        sharding = NamedSharding(dist.mesh, ndim_specs)
+        x = jax.device_put(x, sharding)
+        shard_fn = jax.shard_map(
+            lambda xl: fn(xl, ctx),
+            mesh=dist.mesh,
+            in_specs=ndim_specs,
+            out_specs=ndim_specs,
+            check_vma=False,
+        )
+        return shard_fn(x)
+
+    return run

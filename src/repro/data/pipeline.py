@@ -1,0 +1,52 @@
+"""Sharding-aware input pipelines (tokens + generic batching).
+
+Deterministic, seekable synthetic streams: every batch is a pure function
+of (seed, step), so a restart from a checkpoint replays the exact same
+data order — a fault-tolerance requirement (no data-loader state to
+persist beyond the step counter).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import numpy as np
+
+
+def synthetic_token_stream(
+    vocab_size: int,
+    batch: int,
+    seq_len: int,
+    seed: int = 0,
+    start_step: int = 0,
+) -> Iterator[dict]:
+    """Yields {tokens, labels} batches; pure function of (seed, step)."""
+    step = start_step
+    while True:
+        rng = np.random.default_rng((seed, step))
+        toks = rng.integers(0, vocab_size, size=(batch, seq_len + 1), dtype=np.int32)
+        yield {"tokens": toks[:, :-1], "labels": toks[:, 1:], "step": step}
+        step += 1
+
+
+@dataclasses.dataclass
+class ShardedBatcher:
+    """Slices a deterministic global batch into this host's shard.
+
+    On a multi-host pod each process feeds only its addressable slice;
+    (seed, step) determinism means no coordination is needed — every host
+    computes the same global batch and takes its slice. ``num_hosts``/
+    ``host_id`` default to single-process values.
+    """
+
+    global_batch: int
+    num_hosts: int = 1
+    host_id: int = 0
+
+    def local_slice(self, global_batch_array: np.ndarray) -> np.ndarray:
+        if self.global_batch % self.num_hosts != 0:
+            raise ValueError("global batch must divide number of hosts")
+        per = self.global_batch // self.num_hosts
+        lo = self.host_id * per
+        return global_batch_array[lo : lo + per]

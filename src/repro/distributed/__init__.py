@@ -1,0 +1,31 @@
+from repro.distributed.sharding import (
+    Rules,
+    activation_rules,
+    cache_rules,
+    opt_rules,
+    param_rules,
+    tree_shardings,
+    tree_specs,
+)
+from repro.distributed.fault_tolerance import (
+    DeviceFailure,
+    ElasticPlan,
+    RestartLoop,
+    StepWatchdog,
+    plan_elastic_mesh,
+)
+
+__all__ = [
+    "Rules",
+    "activation_rules",
+    "cache_rules",
+    "opt_rules",
+    "param_rules",
+    "tree_shardings",
+    "tree_specs",
+    "DeviceFailure",
+    "ElasticPlan",
+    "RestartLoop",
+    "StepWatchdog",
+    "plan_elastic_mesh",
+]

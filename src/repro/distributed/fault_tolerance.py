@@ -1,0 +1,150 @@
+"""Fault tolerance & straggler mitigation for long-running jobs.
+
+On an SPMD pod, failures are binary (a chip loss kills the step), so the
+recovery story is: frequent *async* checkpoints + automatic restart +
+**elastic re-meshing** (restore onto however many healthy hosts remain —
+checkpoints are mesh-agnostic, see checkpoint/). What this module adds:
+
+  * ``StepWatchdog`` — per-step wall-time tracker with robust outlier
+    detection (median + k·MAD). On a synchronous pod a straggling host
+    drags every step; the watchdog's per-host report (fed by heartbeats
+    in a real deployment, by the injected clock in tests) names the
+    culprit so the controller can exclude it at the next re-mesh.
+  * ``ElasticPlan`` — given the surviving device count, recompute the
+    largest valid (data, model) mesh and the batch resharding plan.
+  * ``RestartLoop`` — crash-resume driver: restore-latest → run →
+    checkpoint every N steps → on failure, re-mesh and continue. The
+    deterministic (seed, step) data pipeline makes the replay exact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable
+
+import numpy as np
+
+
+class StepWatchdog:
+    """Flags steps (and hosts) whose time exceeds median + k·MAD."""
+
+    def __init__(self, window: int = 50, k: float = 5.0, clock=time.monotonic):
+        self.window = window
+        self.k = k
+        self.clock = clock
+        self.times: list[float] = []
+        self.host_times: dict[str, list[float]] = {}
+        self._t0: float | None = None
+
+    def step_start(self) -> None:
+        self._t0 = self.clock()
+
+    def step_end(self, host_durations: dict[str, float] | None = None) -> dict:
+        assert self._t0 is not None, "step_start() not called"
+        dt = self.clock() - self._t0
+        self._t0 = None
+        self.times.append(dt)
+        self.times = self.times[-self.window :]
+        report = {"duration": dt, "slow": False, "stragglers": []}
+        if len(self.times) >= 8:
+            med = float(np.median(self.times))
+            mad = float(np.median(np.abs(np.array(self.times) - med))) + 1e-9
+            if dt > med + self.k * mad and dt > 1.05 * med:
+                report["slow"] = True
+        if host_durations:
+            for h, t in host_durations.items():
+                self.host_times.setdefault(h, []).append(t)
+                self.host_times[h] = self.host_times[h][-self.window :]
+            med_all = float(np.median([t for ts in self.host_times.values() for t in ts]))
+            for h, ts in self.host_times.items():
+                if len(ts) >= 4 and float(np.median(ts)) > 1.5 * med_all:
+                    report["stragglers"].append(h)
+        return report
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    n_devices: int
+    mesh_shape: tuple[int, ...]
+    mesh_axes: tuple[str, ...]
+    note: str
+
+
+def plan_elastic_mesh(
+    n_devices: int, global_batch: int, prefer_model: int = 16
+) -> ElasticPlan:
+    """Largest (data, model) mesh for the surviving devices.
+
+    model axis: largest power-of-2 divisor of n_devices up to
+    ``prefer_model``; remainder becomes the data axis. The global batch
+    must stay divisible by the data axis — shrink data if needed (the
+    trainer then raises per-device batch).
+    """
+    if n_devices < 1:
+        raise ValueError("no devices")
+    model = 1
+    while model * 2 <= prefer_model and n_devices % (model * 2) == 0:
+        model *= 2
+    data = n_devices // model
+    while data > 1 and global_batch % data != 0:
+        data //= 2
+    used = data * model
+    note = f"using {used}/{n_devices} devices (data={data}, model={model})"
+    return ElasticPlan(used, (data, model), ("data", "model"), note)
+
+
+class RestartLoop:
+    """Crash-resume training driver (single-process simulation of the
+    pod controller). ``run_step(state, step) -> state`` may raise
+    ``DeviceFailure``; the loop restores the last checkpoint and goes on
+    — with an elastic re-mesh callback when capacity changed."""
+
+    def __init__(
+        self,
+        checkpointer,
+        run_step: Callable,
+        save_every: int = 10,
+        max_restarts: int = 10,
+    ):
+        self.ckpt = checkpointer
+        self.run_step = run_step
+        self.save_every = save_every
+        self.max_restarts = max_restarts
+        self.restarts = 0
+
+    def run(self, state, total_steps: int, restore_template=None):
+        start = 0
+        latest = self.ckpt.latest_step()
+        if latest is not None:
+            state, start = self.ckpt.restore(
+                latest, template=restore_template or state
+            )
+            start += 1
+        step = start
+        while step < total_steps:
+            try:
+                state = self.run_step(state, step)
+            except DeviceFailure:
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise
+                latest = self.ckpt.latest_step()
+                if latest is None:
+                    step = 0
+                    continue
+                state, saved = self.ckpt.restore(
+                    latest, template=restore_template or state
+                )
+                step = saved + 1
+                continue
+            if step % self.save_every == 0:
+                self.ckpt.save(step, state)
+            step += 1
+        self.ckpt.save(total_steps - 1, state, blocking=True)
+        return state
+
+
+class DeviceFailure(RuntimeError):
+    """Raised by the step runner when a (simulated) chip drops out."""

@@ -1,0 +1,59 @@
+"""Register the Pallas execution backends with the core Canny pipeline.
+
+backend="pallas" — per-stage kernels (paper-faithful stage structure,
+                   each stage one HBM round-trip)
+backend="fused"  — single-pass front-end + hysteresis kernel
+                   (beyond-paper; ~5× less HBM traffic)
+
+Both are shard-local: the sharded path distributes with the jnp stages
+(halo exchange via ppermute); Pallas-inside-shard_map composition is
+tracked in DESIGN.md as TPU-hardware future work.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.canny.params import CannyParams
+from repro.core.canny.pipeline import register_backend
+from repro.core.patterns.dist import StencilCtx
+from repro.kernels.gaussian.ops import gaussian_blur
+from repro.kernels.sobel.ops import sobel
+from repro.kernels.nms.ops import nms
+from repro.kernels.hysteresis.ops import hysteresis_from_masks
+from repro.kernels.fused_canny.ops import fused_frontend
+
+
+def _require_local(ctx: StencilCtx, name: str) -> None:
+    if ctx.axis_name is not None:
+        raise NotImplementedError(
+            f"canny backend {name!r} is shard-local; use backend='jnp' for "
+            "row-sharded execution (see DESIGN.md §future-work)"
+        )
+
+
+def _staged(img: jax.Array, params: CannyParams, ctx: StencilCtx, **_):
+    _require_local(ctx, "pallas")
+    blur = gaussian_blur(img, sigma=params.sigma, radius=params.radius)
+    mag, dirs = sobel(blur, l2_norm=params.l2_norm)
+    s = nms(mag, dirs)
+    return hysteresis_from_masks(s >= params.high, s >= params.low)
+
+
+def _fused(img: jax.Array, params: CannyParams, ctx: StencilCtx, **_):
+    _require_local(ctx, "fused")
+    code = fused_frontend(
+        img,
+        sigma=params.sigma,
+        radius=params.radius,
+        low=params.low,
+        high=params.high,
+        l2_norm=params.l2_norm,
+        emit="code",
+    )
+    return hysteresis_from_masks(code >= 2, code >= 1)
+
+
+register_backend("pallas", _staged)
+register_backend("fused", _fused)

@@ -1,0 +1,127 @@
+"""Shared Pallas plumbing for the row-strip stencil kernels.
+
+TPU adaptation of the paper's stencils: each kernel instance owns a
+(BH, W) row strip staged HBM→VMEM by ``pallas_call``. Halos are obtained
+with the **neighbour-strip trick**: the same input is bound three times
+with block index maps ``i−1, i, i+1`` (clamped at the grid ends), so the
+kernel sees its strip plus both neighbours without dynamic DMA. Boundary
+strips patch their halo rows in-register (edge-replicate or zero) to
+match the oracle's border semantics exactly.
+
+Strips are (8,128)-aligned for the VPU; BH defaults to 128 rows and
+shrinks for small images. ops.py wrappers pad the row count up to a
+multiple of BH with edge-replicated rows — provably output-invariant for
+every Canny stage (clone rows neither change gradients in the crop region
+nor add connectivity; see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def on_tpu() -> bool:
+    return jax.devices()[0].platform == "tpu"
+
+
+def default_interpret() -> bool:
+    """Pallas TPU kernels execute in interpret mode off-TPU (CPU CI)."""
+    return not on_tpu()
+
+
+def pick_block_rows(h: int, target: int = 128, min_rows: int = 1) -> int:
+    """Strip height: ``target`` rows, shrunk for small images, never below
+    ``min_rows`` (the stage halo — a strip must be able to feed its
+    neighbour's halo). Non-divisible heights are edge-padded by ops.py.
+    """
+    return max(min(h, target), min_rows)
+
+
+def strip_specs(n_strips: int, bh: int, w: int):
+    """(prev, cur, next) BlockSpecs for the neighbour-strip halo trick."""
+    prev = pl.BlockSpec((bh, w), lambda i: (jnp.maximum(i - 1, 0), 0))
+    cur = pl.BlockSpec((bh, w), lambda i: (i, 0))
+    nxt = pl.BlockSpec((bh, w), lambda i: (jnp.minimum(i + 1, n_strips - 1), 0))
+    return prev, cur, nxt
+
+
+def out_strip_spec(bh: int, w: int):
+    return pl.BlockSpec((bh, w), lambda i: (i, 0))
+
+
+def assemble_rows(prev, cur, nxt, halo: int, mode: str):
+    """Build the halo-extended strip (BH+2·halo, W) inside the kernel.
+
+    ``prev``/``nxt`` are the clamped neighbour strips; at the grid ends
+    they alias ``cur``, so their contribution is replaced by the border
+    rule (edge-replicate or zeros).
+    """
+    i = pl.program_id(0)
+    n = pl.num_programs(0)
+    top = prev[-halo:, :]
+    bot = nxt[:halo, :]
+    if mode == "edge":
+        top_fix = jnp.broadcast_to(cur[0:1, :], top.shape)
+        bot_fix = jnp.broadcast_to(cur[-1:, :], bot.shape)
+    elif mode == "zero":
+        top_fix = jnp.zeros_like(top)
+        bot_fix = jnp.zeros_like(bot)
+    else:
+        raise ValueError(mode)
+    top = jnp.where(i == 0, top_fix, top)
+    bot = jnp.where(i == n - 1, bot_fix, bot)
+    return jnp.concatenate([top, cur, bot], axis=0)
+
+
+def pad_cols(x, halo: int, mode: str):
+    """In-register horizontal halo (width is never sharded across strips)."""
+    if halo == 0:
+        return x
+    if mode == "edge":
+        left = jnp.broadcast_to(x[:, 0:1], (x.shape[0], halo))
+        right = jnp.broadcast_to(x[:, -1:], (x.shape[0], halo))
+    elif mode == "zero":
+        left = jnp.zeros((x.shape[0], halo), x.dtype)
+        right = left
+    else:
+        raise ValueError(mode)
+    return jnp.concatenate([left, x, right], axis=1)
+
+
+def pad_rows_to_multiple(img, bh: int, mode: str = "edge"):
+    """Pad rows so H divides BH; returns (padded, original_h).
+
+    mode="edge" (clone rows) preserves gaussian/sobel border semantics;
+    mode="zero" preserves NMS/hysteresis zero-neighbour semantics (clone
+    rows would inject non-zero diagonal neighbours at the true border).
+    """
+    h = img.shape[-2]
+    pad = (-h) % bh
+    if pad == 0:
+        return img, h
+    pads = [(0, 0)] * (img.ndim - 2) + [(0, pad), (0, 0)]
+    if mode == "edge":
+        return jnp.pad(img, pads, mode="edge"), h
+    return jnp.pad(img, pads, mode="constant"), h
+
+
+def crop_rows(x, h: int):
+    return jax.lax.slice_in_dim(x, 0, h, axis=-2)
+
+
+def batchify(fn):
+    """Lift an (H, W) kernel wrapper over an optional leading batch dim."""
+
+    @functools.wraps(fn)
+    def run(x, *args, **kwargs):
+        if x.ndim == 2:
+            return fn(x, *args, **kwargs)
+        if x.ndim == 3:
+            return jax.vmap(lambda xi: fn(xi, *args, **kwargs))(x)
+        raise ValueError(f"expected (h,w) or (b,h,w), got {x.shape}")
+
+    return run

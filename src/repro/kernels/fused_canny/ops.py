@@ -1,0 +1,66 @@
+"""Jit'd wrappers: fused front-end and the full Pallas Canny detector."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.fused_canny.fused_canny import fused_canny_strips
+from repro.kernels.hysteresis.ops import hysteresis_from_masks
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "sigma", "radius", "low", "high", "l2_norm", "emit", "block_rows", "interpret",
+    ),
+)
+@common.batchify
+def fused_frontend(
+    img: jax.Array,
+    sigma: float = 1.4,
+    radius: int = 2,
+    low: float = 0.1,
+    high: float = 0.2,
+    l2_norm: bool = True,
+    emit: str = "code",
+    block_rows: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Gauss+Sobel+NMS(+threshold) in one kernel pass."""
+    img = img.astype(jnp.float32)
+    h2 = radius + 2
+    bh = block_rows or common.pick_block_rows(img.shape[-2], min_rows=h2)
+    padded, h = common.pad_rows_to_multiple(img, bh)
+    out = fused_canny_strips(
+        padded, sigma, radius, low, high, l2_norm, emit, bh, interpret, h_true=h
+    )
+    return common.crop_rows(out, h)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "sigma", "radius", "low", "high", "l2_norm", "block_rows", "interpret",
+    ),
+)
+def fused_canny(
+    img: jax.Array,
+    sigma: float = 1.4,
+    radius: int = 2,
+    low: float = 0.1,
+    high: float = 0.2,
+    l2_norm: bool = True,
+    block_rows: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Full Canny: fused front-end + in-VMEM-fixpoint hysteresis. uint8 edges."""
+    code = fused_frontend(
+        img, sigma, radius, low, high, l2_norm, "code", block_rows, interpret
+    )
+    strong = code >= 2
+    weak = code >= 1
+    return hysteresis_from_masks(strong, weak, block_rows, interpret)

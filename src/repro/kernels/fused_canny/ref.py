@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the fused kernel — the unfused stage composition."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.canny.params import CannyParams
+from repro.core.canny.pipeline import canny_local_stages
+from repro.core.canny.gaussian import gaussian_stage
+from repro.core.canny.sobel import sobel_stage
+from repro.core.canny.nms import nms_stage
+from repro.core.patterns.dist import StencilCtx
+
+_CTX = StencilCtx(None, "edge")
+
+
+def fused_frontend_ref(
+    img: jax.Array,
+    sigma: float = 1.4,
+    radius: int = 2,
+    low: float = 0.1,
+    high: float = 0.2,
+    l2_norm: bool = True,
+    emit: str = "code",
+) -> jax.Array:
+    params = CannyParams(sigma=sigma, radius=radius, low=low, high=high, l2_norm=l2_norm)
+    blur = gaussian_stage(img.astype(jnp.float32), _CTX, params)
+    mag, dirs = sobel_stage(blur, _CTX, params)
+    s = nms_stage(mag, dirs, _CTX)
+    if emit == "nms":
+        return s
+    return ((s >= low).astype(jnp.uint8) + (s >= high).astype(jnp.uint8))
+
+
+def fused_canny_ref(img: jax.Array, params: CannyParams) -> jax.Array:
+    return canny_local_stages(img.astype(jnp.float32), params, _CTX)

@@ -1,0 +1,4 @@
+from repro.kernels.gaussian.ops import gaussian_blur
+from repro.kernels.gaussian.ref import gaussian_ref
+
+__all__ = ["gaussian_blur", "gaussian_ref"]

@@ -1,0 +1,28 @@
+"""Jit'd public wrapper for the Gaussian Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.gaussian.gaussian import gaussian_blur_strips
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "radius", "block_rows", "interpret"))
+@common.batchify
+def gaussian_blur(
+    img: jax.Array,
+    sigma: float = 1.4,
+    radius: int = 2,
+    block_rows: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Gaussian blur of an (h, w) or (b, h, w) image, any float dtype in."""
+    img = img.astype(jnp.float32)
+    bh = block_rows or common.pick_block_rows(img.shape[-2], min_rows=radius)
+    padded, h = common.pad_rows_to_multiple(img, bh)
+    out = gaussian_blur_strips(padded, sigma, radius, bh, interpret)
+    return common.crop_rows(out, h)

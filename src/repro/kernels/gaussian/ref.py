@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the Gaussian kernel (mirrors the numpy reference)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.canny.gaussian import gaussian_stage
+from repro.core.canny.params import CannyParams
+from repro.core.patterns.dist import StencilCtx
+
+
+def gaussian_ref(img: jax.Array, sigma: float, radius: int) -> jax.Array:
+    params = CannyParams(sigma=sigma, radius=radius, low=0.0, high=1e-6)
+    return gaussian_stage(img.astype(jnp.float32), StencilCtx(None, "edge"), params)

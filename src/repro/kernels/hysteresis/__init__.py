@@ -1,0 +1,4 @@
+from repro.kernels.hysteresis.ops import hysteresis, hysteresis_from_masks
+from repro.kernels.hysteresis.ref import hysteresis_ref
+
+__all__ = ["hysteresis", "hysteresis_from_masks", "hysteresis_ref"]

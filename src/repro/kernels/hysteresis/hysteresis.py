@@ -1,0 +1,89 @@
+"""Hysteresis — Pallas kernel with in-tile fixpoint convergence.
+
+The paper's Amdahl-bottleneck stage, made parallel (see
+core/canny/hysteresis.py for the algorithm). The TPU twist: one kernel
+launch converges each strip to its LOCAL fixpoint entirely in VMEM
+(``lax.while_loop`` over masked dilations — zero HBM traffic per sweep),
+so the number of HBM-level launches drops from the pixel-path length to
+the strip-graph diameter. The XLA-level outer loop (ops.py) re-launches
+until no strip reports a change.
+
+Outputs: the propagated edge strip + a per-strip changed flag.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from repro.kernels import common
+
+
+def _kernel(eprev_ref, ecur_ref, enxt_ref, weak_ref, out_ref, changed_ref):
+    bh, w = ecur_ref.shape
+    ext = common.assemble_rows(
+        eprev_ref[...], ecur_ref[...], enxt_ref[...], 1, "zero"
+    )  # (bh+2, w) uint8; halo rows stay FIXED during this launch
+    top = ext[0:1, :] != 0
+    bot = ext[-1:, :] != 0
+    weak = weak_ref[...] != 0
+    init = ecur_ref[...] != 0
+
+    def dilate_masked(e):
+        full = jnp.concatenate([top, e, bot], axis=0)  # (bh+2, w)
+        fullc = common.pad_cols(full, 1, "zero")  # (bh+2, w+2)
+        acc = e
+        for dy in range(3):
+            for dx in range(3):
+                if dy == 1 and dx == 1:
+                    continue
+                win = jax.lax.slice_in_dim(
+                    jax.lax.slice_in_dim(fullc, dy, dy + bh, axis=0),
+                    dx,
+                    dx + w,
+                    axis=1,
+                )
+                acc = acc | win
+        return (acc & weak) | e
+
+    def body(carry):
+        e, _ = carry
+        new = dilate_masked(e)
+        return new, jnp.any(new != e)
+
+    final, _ = lax.while_loop(lambda c: c[1], body, (init, jnp.asarray(True)))
+    out_ref[...] = final.astype(jnp.uint8)
+    changed_ref[...] = jnp.any(final != init).astype(jnp.int32).reshape(1, 1)
+
+
+def hysteresis_sweep_strips(
+    edges: jax.Array,
+    weak: jax.Array,
+    block_rows: int | None = None,
+    interpret: bool | None = None,
+):
+    """One launch: local fixpoint per strip. Returns (edges', changed[n,1])."""
+    if interpret is None:
+        interpret = common.default_interpret()
+    h, w = edges.shape
+    bh = block_rows or common.pick_block_rows(h)
+    if h % bh != 0:
+        raise ValueError(f"H={h} not a multiple of block_rows={bh}")
+    n = h // bh
+    prev, cur, nxt = common.strip_specs(n, bh, w)
+    return pl.pallas_call(
+        _kernel,
+        grid=(n,),
+        in_specs=[prev, cur, nxt, common.out_strip_spec(bh, w)],
+        out_specs=(
+            common.out_strip_spec(bh, w),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((h, w), jnp.uint8),
+            jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        ),
+        interpret=interpret,
+    )(edges, edges, edges, weak)

@@ -1,0 +1,55 @@
+"""Jit'd hysteresis: XLA while-loop around the in-VMEM fixpoint kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels import common
+from repro.kernels.hysteresis.hysteresis import hysteresis_sweep_strips
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def hysteresis_from_masks(
+    strong: jax.Array,
+    weak: jax.Array,
+    block_rows: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(h,w) or (b,h,w) strong/weak bool|uint8 masks → uint8 edges."""
+    if strong.ndim == 3:
+        return jax.vmap(
+            lambda s, wk: hysteresis_from_masks(s, wk, block_rows, interpret)
+        )(strong, weak)
+    s8 = strong.astype(jnp.uint8)
+    w8 = weak.astype(jnp.uint8)
+    bh = block_rows or common.pick_block_rows(s8.shape[-2], min_rows=1)
+    # zero pad: no pixels → no paths → connectivity exactly preserved
+    sp, h = common.pad_rows_to_multiple(s8, bh, mode="zero")
+    wp, _ = common.pad_rows_to_multiple(w8, bh, mode="zero")
+
+    def body(carry):
+        e, _ = carry
+        e2, changed = hysteresis_sweep_strips(e, wp, bh, interpret)
+        return e2, changed.sum()
+
+    edges, _ = lax.while_loop(
+        lambda c: c[1] > 0, body, (sp, jnp.asarray(1, jnp.int32))
+    )
+    return common.crop_rows(edges, h)
+
+
+@functools.partial(jax.jit, static_argnames=("low", "high", "block_rows", "interpret"))
+def hysteresis(
+    nms_mag: jax.Array,
+    low: float,
+    high: float,
+    block_rows: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    strong = nms_mag >= high
+    weak = nms_mag >= low
+    return hysteresis_from_masks(strong, weak, block_rows, interpret)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the hysteresis kernel (validated vs numpy BFS)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.canny.hysteresis import hysteresis_fixpoint
+from repro.core.patterns.dist import StencilCtx
+
+
+def hysteresis_ref(strong: jax.Array, weak: jax.Array) -> jax.Array:
+    ctx = StencilCtx(None, "edge")
+    return hysteresis_fixpoint(
+        strong.astype(jnp.bool_), weak.astype(jnp.bool_), ctx
+    )

@@ -1,0 +1,4 @@
+from repro.kernels.nms.ops import nms
+from repro.kernels.nms.ref import nms_ref
+
+__all__ = ["nms", "nms_ref"]

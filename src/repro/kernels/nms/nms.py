@@ -1,0 +1,70 @@
+"""Non-maximum suppression — Pallas row-strip kernel, branch-free.
+
+The serial NMS is an if-ladder per pixel; on the VPU it becomes four
+precomputed neighbour pairs + a select on the direction bin. Magnitude
+needs a 1-row halo (neighbour-strip trick); directions are only read at
+the centre so they bind with a plain strip spec.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import common
+
+
+def nms_math(ext: jax.Array, dirs: jax.Array, bh: int, w: int) -> jax.Array:
+    """ext: zero-padded (bh+2, w+2) magnitudes; dirs: (bh, w) bins."""
+
+    def at(dy, dx):
+        return jax.lax.slice_in_dim(
+            jax.lax.slice_in_dim(ext, 1 + dy, 1 + dy + bh, axis=0),
+            1 + dx,
+            1 + dx + w,
+            axis=1,
+        )
+
+    mag = at(0, 0)
+    pairs = [
+        (at(0, 1), at(0, -1)),
+        (at(1, 1), at(-1, -1)),
+        (at(1, 0), at(-1, 0)),
+        (at(1, -1), at(-1, 1)),
+    ]
+    n1 = jnp.select([dirs == b for b in range(4)], [f for f, _ in pairs])
+    n2 = jnp.select([dirs == b for b in range(4)], [s for _, s in pairs])
+    keep = (mag >= n1) & (mag >= n2)
+    return jnp.where(keep, mag, 0.0).astype(jnp.float32)
+
+
+def _kernel(mprev_ref, mcur_ref, mnxt_ref, dir_ref, out_ref):
+    bh, w = mcur_ref.shape
+    ext = common.assemble_rows(mprev_ref[...], mcur_ref[...], mnxt_ref[...], 1, "zero")
+    ext = common.pad_cols(ext, 1, "zero")
+    out_ref[...] = nms_math(ext, dir_ref[...], bh, w)
+
+
+def nms_strips(
+    mag: jax.Array,
+    dirs: jax.Array,
+    block_rows: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = common.default_interpret()
+    h, w = mag.shape
+    bh = block_rows or common.pick_block_rows(h)
+    if h % bh != 0:
+        raise ValueError(f"H={h} not a multiple of block_rows={bh}")
+    n = h // bh
+    prev, cur, nxt = common.strip_specs(n, bh, w)
+    return pl.pallas_call(
+        _kernel,
+        grid=(n,),
+        in_specs=[prev, cur, nxt, common.out_strip_spec(bh, w)],
+        out_specs=common.out_strip_spec(bh, w),
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+        interpret=interpret,
+    )(mag, mag, mag, dirs)

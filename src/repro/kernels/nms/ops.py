@@ -1,0 +1,31 @@
+"""Jit'd public wrapper for the NMS Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.nms.nms import nms_strips
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def nms(
+    mag: jax.Array,
+    dirs: jax.Array,
+    block_rows: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """(h, w) or (b, h, w) magnitude+bins → suppressed magnitude."""
+    if mag.ndim == 3:
+        return jax.vmap(lambda m, d: nms(m, d, block_rows, interpret))(mag, dirs)
+    mag = mag.astype(jnp.float32)
+    bh = block_rows or common.pick_block_rows(mag.shape[-2], min_rows=1)
+    # zero rows: out-of-image neighbours count 0 — edge clones would feed
+    # wrong diagonal comparisons at the true bottom border.
+    mp, h = common.pad_rows_to_multiple(mag, bh, mode="zero")
+    dp, _ = common.pad_rows_to_multiple(dirs, bh, mode="zero")
+    out = nms_strips(mp, dp, bh, interpret)
+    return common.crop_rows(out, h)

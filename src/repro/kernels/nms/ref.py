@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the NMS kernel."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.canny.nms import nms_stage
+from repro.core.patterns.dist import StencilCtx
+
+
+def nms_ref(mag: jax.Array, dirs: jax.Array) -> jax.Array:
+    return nms_stage(mag, dirs, StencilCtx(None, "edge"))

@@ -1,0 +1,4 @@
+from repro.kernels.sobel.ops import sobel
+from repro.kernels.sobel.ref import sobel_ref
+
+__all__ = ["sobel", "sobel_ref"]

@@ -1,0 +1,27 @@
+"""Jit'd public wrapper for the fused Sobel Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import common
+from repro.kernels.sobel.sobel import sobel_strips
+
+
+@functools.partial(jax.jit, static_argnames=("l2_norm", "block_rows", "interpret"))
+@common.batchify
+def sobel(
+    img: jax.Array,
+    l2_norm: bool = True,
+    block_rows: int | None = None,
+    interpret: bool | None = None,
+):
+    """(h, w) or (b, h, w) → (magnitude f32, direction-bin uint8)."""
+    img = img.astype(jnp.float32)
+    bh = block_rows or common.pick_block_rows(img.shape[-2], min_rows=1)
+    padded, h = common.pad_rows_to_multiple(img, bh)
+    mag, dirs = sobel_strips(padded, l2_norm, bh, interpret)
+    return common.crop_rows(mag, h), common.crop_rows(dirs, h)

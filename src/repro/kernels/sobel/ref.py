@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the Sobel kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.canny.params import CannyParams
+from repro.core.canny.sobel import sobel_stage
+from repro.core.patterns.dist import StencilCtx
+
+
+def sobel_ref(img: jax.Array, l2_norm: bool = True):
+    params = CannyParams(l2_norm=l2_norm)
+    return sobel_stage(img.astype(jnp.float32), StencilCtx(None, "edge"), params)

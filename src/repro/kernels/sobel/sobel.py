@@ -1,0 +1,98 @@
+"""Fused Sobel kernel — Gx, Gy, magnitude and direction in ONE pass.
+
+The paper computes the convolution masks and then the gradient
+strength/direction in separate parallel loops; on TPU we fuse all four
+into a single VMEM-resident pass (the intermediate gx/gy never reach
+HBM) and replace arctan with branch-free slope comparisons (no
+transcendentals on the VPU hot path). Direction bins are emitted as
+uint8 — ¼ the HBM traffic of an int32 map.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import common
+
+_T1 = 0.41421356237309503  # tan(22.5°)
+_T2 = 2.414213562373095  # tan(67.5°)
+
+
+def sobel_math(ext: jax.Array, bh: int, w: int, l2_norm: bool):
+    """Shared gx/gy/mag/dirs math on a halo-extended (bh+2, w+2-col) strip.
+
+    ``ext`` must already have 1 halo row AND 1 halo col on each side.
+    Returns (mag, dirs) of shape (bh, w).
+    """
+    win = {}
+    for dy in range(3):
+        for dx in range(3):
+            win[(dy, dx)] = jax.lax.slice_in_dim(
+                jax.lax.slice_in_dim(ext, dy, dy + bh, axis=0), dx, dx + w, axis=1
+            )
+    gx = (
+        -win[(0, 0)]
+        + win[(0, 2)]
+        - 2.0 * win[(1, 0)]
+        + 2.0 * win[(1, 2)]
+        - win[(2, 0)]
+        + win[(2, 2)]
+    )
+    gy = (
+        -win[(0, 0)]
+        - 2.0 * win[(0, 1)]
+        - win[(0, 2)]
+        + win[(2, 0)]
+        + 2.0 * win[(2, 1)]
+        + win[(2, 2)]
+    )
+    if l2_norm:
+        mag = jnp.sqrt(gx * gx + gy * gy)
+    else:
+        mag = jnp.abs(gx) + jnp.abs(gy)
+    ax, ay = jnp.abs(gx), jnp.abs(gy)
+    horiz = ay <= _T1 * ax
+    vert = ay >= _T2 * ax
+    same = (gx * gy) > 0
+    dirs = jnp.where(horiz, 0, jnp.where(vert, 2, jnp.where(same, 1, 3)))
+    return mag.astype(jnp.float32), dirs.astype(jnp.uint8)
+
+
+def _kernel(prev_ref, cur_ref, nxt_ref, mag_ref, dir_ref, *, l2_norm: bool):
+    bh, w = cur_ref.shape
+    ext = common.assemble_rows(prev_ref[...], cur_ref[...], nxt_ref[...], 1, "edge")
+    ext = common.pad_cols(ext, 1, "edge")
+    mag, dirs = sobel_math(ext, bh, w, l2_norm)
+    mag_ref[...] = mag
+    dir_ref[...] = dirs
+
+
+def sobel_strips(
+    img: jax.Array,
+    l2_norm: bool = True,
+    block_rows: int | None = None,
+    interpret: bool | None = None,
+):
+    if interpret is None:
+        interpret = common.default_interpret()
+    h, w = img.shape
+    bh = block_rows or common.pick_block_rows(h)
+    if h % bh != 0:
+        raise ValueError(f"H={h} not a multiple of block_rows={bh}")
+    n = h // bh
+    prev, cur, nxt = common.strip_specs(n, bh, w)
+    import functools
+
+    return pl.pallas_call(
+        functools.partial(_kernel, l2_norm=l2_norm),
+        grid=(n,),
+        in_specs=[prev, cur, nxt],
+        out_specs=(common.out_strip_spec(bh, w), common.out_strip_spec(bh, w)),
+        out_shape=(
+            jax.ShapeDtypeStruct((h, w), jnp.float32),
+            jax.ShapeDtypeStruct((h, w), jnp.uint8),
+        ),
+        interpret=interpret,
+    )(img, img, img)

@@ -1,0 +1,272 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST run before any other import — jax locks the
+device count at first backend init. 512 placeholder CPU devices host the
+production meshes: 16×16 ("data","model") single-pod, 2×16×16
+("pod","data","model") multi-pod.
+
+Per cell:
+  * abstract params / optimizer / cache (ShapeDtypeStruct — no allocation)
+  * shardings from distributed/sharding.py rules
+  * jit(train_step | prefill_step | decode_step).lower(...).compile()
+  * memory_analysis (fits-HBM check), cost_analysis (FLOPs/bytes),
+    HLO collective parse → roofline terms → JSON cache
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
+  python -m repro.launch.dryrun --all --out experiments/dryrun
+"""
+
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs import SHAPES, TrainConfig, get_config
+from repro.configs.registry import ARCH_IDS
+from repro.distributed.sharding import (
+    activation_rules,
+    cache_rules,
+    cache_rules_dp,
+    opt_rules,
+    param_rules,
+    tree_shardings,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import abstract_batch, batch_schema, decode_cache_len
+from repro.launch.steps import make_decode_step, make_prefill_step, make_train_step
+from repro.models.common import ParamSpec, abstract_params
+from repro.models.lm import cache_schema_for, model_schema
+from repro.roofline import analyze, model_flops
+
+DEFAULT_OUT = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _shardings_for(schema, rules, mesh):
+    return tree_shardings(schema, rules, mesh)
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    tcfg: TrainConfig,
+    layout: str = "tp",
+    grad_constraint: bool = False,
+    ep_moe: bool = False,
+    moe_impl: str | None = None,
+):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+
+    schema = model_schema(cfg)
+    params_abs = abstract_params(schema)
+    p_rules = param_rules(tcfg.zero, layout)
+    p_shard = _shardings_for(schema, p_rules, mesh)
+
+    bschema = batch_schema(cfg, shape)
+    batch_abs = abstract_batch(bschema)
+    act_rules = activation_rules(shape.global_batch, mesh, layout)
+    b_shard = _shardings_for(bschema, act_rules, mesh)
+
+    # pin layer-boundary activations to the batch layout (hints)
+    from repro.models.hints import clear_hints, set_hints
+
+    clear_hints()
+    batch_axes = act_rules.table.get("batch")
+    if batch_axes:
+        set_hints(batch=batch_axes)
+    if ep_moe and cfg.is_moe and layout == "tp":
+        set_hints(ep_axis="model", mesh=mesh)
+        if moe_impl:
+            set_hints(moe_impl=moe_impl)
+    if layout == "tp":
+        set_hints(heads_axis=("model", dict(mesh.shape)["model"]))
+
+    t0 = time.time()
+    if shape.kind == "train":
+        opt_schema = {
+            "m": jax.tree_util.tree_map(
+                lambda s: ParamSpec(s.shape, s.logical, "zeros", "float32"),
+                schema,
+                is_leaf=lambda x: isinstance(x, ParamSpec),
+            ),
+            "v": jax.tree_util.tree_map(
+                lambda s: ParamSpec(s.shape, s.logical, "zeros", "float32"),
+                schema,
+                is_leaf=lambda x: isinstance(x, ParamSpec),
+            ),
+            "step": ParamSpec((), (), "zeros", "int32"),
+        }
+        opt_abs = abstract_params(opt_schema)
+        o_shard = _shardings_for(opt_schema, opt_rules(tcfg.zero, layout), mesh)
+        from repro.distributed.sharding import tree_specs
+
+        gspecs = tree_specs(schema, p_rules, mesh) if grad_constraint else None
+        step_fn = make_train_step(cfg, tcfg, grad_specs=gspecs)
+        with mesh:
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard, None),
+                donate_argnums=(0, 1),
+            ).lower(params_abs, opt_abs, batch_abs)
+    else:
+        max_seq = decode_cache_len(cfg, shape)
+        cschema = cache_schema_for(cfg, shape.global_batch, max_seq)
+        cache_abs = abstract_params(cschema)
+        crules = cache_rules(shape.global_batch, mesh)
+        if layout == "dp":
+            crules = cache_rules_dp(shape.global_batch, mesh)
+        c_shard = _shardings_for(cschema, crules, mesh)
+        if shape.kind == "prefill":
+            step_fn = make_prefill_step(cfg)
+            with mesh:
+                lowered = jax.jit(
+                    step_fn,
+                    in_shardings=(p_shard, b_shard, c_shard),
+                    out_shardings=(None, c_shard),
+                    donate_argnums=(2,),
+                ).lower(params_abs, batch_abs, cache_abs)
+        else:
+            step_fn = make_decode_step(cfg)
+            with mesh:
+                lowered = jax.jit(
+                    step_fn,
+                    in_shardings=(
+                        p_shard,
+                        b_shard["token"],
+                        b_shard["pos"],
+                        c_shard,
+                    ),
+                    out_shardings=(None, c_shard),
+                    donate_argnums=(3,),
+                ).lower(
+                    params_abs, batch_abs["token"], batch_abs["pos"], cache_abs
+                )
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    from repro.roofline.analytic import analytic_flops, analytic_hbm_bytes
+    from repro.roofline.model_flops import total_params
+
+    n_params = total_params(cfg)
+    report = analyze(
+        compiled,
+        arch=arch,
+        shape=shape_name,
+        mesh_name=mesh_name,
+        n_devices=n_dev,
+        model_flops_global=model_flops(cfg, shape),
+        analytic_flops_global=analytic_flops(cfg, shape, tcfg),
+        analytic_bytes_per_dev=analytic_hbm_bytes(
+            cfg, shape, tcfg, n_dev, n_params
+        ),
+        note=(
+            f"lower={t_lower:.1f}s compile={t_compile:.1f}s zero={tcfg.zero} "
+            f"remat={tcfg.remat} layout={layout} gconstraint={grad_constraint}"
+        ),
+    )
+    print(compiled.memory_analysis())
+    cost = compiled.cost_analysis() or {}
+    print({k: cost[k] for k in ("flops", "bytes accessed") if k in cost})
+    return report
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    ap.add_argument("--zero", type=int, default=3)
+    ap.add_argument("--remat", default="selective")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--layout", default="tp", choices=["tp", "dp"])
+    ap.add_argument("--grad-constraint", action="store_true")
+    ap.add_argument("--ep-moe", action="store_true")
+    ap.add_argument("--moe-impl", default=None, choices=[None, "a2a"])
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    tcfg = TrainConfig(zero=args.zero, remat=args.remat, microbatches=args.microbatches)
+
+    if args.all:
+        jobs = []
+        for a in ARCH_IDS:
+            cfg = get_config(a)
+            for s in SHAPES:
+                if s == "long_500k" and not cfg.sub_quadratic:
+                    continue  # documented skip (DESIGN.md §Arch-applicability)
+                meshes = []
+                if not args.multi_pod_only:
+                    meshes.append(False)
+                if not args.single_pod_only:
+                    meshes.append(True)
+                for mp in meshes:
+                    jobs.append((a, s, mp))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required (or --all)")
+        jobs = [(args.arch, args.shape, args.multi_pod)]
+
+    failures = []
+    for arch, shape, mp in jobs:
+        mesh_name = "2x16x16" if mp else "16x16"
+        fname = out_dir / f"{args.tag}_{arch}_{shape}_{mesh_name}.json"
+        if fname.exists() and not args.force:
+            print(f"[skip] {fname.name} (cached)")
+            continue
+        print(f"=== {arch} × {shape} × {mesh_name} ===", flush=True)
+        try:
+            report = run_cell(
+                arch, shape, mp, tcfg,
+                layout=args.layout, grad_constraint=args.grad_constraint,
+                ep_moe=args.ep_moe, moe_impl=args.moe_impl,
+            )
+            fname.write_text(json.dumps(report.to_json(), indent=2))
+            print(
+                f"  terms: compute={report.compute_s:.4g}s "
+                f"memory={report.memory_s:.4g}s "
+                f"collective={report.collective_s:.4g}s "
+                f"dominant={report.dominant} useful={report.useful_ratio:.3f}",
+                flush=True,
+            )
+        except Exception as e:  # noqa: BLE001 — sweep must report, not die
+            failures.append((arch, shape, mesh_name, repr(e)))
+            (out_dir / f"FAILED_{args.tag}_{arch}_{shape}_{mesh_name}.txt").write_text(
+                traceback.format_exc()
+            )
+            print(f"  FAILED: {e!r}", flush=True)
+
+    print(f"\n{len(jobs) - len(failures)}/{len(jobs)} cells OK")
+    for f in failures:
+        print("  FAIL:", f)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,18 @@
+"""Production meshes. Functions only — importing this never touches jax
+device state (the dry-run must set XLA_FLAGS before any device query)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e pod meshes: 16×16 = 256 chips single-pod; 2×16×16 multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 2, model: int = 4):
+    """Small mesh for multi-device CPU tests (8 virtual devices)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,111 @@
+"""Batched serving driver — prefill + decode loop with a KV cache.
+
+``python -m repro.launch.serve --arch smollm-135m --batch 4 --gen 32``
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.registry import ARCH_IDS
+from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.models import cache_schema_for, init_model
+from repro.models.common import init_params
+
+
+def serve(
+    arch: str,
+    batch: int = 4,
+    prompt_len: int = 32,
+    gen: int = 32,
+    full: bool = False,
+    temperature: float = 0.0,
+    seed: int = 0,
+):
+    cfg = get_config(arch)
+    if not full:
+        cfg = cfg.reduced()
+    params = init_model(cfg, jax.random.PRNGKey(seed))
+    max_seq = prompt_len + gen
+    cache = init_params(
+        cache_schema_for(cfg, batch, max_seq), jax.random.PRNGKey(1)
+    )
+    rng = np.random.default_rng(seed)
+    b = {
+        "tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (batch, prompt_len)), jnp.int32
+        )
+    }
+    if cfg.is_encdec:
+        b["frames"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.enc_seq, cfg.d_model)) * 0.05, jnp.bfloat16
+        )
+    if cfg.family == "vlm":
+        sv = int(prompt_len * cfg.vis_frac)
+        b["vis_embeds"] = jnp.asarray(
+            rng.normal(size=(batch, sv, cfg.d_model)) * 0.05, jnp.bfloat16
+        )
+
+    prefill_fn = jax.jit(make_prefill_step(cfg), donate_argnums=(2,))
+    decode_fn = jax.jit(make_decode_step(cfg), donate_argnums=(3,))
+
+    t0 = time.perf_counter()
+    logits, cache = prefill_fn(params, b, cache)
+    logits.block_until_ready()
+    t_prefill = time.perf_counter() - t0
+
+    key = jax.random.PRNGKey(seed)
+    tokens = []
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    pos = jnp.full((batch,), prompt_len, jnp.int32)
+    t0 = time.perf_counter()
+    for i in range(gen):
+        tokens.append(np.asarray(tok))
+        logits, cache = decode_fn(params, tok, pos, cache)
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits / temperature, -1).astype(
+                jnp.int32
+            )
+        else:
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        pos = pos + 1
+    jax.block_until_ready(logits)
+    t_decode = time.perf_counter() - t0
+
+    toks_per_s = batch * gen / t_decode if t_decode > 0 else float("inf")
+    print(
+        f"arch={cfg.name} prefill({batch}x{prompt_len})={t_prefill*1e3:.0f}ms "
+        f"decode {gen} steps: {t_decode*1e3:.0f}ms → {toks_per_s:.1f} tok/s"
+    )
+    return np.stack(tokens, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="smollm-135m")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    out = serve(
+        args.arch,
+        batch=args.batch,
+        prompt_len=args.prompt_len,
+        gen=args.gen,
+        full=args.full,
+        temperature=args.temperature,
+    )
+    print("generated token ids (first sequence):", out[0][:16])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""input_specs — ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, zero device allocation: the dry-run lowers
+train/prefill/decode steps against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.common import ParamSpec
+
+I32 = jnp.int32
+BF16 = jnp.bfloat16
+
+# whisper decoder prefix lengths per shape kind (audio frames are the
+# long axis; see configs/whisper_large_v3.py docstring)
+WHISPER_DEC_LEN = 448
+
+
+def batch_schema(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ParamSpec schema of the input batch (so sharding rules apply)."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.is_encdec:
+            return {
+                "frames": ParamSpec((b, s, cfg.d_model), ("batch", "seq", "embed"), "zeros", BF16),
+                "tokens": ParamSpec((b, WHISPER_DEC_LEN), ("batch", None), "zeros", I32),
+                "labels": ParamSpec((b, WHISPER_DEC_LEN), ("batch", None), "zeros", I32),
+            }
+        d = {
+            "tokens": ParamSpec((b, s), ("batch", None), "zeros", I32),
+            "labels": ParamSpec((b, s), ("batch", None), "zeros", I32),
+        }
+        if cfg.family == "vlm":
+            sv = int(s * cfg.vis_frac)
+            d["vis_embeds"] = ParamSpec(
+                (b, sv, cfg.d_model), ("batch", None, "embed"), "zeros", BF16
+            )
+            d["positions"] = ParamSpec((3, b, s), (None, "batch", None), "zeros", I32)
+        return d
+    if shape.kind == "prefill":
+        if cfg.is_encdec:
+            return {
+                "frames": ParamSpec((b, s, cfg.d_model), ("batch", "seq", "embed"), "zeros", BF16),
+                "tokens": ParamSpec((b, WHISPER_DEC_LEN), ("batch", None), "zeros", I32),
+            }
+        d = {"tokens": ParamSpec((b, s), ("batch", None), "zeros", I32)}
+        if cfg.family == "vlm":
+            sv = int(s * cfg.vis_frac)
+            d["vis_embeds"] = ParamSpec(
+                (b, sv, cfg.d_model), ("batch", None, "embed"), "zeros", BF16
+            )
+            d["positions"] = ParamSpec((3, b, s), (None, "batch", None), "zeros", I32)
+        return d
+    # decode: one token; the cache carries seq_len
+    return {
+        "token": ParamSpec((b,), ("batch",), "zeros", I32),
+        "pos": ParamSpec((b,), ("batch",), "zeros", I32),
+    }
+
+
+def decode_cache_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    if shape.kind == "decode" and cfg.is_encdec:
+        return min(shape.seq_len, 32_768)  # decoder self-KV length
+    return shape.seq_len
+
+
+def abstract_batch(schema: dict) -> dict:
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        schema,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )

@@ -1,0 +1,97 @@
+"""The three lowerable step functions: train_step, prefill_step, decode.
+
+These are what the dry-run compiles per (arch × shape × mesh) and what
+the real trainer/server jit. Microbatched gradient accumulation (scan)
+doubles as compute/comm overlap: XLA overlaps microbatch i's reduction
+with microbatch i+1's backward.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import decode_step as model_decode
+from repro.models import loss_fn, prefill
+from repro.optim.adamw import adamw_update, clip_by_global_norm
+from repro.optim.compress import compress_grads_ef
+
+
+def make_train_step(
+    cfg: ModelConfig, tcfg: TrainConfig, grad_specs=None
+) -> Callable:
+    """``grad_specs``: optional tree of PartitionSpecs (the param specs).
+    Constraining grads to the param layout makes XLA reduce-scatter the
+    data-parallel gradient reduction instead of all-reducing full
+    gradients on every device — the ZeRO traffic pattern."""
+
+    def train_step(params, opt_state, batch):
+        if tcfg.microbatches > 1:
+            mb = tcfg.microbatches
+
+            def split(x):
+                b = x.shape[0]
+                return x.reshape((mb, b // mb) + x.shape[1:])
+
+            # positions (3,B,S) splits on axis 1
+            def split_batch(bt):
+                out = {}
+                for k, v in bt.items():
+                    if k == "positions" and v.ndim == 3:
+                        out[k] = jnp.moveaxis(
+                            v.reshape(v.shape[0], mb, -1, v.shape[2]), 1, 0
+                        )
+                    else:
+                        out[k] = split(v)
+                return out
+
+            mbatches = split_batch(batch)
+
+            def accum(carry, mb_batch):
+                gsum, lsum = carry
+                (loss, _), g = jax.value_and_grad(
+                    lambda p: loss_fn(p, cfg, mb_batch, remat=tcfg.remat),
+                    has_aux=True,
+                )(params)
+                gsum = jax.tree_util.tree_map(jnp.add, gsum, g)
+                return (gsum, lsum + loss), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum, lsum), _ = jax.lax.scan(accum, (zeros, 0.0), mbatches)
+            grads = jax.tree_util.tree_map(lambda g: g / mb, gsum)
+            loss = lsum / mb
+        else:
+            (loss, _), grads = jax.value_and_grad(
+                lambda p: loss_fn(p, cfg, batch, remat=tcfg.remat), has_aux=True
+            )(params)
+
+        if grad_specs is not None:
+            grads = jax.lax.with_sharding_constraint(grads, grad_specs)
+        if tcfg.compress_grads:
+            grads, opt_state = compress_grads_ef(grads, opt_state)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        params, opt_state = adamw_update(params, grads, opt_state, tcfg)
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, batch, cache):
+        return prefill(params, cfg, batch, cache)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    def decode(params, token, pos, cache):
+        return model_decode(params, cfg, token, pos, cache)
+
+    return decode

@@ -1,0 +1,21 @@
+from repro.models.lm import (
+    abstract_model,
+    cache_schema_for,
+    decode_step,
+    forward_train,
+    init_model,
+    loss_fn,
+    model_schema,
+    prefill,
+)
+
+__all__ = [
+    "abstract_model",
+    "cache_schema_for",
+    "decode_step",
+    "forward_train",
+    "init_model",
+    "loss_fn",
+    "model_schema",
+    "prefill",
+]

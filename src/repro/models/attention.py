@@ -1,0 +1,445 @@
+"""Attention variants: GQA (opt. bias / sliding window), MLA, cross-attn.
+
+Memory discipline:
+  * training/prefill uses *chunked* causal attention (query blocks scanned
+    with ``lax.scan``): peak scores memory drops from O(S²) to O(chunk·S),
+    which is what lets prefill_32k lower within HBM. (Flops are 2× the
+    causal-optimal because masked key blocks are still computed — counted
+    honestly in the roofline MODEL_FLOPS ratio; the Pallas flash kernel is
+    the §Perf follow-up.)
+  * decode attends one query against the cache; MLA decode uses the
+    *absorbed* form (scores directly against the compressed c_kv cache —
+    the paper's 576-dim cache trick) so the per-token cache stays
+    kv_lora+rope_dim wide instead of H·(hd_k+hd_v).
+  * sliding-window (SWA) caches are ring buffers of size ``window`` —
+    decode memory O(window), not O(S). Positions ride along for masking.
+
+All caches are ParamSpec schemas too, so the dry-run lowers them as
+ShapeDtypeStructs with proper shardings and zero allocation.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec
+from repro.models.layers import apply_mrope, apply_rope
+
+NEG_INF = -1e30
+
+
+# ====================== schemas =============================================
+def gqa_schema(cfg: ModelConfig, cross: bool = False) -> dict:
+    hd = cfg.hd
+    d = {
+        "wq": ParamSpec((cfg.d_model, cfg.n_heads * hd), ("embed", "heads")),
+        "wk": ParamSpec((cfg.d_model, cfg.n_kv_heads * hd), ("embed", "heads")),
+        "wv": ParamSpec((cfg.d_model, cfg.n_kv_heads * hd), ("embed", "heads")),
+        "wo": ParamSpec((cfg.n_heads * hd, cfg.d_model), ("heads", "embed")),
+    }
+    if cfg.qkv_bias and not cross:
+        d["bq"] = ParamSpec((cfg.n_heads * hd,), ("heads",), "zeros")
+        d["bk"] = ParamSpec((cfg.n_kv_heads * hd,), ("heads",), "zeros")
+        d["bv"] = ParamSpec((cfg.n_kv_heads * hd,), ("heads",), "zeros")
+    return d
+
+
+def mla_schema(cfg: ModelConfig) -> dict:
+    H = cfg.n_heads
+    qk_all = cfg.qk_nope_dim + cfg.qk_rope_dim
+    d: dict = {}
+    if cfg.q_lora_rank:
+        d["wq_a"] = ParamSpec((cfg.d_model, cfg.q_lora_rank), ("embed", None))
+        d["q_norm"] = ParamSpec((cfg.q_lora_rank,), (None,), "ones")
+        d["wq_b"] = ParamSpec((cfg.q_lora_rank, H * qk_all), (None, "heads"))
+    else:
+        d["wq"] = ParamSpec((cfg.d_model, H * qk_all), ("embed", "heads"))
+    d["wkv_a"] = ParamSpec(
+        (cfg.d_model, cfg.kv_lora_rank + cfg.qk_rope_dim), ("embed", None)
+    )
+    d["kv_norm"] = ParamSpec((cfg.kv_lora_rank,), (None,), "ones")
+    d["wkv_b"] = ParamSpec(
+        (cfg.kv_lora_rank, H * (cfg.qk_nope_dim + cfg.v_head_dim)), (None, "heads")
+    )
+    d["wo"] = ParamSpec((H * cfg.v_head_dim, cfg.d_model), ("heads", "embed"))
+    return d
+
+
+def attn_schema(cfg: ModelConfig) -> dict:
+    return mla_schema(cfg) if cfg.attention == "mla" else gqa_schema(cfg)
+
+
+def cache_schema(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    """KV cache schema for ONE layer (stacked over layers by the stack)."""
+    dt = jnp.bfloat16
+    if cfg.attention == "mla":
+        return {
+            "c_kv": ParamSpec(
+                (batch, max_seq, cfg.kv_lora_rank), ("batch", "seq", None), "zeros", dt
+            ),
+            "k_rope": ParamSpec(
+                (batch, max_seq, cfg.qk_rope_dim), ("batch", "seq", None), "zeros", dt
+            ),
+        }
+    span = min(cfg.window, max_seq) if cfg.window else max_seq
+    d = {
+        "k": ParamSpec(
+            (batch, span, cfg.n_kv_heads, cfg.hd),
+            ("batch", "seq", "kv_heads", None),
+            "zeros",
+            dt,
+        ),
+        "v": ParamSpec(
+            (batch, span, cfg.n_kv_heads, cfg.hd),
+            ("batch", "seq", "kv_heads", None),
+            "zeros",
+            dt,
+        ),
+    }
+    if cfg.window:
+        # -1 = empty slot sentinel; decode masks kpos >= 0
+        d["pos"] = ParamSpec((batch, span), ("batch", "seq"), "neg_ones", jnp.int32)
+    return d
+
+
+# ====================== core attention math =================================
+def _split_heads(x: jax.Array, n: int) -> jax.Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, -1)
+
+
+def _repeat_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    b, s, hkv, hd = k.shape
+    if hkv == n_heads:
+        return k
+    g = n_heads // hkv
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, hkv, g, hd)).reshape(
+        b, s, n_heads, hd
+    )
+
+
+def chunked_causal_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    scale: float,
+    window: int | None = None,
+    chunk_q: int = 1024,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Causal softmax attention, scanned over query chunks.
+
+    q: (B, S, H, hd); k/v: (B, T, H, hd) (kv already head-repeated).
+    Peak temp = B·H·chunk·T scores instead of B·H·S·T.
+    """
+    b, s, h, hd = q.shape
+    hd_v = v.shape[-1]  # MLA: v head dim ≠ qk head dim
+    t = k.shape[1]
+    if s % chunk_q != 0:
+        chunk_q = s  # fall back to one chunk (small inputs)
+    n_chunks = s // chunk_q
+    qc = q.reshape(b, n_chunks, chunk_q, h, hd).transpose(1, 0, 2, 3, 4)
+    kpos = jnp.arange(t)
+
+    def one_chunk(ci, qi):
+        # qi: (B, chunk, H, hd)
+        qpos = q_offset + ci * chunk_q + jnp.arange(chunk_q)
+        scores = jnp.einsum(
+            "bqhd,bkhd->bhqk", qi, k, preferred_element_type=jnp.float32
+        ) * scale
+        mask = kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > (qpos[:, None] - window)
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1)
+        return jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v)
+
+    outs = lax.map(lambda args: one_chunk(*args), (jnp.arange(n_chunks), qc))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd_v)
+
+
+# ====================== GQA =================================================
+def _gqa_qkv(p: dict, x: jax.Array, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return (
+        _split_heads(q, cfg.n_heads),
+        _split_heads(k, cfg.n_kv_heads),
+        _split_heads(v, cfg.n_kv_heads),
+    )
+
+
+def _rope_q_k(q, k, positions, cfg: ModelConfig):
+    if cfg.rope_mode == "none":
+        return q, k
+    if cfg.rope_mode == "mrope":
+        return (
+            apply_mrope(q, positions, cfg.rope_theta),
+            apply_mrope(k, positions, cfg.rope_theta),
+        )
+    return (
+        apply_rope(q, positions, cfg.rope_theta),
+        apply_rope(k, positions, cfg.rope_theta),
+    )
+
+
+def gqa_train(p: dict, x: jax.Array, cfg: ModelConfig, positions) -> jax.Array:
+    from repro.models.hints import constrain_heads
+
+    q, k, v = _gqa_qkv(p, x, cfg)
+    q, k = _rope_q_k(q, k, positions, cfg)
+    k = _repeat_kv(k, cfg.n_heads)
+    v = _repeat_kv(v, cfg.n_heads)
+    q, k, v = constrain_heads(q), constrain_heads(k), constrain_heads(v)
+    scale = 1.0 / math.sqrt(cfg.hd)
+    out = chunked_causal_attention(q, k, v, scale, window=cfg.window)
+    b, s = x.shape[:2]
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+def gqa_prefill(p: dict, x: jax.Array, cfg: ModelConfig, positions, cache: dict):
+    """Training-shaped pass that also fills the KV cache."""
+    q, k, v = _gqa_qkv(p, x, cfg)
+    q, k = _rope_q_k(q, k, positions, cfg)
+    b, s = x.shape[:2]
+    if cfg.window:
+        span = cache["k"].shape[1]
+        tail = min(span, s)
+        idx = (positions[:, -tail:]) % span
+        bidx = jnp.arange(b)[:, None]
+        cache = {
+            "k": cache["k"].at[bidx, idx].set(k[:, -tail:].astype(cache["k"].dtype)),
+            "v": cache["v"].at[bidx, idx].set(v[:, -tail:].astype(cache["v"].dtype)),
+            "pos": cache["pos"].at[bidx, idx].set(positions[:, -tail:]),
+        }
+    else:
+        cache = {
+            "k": lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), 0, axis=1
+            ),
+            "v": lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), 0, axis=1
+            ),
+        }
+    kf = _repeat_kv(k, cfg.n_heads)
+    vf = _repeat_kv(v, cfg.n_heads)
+    scale = 1.0 / math.sqrt(cfg.hd)
+    out = chunked_causal_attention(q, kf, vf, scale, window=cfg.window)
+    return out.reshape(b, s, -1) @ p["wo"], cache
+
+
+def gqa_decode(p: dict, x: jax.Array, cfg: ModelConfig, pos: jax.Array, cache: dict):
+    """x: (B, 1, D); pos: (B,) current absolute position. Ring-buffer SWA."""
+    b = x.shape[0]
+    q, k, v = _gqa_qkv(p, x, cfg)
+    if cfg.rope_mode == "mrope":
+        dec_pos = jnp.broadcast_to(pos[None, :, None], (3, b, 1))
+    else:
+        dec_pos = pos[:, None]
+    q, k = _rope_q_k(q, k, dec_pos, cfg)
+    span = cache["k"].shape[1]
+    if cfg.window:
+        slot = (pos % span)[:, None]
+        bidx = jnp.arange(b)[:, None]
+        new_k = cache["k"].at[bidx, slot].set(k.astype(cache["k"].dtype))
+        new_v = cache["v"].at[bidx, slot].set(v.astype(cache["v"].dtype))
+        new_pos = cache["pos"].at[bidx, slot].set(pos[:, None])
+        cache = {"k": new_k, "v": new_v, "pos": new_pos}
+        kpos = new_pos  # (B, span) absolute positions in the ring (−1 = empty)
+        valid = (
+            (kpos >= 0)
+            & (kpos <= pos[:, None])
+            & (kpos > pos[:, None] - cfg.window)
+        )
+    else:
+
+        def upd(c, new):
+            return jax.vmap(
+                lambda cb, nb, pb: lax.dynamic_update_slice_in_dim(
+                    cb, nb.astype(cb.dtype), pb, axis=0
+                )
+            )(c, new, pos)
+
+        cache = {"k": upd(cache["k"], k), "v": upd(cache["v"], v)}
+        kpos = jnp.broadcast_to(jnp.arange(span)[None], (b, span))
+        valid = kpos <= pos[:, None]
+
+    kf = _repeat_kv(cache["k"].astype(q.dtype), cfg.n_heads)
+    vf = _repeat_kv(cache["v"].astype(q.dtype), cfg.n_heads)
+    scale = 1.0 / math.sqrt(cfg.hd)
+    scores = jnp.einsum(
+        "bqhd,bkhd->bhqk", q, kf, preferred_element_type=jnp.float32
+    ) * scale
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w.astype(vf.dtype), vf)
+    return out.reshape(b, 1, -1) @ p["wo"], cache
+
+
+# ====================== MLA =================================================
+def _mla_q(p: dict, x: jax.Array, cfg: ModelConfig):
+    H = cfg.n_heads
+    qk_all = cfg.qk_nope_dim + cfg.qk_rope_dim
+    if cfg.q_lora_rank:
+        cq = jnp.einsum("bsd,dr->bsr", x, p["wq_a"])
+        ms = (cq.astype(jnp.float32) ** 2).mean(-1, keepdims=True)
+        cq = (
+            cq.astype(jnp.float32) * lax.rsqrt(ms + cfg.norm_eps)
+        ).astype(x.dtype) * p["q_norm"]
+        q = jnp.einsum("bsr,rh->bsh", cq, p["wq_b"])
+    else:
+        q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    q = q.reshape(x.shape[0], x.shape[1], H, qk_all)
+    return q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim :]
+
+
+def _mla_ckv(p: dict, x: jax.Array, cfg: ModelConfig):
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    c_kv, k_rope = kv[..., : cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank :]
+    ms = (c_kv.astype(jnp.float32) ** 2).mean(-1, keepdims=True)
+    c_kv = (
+        c_kv.astype(jnp.float32) * lax.rsqrt(ms + cfg.norm_eps)
+    ).astype(x.dtype) * p["kv_norm"]
+    return c_kv, k_rope
+
+
+def mla_train(
+    p: dict, x: jax.Array, cfg: ModelConfig, positions, cache: dict | None = None
+):
+    """Full (uncompressed-score) MLA for train/prefill; optionally fills cache."""
+    b, s, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope = _mla_q(p, x, cfg)
+    c_kv, k_rope = _mla_ckv(p, x, cfg)
+    # expand compressed kv
+    kvb = jnp.einsum("bsr,rh->bsh", c_kv, p["wkv_b"]).reshape(
+        b, s, H, cfg.qk_nope_dim + cfg.v_head_dim
+    )
+    k_nope, v = kvb[..., : cfg.qk_nope_dim], kvb[..., cfg.qk_nope_dim :]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    k_rope_r = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    k_rope_b = jnp.broadcast_to(k_rope_r, (b, s, H, cfg.qk_rope_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    from repro.models.hints import constrain_heads
+
+    q, k, v = constrain_heads(q), constrain_heads(k), constrain_heads(v)
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    out = chunked_causal_attention(q, k, v, scale)
+    out = out.reshape(b, s, -1) @ p["wo"]
+    if cache is not None:
+        cache = {
+            "c_kv": lax.dynamic_update_slice_in_dim(
+                cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), 0, axis=1
+            ),
+            "k_rope": lax.dynamic_update_slice_in_dim(
+                cache["k_rope"],
+                apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[
+                    :, :, 0, :
+                ].astype(cache["k_rope"].dtype),
+                0,
+                axis=1,
+            ),
+        }
+        return out, cache
+    return out
+
+
+def mla_decode(p: dict, x: jax.Array, cfg: ModelConfig, pos: jax.Array, cache: dict):
+    """Absorbed MLA decode: scores live in the compressed c_kv space."""
+    b = x.shape[0]
+    H = cfg.n_heads
+    q_nope, q_rope = _mla_q(p, x, cfg)  # (B,1,H,·)
+    c_kv_new, k_rope_new = _mla_ckv(p, x, cfg)  # (B,1,·)
+    q_rope = apply_rope(q_rope, pos[:, None], cfg.rope_theta)
+    k_rope_new = apply_rope(k_rope_new[:, :, None, :], pos[:, None], cfg.rope_theta)[
+        :, :, 0, :
+    ]
+
+    def upd(c, new):
+        return jax.vmap(
+            lambda cb, nb, pb: lax.dynamic_update_slice_in_dim(
+                cb, nb.astype(cb.dtype), pb, axis=0
+            )
+        )(c, new, pos)
+
+    cache = {
+        "c_kv": upd(cache["c_kv"], c_kv_new),
+        "k_rope": upd(cache["k_rope"], k_rope_new),
+    }
+    ckv = cache["c_kv"].astype(x.dtype)  # (B, T, r)
+    krope = cache["k_rope"].astype(x.dtype)  # (B, T, dr)
+    span = ckv.shape[1]
+
+    wkv_b = p["wkv_b"].reshape(cfg.kv_lora_rank, H, cfg.qk_nope_dim + cfg.v_head_dim)
+    w_uk = wkv_b[..., : cfg.qk_nope_dim]  # (r, H, dn)
+    w_uv = wkv_b[..., cfg.qk_nope_dim :]  # (r, H, dv)
+
+    # absorb: q_eff = q_nope @ w_uk → compressed space
+    q_eff = jnp.einsum("bqhn,rhn->bqhr", q_nope, w_uk)
+    scores = jnp.einsum(
+        "bqhr,btr->bhqt", q_eff, ckv, preferred_element_type=jnp.float32
+    )
+    scores += jnp.einsum(
+        "bqhn,btn->bhqt", q_rope, krope, preferred_element_type=jnp.float32
+    )
+    scores *= 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    valid = jnp.arange(span)[None] <= pos[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqt,btr->bqhr", w.astype(ckv.dtype), ckv)
+    out = jnp.einsum("bqhr,rhv->bqhv", ctx, w_uv)
+    return out.reshape(b, 1, -1) @ p["wo"], cache
+
+
+# ====================== cross-attention (enc-dec) ===========================
+def cross_schema(cfg: ModelConfig) -> dict:
+    return gqa_schema(cfg, cross=True)
+
+
+def cross_attention(
+    p: dict, x: jax.Array, enc_kv: tuple[jax.Array, jax.Array], cfg: ModelConfig
+) -> jax.Array:
+    """x: (B,S,D) decoder; enc_kv: precomputed (k, v) (B,T,H,hd)."""
+    b, s, _ = x.shape
+    q = _split_heads(jnp.einsum("bsd,dh->bsh", x, p["wq"]), cfg.n_heads)
+    k, v = enc_kv
+    k = _repeat_kv(k, cfg.n_heads)
+    v = _repeat_kv(v, cfg.n_heads)
+    scale = 1.0 / math.sqrt(cfg.hd)
+    scores = jnp.einsum(
+        "bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v)
+    return out.reshape(b, s, -1) @ p["wo"]
+
+
+def encode_cross_kv(p: dict, enc_out: jax.Array, cfg: ModelConfig):
+    k = _split_heads(jnp.einsum("btd,dh->bth", enc_out, p["wk"]), cfg.n_kv_heads)
+    v = _split_heads(jnp.einsum("btd,dh->bth", enc_out, p["wv"]), cfg.n_kv_heads)
+    return k, v
+
+
+# ====================== bidirectional (encoder) =============================
+def encoder_self_attention(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    b, s, _ = x.shape
+    q, k, v = _gqa_qkv(p, x, cfg)
+    k = _repeat_kv(k, cfg.n_heads)
+    v = _repeat_kv(v, cfg.n_heads)
+    scale = 1.0 / math.sqrt(cfg.hd)
+    scores = jnp.einsum(
+        "bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v)
+    return out.reshape(b, s, -1) @ p["wo"]

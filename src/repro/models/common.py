@@ -1,0 +1,112 @@
+"""Param schema machinery — shapes, logical axes, init, abstract trees.
+
+Every model declares its parameters as a nested dict of ``ParamSpec``
+(shape + dtype + *logical axis names*). From one schema we derive:
+
+  * materialized params  (``init_params`` — per-leaf folded PRNG)
+  * abstract params      (``abstract_params`` — ShapeDtypeStruct, no
+                          allocation; this is what the dry-run lowers with)
+  * shardings            (``distributed/sharding.py`` maps logical names →
+                          mesh axes → PartitionSpec per leaf)
+
+Logical names used across models:
+  batch, seq, embed, vocab, heads, kv_heads, head_dim, ff, experts,
+  layers (scan axis), conv, state, inner
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    logical: tuple[str | None, ...]
+    init: str = "normal"  # "normal" | "zeros" | "ones" | "small"
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def _initializer(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "neg_ones":
+        return -jnp.ones(spec.shape, spec.dtype)
+    fan_in = spec.shape[0] if spec.shape else 1
+    scale = 0.02 if spec.init == "normal" else 1.0 / math.sqrt(max(fan_in, 1))
+    return (scale * jax.random.normal(key, spec.shape, jnp.float32)).astype(spec.dtype)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(schema: dict, key: jax.Array) -> dict:
+    """Materialize a schema; each leaf gets a path-folded key (stable)."""
+    leaves, treedef = jax.tree_util.tree_flatten(schema, is_leaf=_is_spec)
+    out = []
+    for i, spec in enumerate(leaves):
+        out.append(_initializer(spec, jax.random.fold_in(key, i)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_params(schema: dict) -> dict:
+    """ShapeDtypeStruct tree — used by the dry-run (zero allocation)."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), schema, is_leaf=_is_spec
+    )
+
+
+def logical_axes(schema: dict) -> dict:
+    """Same-structure tree of logical-axis tuples."""
+    return jax.tree_util.tree_map(lambda s: s.logical, schema, is_leaf=_is_spec)
+
+
+def param_count(schema: dict) -> int:
+    return sum(
+        int(np.prod(s.shape))
+        for s in jax.tree_util.tree_leaves(schema, is_leaf=_is_spec)
+    )
+
+
+def param_bytes(schema: dict) -> int:
+    return sum(
+        int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+        for s in jax.tree_util.tree_leaves(schema, is_leaf=_is_spec)
+    )
+
+
+# ---------------------------------------------------------------------------
+def stack_layer_schema(layer_schema: dict, n_layers: int) -> dict:
+    """Prepend a scanned 'layers' axis to every leaf of a per-layer schema.
+
+    Models scan over stacked layer params (compile time O(1) in depth —
+    the MaxText approach); the leading axis is never sharded.
+    """
+
+    def stack(s: ParamSpec) -> ParamSpec:
+        return ParamSpec(
+            (n_layers,) + s.shape, ("layers",) + s.logical, s.init, s.dtype
+        )
+
+    return jax.tree_util.tree_map(stack, layer_schema, is_leaf=_is_spec)
+
+
+def cast_float(tree, dtype):
+    def cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree_util.tree_map(cast, tree)

@@ -1,0 +1,153 @@
+"""Encoder–decoder stack (Whisper-style backbone).
+
+The conv audio frontend is a STUB per the assignment: ``input_specs``
+feeds precomputed frame embeddings (B, T_frames, d_model). Encoder is
+bidirectional (sinusoidal positions); decoder is causal self-attention +
+cross-attention (learned positions). Decode caches: self-attn KV ring +
+cross-attn KV computed once at prefill.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.common import ParamSpec, stack_layer_schema
+from repro.models.layers import (
+    apply_mlp,
+    apply_norm,
+    mlp_schema,
+    norm_schema,
+    sinusoidal_positions,
+)
+
+
+def enc_layer_schema(cfg: ModelConfig) -> dict:
+    return {
+        "norm1": norm_schema(cfg),
+        "attn": attn.gqa_schema(cfg),
+        "norm2": norm_schema(cfg),
+        "mlp": mlp_schema(cfg),
+    }
+
+
+def dec_layer_schema(cfg: ModelConfig) -> dict:
+    return {
+        "norm1": norm_schema(cfg),
+        "attn": attn.gqa_schema(cfg),
+        "norm_x": norm_schema(cfg),
+        "xattn": attn.cross_schema(cfg),
+        "norm2": norm_schema(cfg),
+        "mlp": mlp_schema(cfg),
+    }
+
+
+def encdec_stack_schema(cfg: ModelConfig) -> dict:
+    return {
+        "encoder": stack_layer_schema(enc_layer_schema(cfg), cfg.n_enc_layers),
+        "enc_norm": norm_schema(cfg),
+        "decoder": stack_layer_schema(dec_layer_schema(cfg), cfg.n_layers),
+        "dec_pos": ParamSpec((4096, cfg.d_model), ("seq", "embed"), "small"),
+    }
+
+
+def encdec_cache_schema(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    """Decoder self-attn cache + cross-KV (filled at prefill)."""
+    hd = cfg.hd
+    self_c = stack_layer_schema(
+        attn.cache_schema(cfg, batch, max_seq), cfg.n_layers
+    )
+    cross = {
+        "k": ParamSpec(
+            (cfg.n_layers, batch, cfg.enc_seq, cfg.n_kv_heads, hd),
+            ("layers", "batch", "seq", "kv_heads", None),
+            "zeros",
+            jnp.bfloat16,
+        ),
+        "v": ParamSpec(
+            (cfg.n_layers, batch, cfg.enc_seq, cfg.n_kv_heads, hd),
+            ("layers", "batch", "seq", "kv_heads", None),
+            "zeros",
+            jnp.bfloat16,
+        ),
+    }
+    return {"self": self_c, "cross": cross}
+
+
+def encode(params: dict, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """frames: (B, T, D) stub embeddings → encoder states (B, T, D)."""
+    t = frames.shape[1]
+    pos = sinusoidal_positions(t, cfg.d_model).astype(frames.dtype)
+    x = frames + pos[None]
+    x = x.astype(params["enc_norm"]["scale"].dtype)
+
+    def body(xc, lp):
+        h = apply_norm(lp["norm1"], xc, cfg)
+        xc = xc + attn.encoder_self_attention(lp["attn"], h, cfg)
+        xc = xc + apply_mlp(lp["mlp"], apply_norm(lp["norm2"], xc, cfg), cfg)
+        return xc, None
+
+    x, _ = lax.scan(body, x, params["encoder"])
+    return apply_norm(params["enc_norm"], x, cfg)
+
+
+def decode_train(
+    params: dict,
+    tok_embeds: jax.Array,
+    enc_out: jax.Array,
+    cfg: ModelConfig,
+    positions,
+    mode: str = "train",
+    caches: dict | None = None,
+    pos=None,
+):
+    """Decoder pass. mode train/prefill: full seq; decode: one token."""
+    s = tok_embeds.shape[1]
+    if mode == "decode":
+        pe = jnp.take(params["dec_pos"], pos[:, None], axis=0).astype(tok_embeds.dtype)
+    else:
+        pe = params["dec_pos"][None, :s].astype(tok_embeds.dtype)
+    x = tok_embeds + pe
+
+    def body(carry, layer_in):
+        xc = carry
+        lp, lc = layer_in
+        h = apply_norm(lp["norm1"], xc, cfg)
+        if mode == "train":
+            a = attn.gqa_train(lp["attn"], h, cfg, positions)
+            new_self = lc["self"] if lc else None
+        elif mode == "prefill":
+            a, new_self = attn.gqa_prefill(lp["attn"], h, cfg, positions, lc["self"])
+        else:
+            a, new_self = attn.gqa_decode(lp["attn"], h, cfg, pos, lc["self"])
+        xc = xc + a
+        hx = apply_norm(lp["norm_x"], xc, cfg)
+        if mode == "train":
+            ek = attn.encode_cross_kv(lp["xattn"], enc_out, cfg)
+            new_cross = lc["cross"] if lc else None
+        elif mode == "prefill":
+            ek = attn.encode_cross_kv(lp["xattn"], enc_out, cfg)
+            new_cross = {
+                "k": ek[0].astype(lc["cross"]["k"].dtype),
+                "v": ek[1].astype(lc["cross"]["v"].dtype),
+            }
+        else:
+            ek = (lc["cross"]["k"].astype(xc.dtype), lc["cross"]["v"].astype(xc.dtype))
+            new_cross = lc["cross"]
+        xc = xc + attn.cross_attention(lp["xattn"], hx, ek, cfg)
+        xc = xc + apply_mlp(lp["mlp"], apply_norm(lp["norm2"], xc, cfg), cfg)
+        nc = {"self": new_self, "cross": new_cross} if lc is not None else None
+        return xc, nc
+
+    if caches is None:
+        x, _ = lax.scan(lambda c, lp: body(c, (lp, None)), x, params["decoder"])
+        return x, None
+    layer_caches = {
+        "self": caches["self"],
+        "cross": caches["cross"],
+    }
+    x, ncs = lax.scan(body, x, (params["decoder"], layer_caches))
+    return x, {"self": ncs["self"], "cross": ncs["cross"]}

@@ -1,0 +1,61 @@
+"""Activation-sharding hints — logical constraints on intermediate tensors.
+
+XLA's sharding propagation occasionally parks a big activation as
+replicated (e.g. after a gather from a 2-D-sharded embedding), and every
+subsequent layer pays collective traffic to re-materialize it. Launchers
+install the batch layout here; the model stacks pin their layer carries
+to it with ``constrain_batch`` — the standard "logical axis annotation"
+discipline. No mesh in context / no hints installed → identity.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_HINTS: dict = {}
+
+
+def set_hints(**kw) -> None:
+    _HINTS.update({k: v for k, v in kw.items() if v is not None})
+
+
+def clear_hints() -> None:
+    _HINTS.clear()
+
+
+def get_hint(name: str):
+    return _HINTS.get(name)
+
+
+def constrain_batch(x: jax.Array) -> jax.Array:
+    """Pin the leading (batch) dim to the installed batch axes."""
+    spec = _HINTS.get("batch")
+    if spec is None or x.ndim == 0:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, P(spec, *([None] * (x.ndim - 1)))
+        )
+    except (ValueError, TypeError, RuntimeError):
+        return x  # no mesh in context (local run)
+
+
+def constrain_heads(x: jax.Array) -> jax.Array:
+    """Pin a (B, S, H, hd) tensor to batch×head sharding (TP attention).
+
+    Applied to q/k/v once per layer so the chunked-attention inner loop
+    is shard-local per head — without it XLA re-gathers K/V every chunk
+    iteration. Skipped unless H divides the head axis size.
+    """
+    hint = _HINTS.get("heads_axis")
+    if hint is None or x.ndim != 4:
+        return x
+    axis, size = hint
+    if x.shape[2] % size != 0:
+        return x
+    batch = _HINTS.get("batch")
+    try:
+        return jax.lax.with_sharding_constraint(x, P(batch, None, axis, None))
+    except (ValueError, TypeError, RuntimeError):
+        return x

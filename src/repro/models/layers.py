@@ -1,0 +1,148 @@
+"""Shared neural layers: norms, embeddings, rotary variants, MLPs.
+
+All math accumulates in float32 and casts back to the activation dtype
+(bf16 on TPU); schemas declare logical axes for the sharding rules.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec
+
+
+# ---------------- norms -----------------------------------------------------
+def norm_schema(cfg: ModelConfig) -> dict:
+    d = {"scale": ParamSpec((cfg.d_model,), ("embed",), "ones")}
+    if cfg.norm == "layernorm":
+        d["bias"] = ParamSpec((cfg.d_model,), ("embed",), "zeros")
+    return d
+
+
+def apply_norm(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = (xf * xf).mean(-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------- embeddings -------------------------------------------------
+def embed_schema(cfg: ModelConfig) -> dict:
+    return {"w": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"))}
+
+
+def apply_embed(p: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["w"], tokens, axis=0)
+
+
+def unembed_schema(cfg: ModelConfig) -> dict:
+    return {"w": ParamSpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"))}
+
+
+def apply_unembed(p: dict, x: jax.Array) -> jax.Array:
+    # f32 logits — the loss is computed in f32
+    return jnp.einsum(
+        "...d,dv->...v", x.astype(jnp.float32), p["w"].astype(jnp.float32)
+    )
+
+
+def sinusoidal_positions(n: int, d: int) -> jax.Array:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10_000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(angle), jnp.cos(angle)], axis=-1)
+
+
+# ---------------- rotary -----------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32.
+
+    Pairs are (even, odd) interleaved — the llama convention.
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    o1 = x1 * cos - x2 * sin
+    o2 = x1 * sin + x2 * cos
+    out = jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array, positions3: jax.Array, theta: float, sections=(2, 1, 1)
+) -> jax.Array:
+    """Multimodal RoPE (qwen2-vl): head_dim split into (t, h, w) sections.
+
+    positions3: (3, ..., seq) int32 — temporal/height/width position ids.
+    ``sections`` are relative fractions of the rotary half-dim.
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    tot = sum(sections)
+    cuts = [half * sum(sections[: i + 1]) // tot for i in range(len(sections))]
+    freqs = rope_freqs(hd, theta)  # (half,)
+    # pick which position stream drives each frequency band
+    band = jnp.zeros((half,), jnp.int32)
+    prev = 0
+    for b, c in enumerate(cuts):
+        band = band.at[prev:c].set(b)
+        prev = c
+    # angles per band: positions3[band[j]] * freqs[j]
+    pos_sel = jnp.take(positions3, band, axis=0)  # (half, ..., seq) — axis juggling
+    pos_sel = jnp.moveaxis(pos_sel, 0, -1)  # (..., seq, half)
+    angles = pos_sel.astype(jnp.float32) * freqs
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    o1 = x1 * cos - x2 * sin
+    o2 = x1 * sin + x2 * cos
+    return jnp.stack([o1, o2], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+# ---------------- MLP --------------------------------------------------------
+def mlp_schema(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    ff = d_ff or cfg.d_ff
+    d = {
+        "up": ParamSpec((cfg.d_model, ff), ("embed", "ff")),
+        "down": ParamSpec((ff, cfg.d_model), ("ff", "embed")),
+    }
+    if cfg.mlp_gated:
+        d["gate"] = ParamSpec((cfg.d_model, ff), ("embed", "ff"))
+    return d
+
+
+def _act(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    return jax.nn.silu(x)
+
+
+def apply_mlp(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    up = jnp.einsum("...d,df->...f", x, p["up"])
+    if cfg.mlp_gated:
+        gate = jnp.einsum("...d,df->...f", x, p["gate"])
+        h = _act(gate, cfg.act) * up
+    else:
+        h = _act(up, cfg.act)
+    return jnp.einsum("...f,fd->...d", h, p["down"])

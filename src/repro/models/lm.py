@@ -1,0 +1,160 @@
+"""Top-level language model: schema, forward, loss, prefill, decode.
+
+One entry point for every assigned architecture. The *batch* dicts are:
+
+  train    {"tokens" (B,S) i32, "labels" (B,S) i32 [, "frames"/"vis_embeds",
+            "positions"]}
+  prefill  {"tokens" (B,S)} → cache + last-position logits
+  decode   {"token" (B,) i32, "pos" (B,) i32} + cache → logits + cache
+
+VLM (qwen2-vl): the patch frontend is a stub — ``vis_embeds``
+(B, S_vis, D) are precomputed and replace the first S_vis token
+embeddings; M-RoPE gets (3, B, S) position ids.
+Whisper: ``frames`` (B, T_enc, D) stub embeddings feed the encoder;
+``tokens`` are decoder inputs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec
+from repro.models.common import ParamSpec, abstract_params, init_params
+from repro.models.layers import apply_embed, apply_norm, apply_unembed, embed_schema, norm_schema, unembed_schema
+from repro.models.transformer import stack_apply, stack_cache_schema, stack_schema
+
+
+# ====================== schema ==============================================
+def model_schema(cfg: ModelConfig) -> dict:
+    d: dict = {"embed": embed_schema(cfg), "final_norm": norm_schema(cfg)}
+    if not cfg.tie_embeddings:
+        d["unembed"] = unembed_schema(cfg)
+    if cfg.is_encdec:
+        d["stack"] = encdec.encdec_stack_schema(cfg)
+    else:
+        d["stack"] = stack_schema(cfg)
+    return d
+
+
+def cache_schema_for(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    if cfg.is_encdec:
+        return encdec.encdec_cache_schema(cfg, batch, max_seq)
+    return stack_cache_schema(cfg, batch, max_seq)
+
+
+def init_model(cfg: ModelConfig, key) -> dict:
+    return init_params(model_schema(cfg), key)
+
+
+def abstract_model(cfg: ModelConfig) -> dict:
+    return abstract_params(model_schema(cfg))
+
+
+# ====================== helpers =============================================
+def _positions_for(cfg: ModelConfig, batch: dict, b: int, s: int):
+    if "positions" in batch:
+        return batch["positions"]
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    if cfg.rope_mode == "mrope":
+        return jnp.broadcast_to(pos[None], (3, b, s))
+    return pos
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch: dict):
+    x = apply_embed(params["embed"], batch["tokens"])
+    if cfg.family == "vlm" and "vis_embeds" in batch:
+        vis = batch["vis_embeds"].astype(x.dtype)
+        sv = vis.shape[1]
+        x = jnp.concatenate([vis, x[:, sv:]], axis=1)
+    return x
+
+
+def _logits(params, cfg: ModelConfig, x):
+    x = apply_norm(params["final_norm"], x, cfg)
+    if cfg.tie_embeddings:
+        w = params["embed"]["w"]
+        return jnp.einsum(
+            "...d,vd->...v", x.astype(jnp.float32), w.astype(jnp.float32)
+        )
+    return apply_unembed(params["unembed"], x)
+
+
+# ====================== forward / loss ======================================
+def forward_train(params, cfg: ModelConfig, batch: dict, remat: str = "none"):
+    """→ (logits f32 (B,S,V), aux_loss)."""
+    if cfg.is_encdec:
+        act_dtype = params["embed"]["w"].dtype
+        enc_out = encdec.encode(
+            params["stack"], batch["frames"].astype(act_dtype), cfg
+        )
+        tok = apply_embed(params["embed"], batch["tokens"])
+        b, s = batch["tokens"].shape
+        pos = _positions_for(cfg, batch, b, s)
+        x, _ = encdec.decode_train(params["stack"], tok, enc_out, cfg, pos)
+        return _logits(params, cfg, x), jnp.zeros((), jnp.float32)
+    x = _embed_inputs(params, cfg, batch)
+    b, s = batch["tokens"].shape
+    pos = _positions_for(cfg, batch, b, s)
+    x, aux, _ = stack_apply(params["stack"], x, cfg, pos, "train", remat=remat)
+    return _logits(params, cfg, x), aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, remat: str = "none", aux_weight: float = 0.01):
+    logits, aux = forward_train(params, cfg, batch, remat)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+# ====================== serving =============================================
+def prefill(params, cfg: ModelConfig, batch: dict, cache: dict):
+    """Fill the cache from a full prompt; return (logits_last (B,V), cache)."""
+    b, s = batch["tokens"].shape
+    pos = _positions_for(cfg, batch, b, s)
+    if cfg.is_encdec:
+        act_dtype = params["embed"]["w"].dtype
+        enc_out = encdec.encode(
+            params["stack"], batch["frames"].astype(act_dtype), cfg
+        )
+        tok = apply_embed(params["embed"], batch["tokens"])
+        x, cache = encdec.decode_train(
+            params["stack"], tok, enc_out, cfg, pos, mode="prefill", caches=cache
+        )
+    else:
+        x = _embed_inputs(params, cfg, batch)
+        x, _, cache = stack_apply(
+            params["stack"], x, cfg, pos, "prefill", caches=cache
+        )
+    logits = _logits(params, cfg, x[:, -1:])[:, 0]
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, token, pos, cache: dict):
+    """One token for every sequence in the batch. token/pos: (B,)."""
+    x = apply_embed(params["embed"], token[:, None])
+    if cfg.is_encdec:
+        x, cache = encdec.decode_train(
+            params["stack"], x, None, cfg, None, mode="decode", caches=cache, pos=pos
+        )
+    else:
+        dec_positions = pos[:, None]
+        if cfg.rope_mode == "mrope":
+            dec_positions = jnp.broadcast_to(
+                pos[None, :, None], (3,) + pos.shape + (1,)
+            )
+        x, _, cache = stack_apply(
+            params["stack"],
+            x,
+            cfg,
+            dec_positions,
+            "decode",
+            caches=cache,
+            pos=pos,
+        )
+    logits = _logits(params, cfg, x)[:, 0]
+    return logits, cache

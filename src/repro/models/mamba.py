@@ -1,0 +1,225 @@
+"""Mamba-2 (SSD — state-space duality) block, chunked-scan formulation.
+
+The SSD algorithm is tile-then-combine: quadratic attention-like math
+*within* a chunk, and an associative decay-weighted state carry *across*
+chunks — structurally the blocked scan from ``patterns/scan.py`` (see
+DESIGN.md §Arch-applicability: this is where the paper's tiled-pattern
+vocabulary genuinely transfers to an LM family).
+
+Decode keeps O(1) state per layer: a (nh, hd, ds) SSM state and a
+(K−1, conv_dim) conv ring — no KV cache — which is exactly why the
+long_500k cell runs for this family.
+
+Scalar-A parametrization (one decay per head), n_groups = 1 (B/C shared
+across heads), as in the released mamba2 configs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.ssm_expand * cfg.d_model
+    hd = cfg.ssm_head_dim
+    nh = di // hd
+    ds = cfg.ssm_state
+    conv_dim = di + 2 * ds
+    return di, hd, nh, ds, conv_dim
+
+
+def mamba_schema(cfg: ModelConfig) -> dict:
+    di, hd, nh, ds, conv_dim = _dims(cfg)
+    proj_out = 2 * di + 2 * ds + nh  # z, x, B, C, dt
+    return {
+        "in_proj": ParamSpec((cfg.d_model, proj_out), ("embed", "inner")),
+        "conv_w": ParamSpec((cfg.ssm_conv, conv_dim), ("conv", "inner"), "small"),
+        "conv_b": ParamSpec((conv_dim,), ("inner",), "zeros"),
+        "a_log": ParamSpec((nh,), ("heads",), "ones"),
+        "d_skip": ParamSpec((nh,), ("heads",), "ones"),
+        "dt_bias": ParamSpec((nh,), ("heads",), "zeros"),
+        "norm_scale": ParamSpec((di,), ("inner",), "ones"),
+        "out_proj": ParamSpec((di, cfg.d_model), ("inner", "embed")),
+    }
+
+
+def mamba_cache_schema(cfg: ModelConfig, batch: int) -> dict:
+    di, hd, nh, ds, conv_dim = _dims(cfg)
+    return {
+        "ssm": ParamSpec(
+            (batch, nh, hd, ds), ("batch", "heads", None, None), "zeros", jnp.float32
+        ),
+        "conv": ParamSpec(
+            (batch, cfg.ssm_conv - 1, conv_dim),
+            ("batch", None, "inner"),
+            "zeros",
+            jnp.bfloat16,
+        ),
+    }
+
+
+def _split_proj(p, x, cfg):
+    di, hd, nh, ds, conv_dim = _dims(cfg)
+    zxbcdt = jnp.einsum("bsd,dp->bsp", x, p["in_proj"])
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + conv_dim]
+    dt_raw = zxbcdt[..., di + conv_dim :]
+    return z, xbc, dt_raw
+
+
+def _causal_conv(p, xbc, cfg, prev: jax.Array | None = None):
+    """Depthwise causal conv over the sequence; ``prev`` = last K−1 inputs."""
+    k = cfg.ssm_conv
+    if prev is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = prev.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = jnp.zeros_like(xbc)
+    for i in range(k):
+        w = p["conv_w"][i]
+        out = out + w * lax.slice_in_dim(xp, i, i + xbc.shape[1], axis=1)
+    out = jax.nn.silu(out + p["conv_b"])
+    new_prev = xp[:, -(k - 1) :] if k > 1 else xp[:, :0]
+    return out, new_prev
+
+
+def _gated_norm(p, y, z, cfg):
+    di = y.shape[-1]
+    g = y * jax.nn.silu(z)
+    ms = (g.astype(jnp.float32) ** 2).mean(-1, keepdims=True)
+    out = g.astype(jnp.float32) * lax.rsqrt(ms + cfg.norm_eps)
+    return (out * p["norm_scale"].astype(jnp.float32)).astype(y.dtype)
+
+
+def ssd_chunked(xh, bmat, cmat, dt, a, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    xh:   (B, S, nh, hd)   inputs per head
+    bmat: (B, S, ds)       input gate  (shared across heads)
+    cmat: (B, S, ds)       output gate
+    dt:   (B, S, nh)       positive step sizes
+    a:    (nh,)            negative per-head decay rate
+    h0:   optional (B, nh, hd, ds) initial state
+    Returns (y (B,S,nh,hd), h_final).
+    """
+    b, s, nh, hd = xh.shape
+    ds = bmat.shape[-1]
+    s_true = s
+    if chunk <= 0:
+        raise ValueError(f"chunk must be positive, got {chunk}")
+    pad = (-s) % chunk
+    if pad:
+        # dt=0 padding steps are exact identities: decay exp(0)=1 and the
+        # input contribution carries a dt factor — state is untouched.
+        zpad = lambda z: jnp.pad(z, [(0, 0), (0, pad)] + [(0, 0)] * (z.ndim - 2))
+        xh, bmat, cmat, dt = zpad(xh), zpad(bmat), zpad(cmat), zpad(dt)
+        s = s + pad
+    nc = s // chunk
+    f32 = jnp.float32
+
+    xh = xh.astype(f32).reshape(b, nc, chunk, nh, hd)
+    bm = bmat.astype(f32).reshape(b, nc, chunk, ds)
+    cm = cmat.astype(f32).reshape(b, nc, chunk, ds)
+    dt = dt.astype(f32).reshape(b, nc, chunk, nh)
+
+    da = dt * a  # (b, nc, q, nh) log-decay per step
+    cum = jnp.cumsum(da, axis=2)  # inclusive within chunk
+
+    # intra-chunk: scores_{ij} = C_i·B_j · exp(cum_i − cum_j) · dt_j (i ≥ j)
+    scores = jnp.einsum("bnqd,bnkd->bnqk", cm, bm)  # (b,nc,q,q)
+    ii = jnp.arange(chunk)
+    tri = ii[:, None] >= ii[None, :]
+    decay = jnp.exp(
+        jnp.clip(cum[:, :, :, None, :] - cum[:, :, None, :, :], -60.0, 0.0)
+    )  # (b,nc,q,q,nh)
+    w = scores[..., None] * decay * jnp.where(tri[None, None, :, :, None], 1.0, 0.0)
+    y_intra = jnp.einsum("bnqkh,bnkh,bnkhp->bnqhp", w, dt, xh)
+
+    # chunk summary state: S_c = Σ_j exp(cum_Q − cum_j)·dt_j·(x_j ⊗ B_j)
+    tail = jnp.exp(jnp.clip(cum[:, :, -1:, :] - cum, -60.0, 0.0))  # (b,nc,q,nh)
+    su = jnp.einsum("bnqh,bnqh,bnqhp,bnqd->bnhpd", tail, dt, xh, bm)
+    chunk_decay = jnp.exp(jnp.clip(cum[:, :, -1, :], -60.0, None))  # (b,nc,nh)
+
+    # carry across chunks (sequential scan over nc — the blocked-scan carry)
+    def step(h, inputs):
+        s_c, dec = inputs  # (b,nh,hd,ds), (b,nh)
+        h_out = h  # state BEFORE this chunk
+        h_new = dec[:, :, None, None] * h + s_c
+        return h_new, h_out
+
+    init = (
+        jnp.zeros((b, nh, hd, ds), f32)
+        if h0 is None
+        else h0.astype(f32)
+    )
+    su_t = jnp.moveaxis(su, 1, 0)  # (nc, b, nh, hd, ds)
+    dec_t = jnp.moveaxis(chunk_decay, 1, 0)  # (nc, b, nh)
+    h_final, h_prevs = lax.scan(step, init, (su_t, dec_t))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)  # (b, nc, nh, hd, ds)
+
+    # inter-chunk: y_i += C_i · exp(cum_i) · h_in
+    grow = jnp.exp(jnp.clip(cum, -60.0, None))  # (b,nc,q,nh)
+    y_inter = jnp.einsum("bnqd,bnhpd,bnqh->bnqhp", cm, h_prevs, grow)
+
+    y = (y_intra + y_inter).reshape(b, s, nh, hd)
+    return y[:, :s_true], h_final
+
+
+def mamba_block(
+    p: dict, x: jax.Array, cfg: ModelConfig, cache: dict | None = None
+):
+    """Full mamba2 mixer for train/prefill. x: (B,S,D) → (B,S,D)[, cache]."""
+    di, hd, nh, ds, conv_dim = _dims(cfg)
+    b, s, _ = x.shape
+    z, xbc, dt_raw = _split_proj(p, x, cfg)
+    prev = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(p, xbc, cfg, prev)
+    xs = xbc[..., :di].reshape(b, s, nh, hd)
+    bmat = xbc[..., di : di + ds]
+    cmat = xbc[..., di + ds :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    h0 = cache["ssm"] if cache is not None else None
+    y, h_final = ssd_chunked(xs, bmat, cmat, dt, a, cfg.ssm_chunk, h0)
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xs.astype(
+        jnp.float32
+    )
+    y = y.reshape(b, s, di).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", _gated_norm(p, y, z, cfg), p["out_proj"])
+    if cache is not None:
+        return out, {"ssm": h_final, "conv": new_conv.astype(cache["conv"].dtype)}
+    return out
+
+
+def mamba_decode(p: dict, x: jax.Array, cfg: ModelConfig, cache: dict):
+    """One-token step. x: (B,1,D); cache: {ssm (B,nh,hd,ds), conv (B,K−1,c)}."""
+    di, hd, nh, ds, conv_dim = _dims(cfg)
+    b = x.shape[0]
+    z, xbc, dt_raw = _split_proj(p, x, cfg)  # (B,1,·)
+    window = jnp.concatenate([cache["conv"].astype(xbc.dtype), xbc], axis=1)
+    conv = (window * p["conv_w"][None]).sum(axis=1, keepdims=True) + p["conv_b"]
+    xbc = jax.nn.silu(conv)  # (B,1,conv_dim)
+    xs = xbc[..., :di].reshape(b, nh, hd)
+    bmat = xbc[:, 0, di : di + ds]
+    cmat = xbc[:, 0, di + ds :]
+    dt = jax.nn.softplus(
+        dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )  # (B, nh)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dec = jnp.exp(dt * a)  # (B, nh)
+    h = cache["ssm"]
+    h = dec[:, :, None, None] * h + jnp.einsum(
+        "bh,bhp,bd->bhpd", dt, xs.astype(jnp.float32), bmat.astype(jnp.float32)
+    )
+    y = jnp.einsum("bd,bhpd->bhp", cmat.astype(jnp.float32), h)
+    y = y + p["d_skip"].astype(jnp.float32)[None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", _gated_norm(p, y, z, cfg), p["out_proj"])
+    new_cache = {"ssm": h, "conv": window[:, 1:].astype(cache["conv"].dtype)}
+    return out, new_cache

@@ -1,0 +1,315 @@
+"""Decoder stacks: dense / MoE / SSM / hybrid, scanned over layers.
+
+Layer params are stacked on a leading "layers" axis and iterated with
+``lax.scan`` — compile time is O(1) in depth (61-layer deepseek compiles
+the same HLO as 2-layer smoke configs). Heterogeneous stacks:
+
+  * deepseek: ``first_dense_layers`` unscanned dense blocks, then a
+    scanned uniform MoE remainder;
+  * jamba: scanned *superblocks* of ``attn_every`` layers (7 mamba + 1
+    attn; MoE on every 2nd layer) — one template, 9 repetitions.
+
+Remat policy is applied per scanned block ("full" = nothing saveable,
+"selective" = save only matmul outputs with batch dims).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba as mb
+from repro.models.common import ParamSpec, stack_layer_schema
+from repro.models.layers import apply_mlp, apply_norm, mlp_schema, norm_schema
+from repro.models.moe import moe_ffn, moe_schema
+
+
+# --------------------------------------------------------------------------
+def _remat(fn, mode: str):
+    if mode == "none":
+        return fn
+    if mode == "full":
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return jax.checkpoint(
+        fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    )
+
+
+# ====================== single blocks =======================================
+def attn_block_schema(cfg: ModelConfig, ffn: str) -> dict:
+    d = {
+        "norm1": norm_schema(cfg),
+        "attn": attn.attn_schema(cfg),
+        "norm2": norm_schema(cfg),
+    }
+    if ffn == "dense":
+        d["mlp"] = mlp_schema(cfg)
+    elif ffn == "moe":
+        d["moe"] = moe_schema(cfg)
+    return d
+
+
+def mamba_block_schema(cfg: ModelConfig, ffn: str) -> dict:
+    d = {"norm1": norm_schema(cfg), "mamba": mb.mamba_schema(cfg)}
+    if ffn != "none":
+        d["norm2"] = norm_schema(cfg)
+        if ffn == "dense":
+            d["mlp"] = mlp_schema(cfg)
+        else:
+            d["moe"] = moe_schema(cfg)
+    return d
+
+
+def apply_attn_block(
+    p, x, cfg, positions, ffn: str, mode: str, cache=None, pos=None
+):
+    """mode: train | prefill | decode. Returns (x, aux, new_cache)."""
+    h = apply_norm(p["norm1"], x, cfg)
+    if cfg.attention == "mla":
+        if mode == "train":
+            a = attn.mla_train(p["attn"], h, cfg, positions)
+            new_cache = cache
+        elif mode == "prefill":
+            a, new_cache = attn.mla_train(p["attn"], h, cfg, positions, cache)
+        else:
+            a, new_cache = attn.mla_decode(p["attn"], h, cfg, pos, cache)
+    else:
+        if mode == "train":
+            a = attn.gqa_train(p["attn"], h, cfg, positions)
+            new_cache = cache
+        elif mode == "prefill":
+            a, new_cache = attn.gqa_prefill(p["attn"], h, cfg, positions, cache)
+        else:
+            a, new_cache = attn.gqa_decode(p["attn"], h, cfg, pos, cache)
+    from repro.models.hints import constrain_batch as _cb
+
+    x = _cb(x + a)
+    aux = jnp.zeros((), jnp.float32)
+    if ffn == "dense":
+        x = x + apply_mlp(p["mlp"], apply_norm(p["norm2"], x, cfg), cfg)
+    elif ffn == "moe":
+        mo, aux = moe_ffn(p["moe"], apply_norm(p["norm2"], x, cfg), cfg)
+        x = x + mo
+    return x, aux, new_cache
+
+
+def apply_mamba_block(p, x, cfg, ffn: str, mode: str, cache=None):
+    h = apply_norm(p["norm1"], x, cfg)
+    if mode == "decode":
+        m, new_cache = mb.mamba_decode(p["mamba"], h, cfg, cache)
+    elif mode == "prefill":
+        m, new_cache = mb.mamba_block(p["mamba"], h, cfg, cache)
+    else:
+        m = mb.mamba_block(p["mamba"], h, cfg)
+        new_cache = cache
+    x = x + m
+    aux = jnp.zeros((), jnp.float32)
+    if ffn == "dense":
+        x = x + apply_mlp(p["mlp"], apply_norm(p["norm2"], x, cfg), cfg)
+    elif ffn == "moe":
+        mo, aux = moe_ffn(p["moe"], apply_norm(p["norm2"], x, cfg), cfg)
+        x = x + mo
+    return x, aux, new_cache
+
+
+# ====================== stacks ==============================================
+def _layer_plan(cfg: ModelConfig) -> list[dict]:
+    """Describe every layer: mixer + ffn kind. Used by hybrid/moe layouts."""
+    plan = []
+    for i in range(cfg.n_layers):
+        if cfg.family == "ssm":
+            plan.append({"mixer": "mamba", "ffn": "none"})
+        elif cfg.family == "hybrid":
+            mixer = "attn" if (i % cfg.attn_every) == cfg.attn_every // 2 else "mamba"
+            ffn = "moe" if (i % max(cfg.moe_every, 1)) == 1 else "dense"
+            plan.append({"mixer": mixer, "ffn": ffn})
+        elif cfg.is_moe:
+            ffn = "dense" if i < cfg.first_dense_layers else "moe"
+            plan.append({"mixer": "attn", "ffn": ffn})
+        else:
+            plan.append({"mixer": "attn", "ffn": "dense"})
+    return plan
+
+
+def stack_schema(cfg: ModelConfig) -> dict:
+    if cfg.family == "hybrid":
+        per = cfg.attn_every
+        n_super = cfg.n_layers // per
+        plan = _layer_plan(cfg)[:per]
+        tpl = {
+            f"l{j}": (
+                attn_block_schema(cfg, plan[j]["ffn"])
+                if plan[j]["mixer"] == "attn"
+                else mamba_block_schema(cfg, plan[j]["ffn"])
+            )
+            for j in range(per)
+        }
+        return {"super": stack_layer_schema(tpl, n_super)}
+    if cfg.family == "ssm":
+        return {
+            "blocks": stack_layer_schema(mamba_block_schema(cfg, "none"), cfg.n_layers)
+        }
+    if cfg.is_moe:
+        k = cfg.first_dense_layers
+        d: dict = {}
+        if k:
+            d["head_blocks"] = [attn_block_schema(cfg, "dense") for _ in range(k)]
+        d["blocks"] = stack_layer_schema(
+            attn_block_schema(cfg, "moe"), cfg.n_layers - k
+        )
+        return d
+    return {
+        "blocks": stack_layer_schema(attn_block_schema(cfg, "dense"), cfg.n_layers)
+    }
+
+
+def stack_cache_schema(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    """Cache tree matching stack_schema's scan layout."""
+    if cfg.family == "hybrid":
+        per = cfg.attn_every
+        n_super = cfg.n_layers // per
+        plan = _layer_plan(cfg)[:per]
+        tpl = {
+            f"l{j}": (
+                attn.cache_schema(cfg, batch, max_seq)
+                if plan[j]["mixer"] == "attn"
+                else mb.mamba_cache_schema(cfg, batch)
+            )
+            for j in range(per)
+        }
+        return {"super": stack_layer_schema(tpl, n_super)}
+    if cfg.family == "ssm":
+        return {
+            "blocks": stack_layer_schema(
+                mb.mamba_cache_schema(cfg, batch), cfg.n_layers
+            )
+        }
+    if cfg.is_moe:
+        k = cfg.first_dense_layers
+        d = {}
+        if k:
+            d["head_blocks"] = [attn.cache_schema(cfg, batch, max_seq) for _ in range(k)]
+        d["blocks"] = stack_layer_schema(
+            attn.cache_schema(cfg, batch, max_seq), cfg.n_layers - k
+        )
+        return d
+    return {
+        "blocks": stack_layer_schema(
+            attn.cache_schema(cfg, batch, max_seq), cfg.n_layers
+        )
+    }
+
+
+def _apply_super(p, x, cfg, positions, plan, mode, cache, pos):
+    """One hybrid superblock (dict of heterogeneous layers)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = {} if cache is not None else None
+    for j, spec in enumerate(plan):
+        key = f"l{j}"
+        c = cache[key] if cache is not None else None
+        if spec["mixer"] == "attn":
+            x, a, nc = apply_attn_block(
+                p[key], x, cfg, positions, spec["ffn"], mode, c, pos
+            )
+        else:
+            x, a, nc = apply_mamba_block(p[key], x, cfg, spec["ffn"], mode, c)
+        aux = aux + a
+        if new_cache is not None:
+            new_cache[key] = nc
+    return x, aux, new_cache
+
+
+def stack_apply(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions,
+    mode: str = "train",
+    caches: dict | None = None,
+    pos=None,
+    remat: str = "none",
+):
+    """Run the full decoder stack. Returns (x, aux_loss, new_caches)."""
+    total_aux = jnp.zeros((), jnp.float32)
+    new_caches: dict = {}
+
+    from repro.models.hints import constrain_batch
+
+    x = constrain_batch(x)
+
+    def scan_blocks(stacked_params, x, apply_one, stacked_cache):
+        def body(carry, layer_in):
+            xc, aux = carry
+            lp, lc = layer_in
+            xo, a, nc = apply_one(lp, xc, lc)
+            xo = constrain_batch(xo)
+            return (xo, aux + a), nc
+
+        body = _remat(body, remat)
+        if stacked_cache is None:
+            # give scan a None-free xs tree
+            (x, aux), _ = lax.scan(
+                lambda c, lp: body(c, (lp, None)), (x, jnp.zeros((), jnp.float32)),
+                stacked_params,
+            )
+            return x, aux, None
+        (x, aux), ncs = lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), (stacked_params, stacked_cache)
+        )
+        return x, aux, ncs
+
+    if cfg.family == "hybrid":
+        plan = _layer_plan(cfg)[: cfg.attn_every]
+
+        def one_super(p, xc, c):
+            return _apply_super(p, xc, cfg, positions, plan, mode, c, pos)
+
+        x, aux, nc = scan_blocks(
+            params["super"], x, one_super, caches["super"] if caches else None
+        )
+        total_aux += aux
+        if caches is not None:
+            new_caches["super"] = nc
+    elif cfg.family == "ssm":
+
+        def one(p, xc, c):
+            return apply_mamba_block(p, xc, cfg, "none", mode, c)
+
+        x, aux, nc = scan_blocks(
+            params["blocks"], x, one, caches["blocks"] if caches else None
+        )
+        total_aux += aux
+        if caches is not None:
+            new_caches["blocks"] = nc
+    else:
+        if "head_blocks" in params:
+            hb_caches = caches.get("head_blocks") if caches else None
+            new_hb = []
+            for i, hp in enumerate(params["head_blocks"]):
+                c = hb_caches[i] if hb_caches else None
+                x, a, nc = apply_attn_block(
+                    hp, x, cfg, positions, "dense", mode, c, pos
+                )
+                total_aux += a
+                new_hb.append(nc)
+            if caches is not None:
+                new_caches["head_blocks"] = new_hb
+        ffn = "moe" if cfg.is_moe else "dense"
+
+        def one(p, xc, c):
+            return apply_attn_block(p, xc, cfg, positions, ffn, mode, c, pos)
+
+        x, aux, nc = scan_blocks(
+            params["blocks"], x, one, caches["blocks"] if caches else None
+        )
+        total_aux += aux
+        if caches is not None:
+            new_caches["blocks"] = nc
+
+    return x, total_aux, (new_caches if caches is not None else None)

@@ -1,0 +1,18 @@
+from repro.optim.adamw import (
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    init_opt_state,
+    lr_at,
+)
+from repro.optim.compress import compress_grads_ef, init_error_state
+
+__all__ = [
+    "adamw_update",
+    "clip_by_global_norm",
+    "global_norm",
+    "init_opt_state",
+    "lr_at",
+    "compress_grads_ef",
+    "init_error_state",
+]

@@ -1,0 +1,18 @@
+from repro.roofline.analysis import (
+    COLLECTIVE_OPS,
+    RooflineReport,
+    analyze,
+    collective_bytes_from_text,
+)
+from repro.roofline.model_flops import active_params, model_flops
+from repro.roofline import hw
+
+__all__ = [
+    "COLLECTIVE_OPS",
+    "RooflineReport",
+    "analyze",
+    "collective_bytes_from_text",
+    "active_params",
+    "model_flops",
+    "hw",
+]

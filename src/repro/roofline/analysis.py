@@ -1,0 +1,309 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+Three terms per (arch × shape × mesh), in seconds:
+
+  compute    = per_device_FLOPs / peak_FLOP/s
+  memory     = per_device_bytes_accessed / HBM_bw
+  collective = per_device_collective_operand_bytes / link_bw
+
+``compiled.cost_analysis()`` runs on the SPMD-partitioned module, so its
+flops/bytes are per-device. Collective bytes are not in cost_analysis —
+we parse ``compiled.as_text()`` (post-partitioning HLO: shapes are
+per-device) and sum operand bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute. Dividing by ICI link
+bandwidth approximates each chip's serialized send time (ring/all-to-all
+overlap across the 4 ICI links of a v5e chip is a refinement the §Perf
+iterations discuss per-case).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+from repro.roofline import hw
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+    "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _group_size(stripped: str) -> int:
+    m = _GROUPS_RE.search(stripped)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(stripped)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 1
+
+
+def _result_bytes(stripped: str, op: str) -> int:
+    """Result-shape bytes: the segment between '=' and the op token.
+
+    (-start ops return (input, output) tuples — the max shape is the
+    gathered/reduced output, which is what the wire model needs.)
+    """
+    eq = stripped.find("=")
+    at = stripped.find(" " + op)
+    if eq < 0 or at < 0 or at < eq:
+        return 0
+    seg = stripped[eq + 1 : at]
+    shapes = [_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(seg)]
+    return max(shapes) if shapes else 0
+
+
+def _wire_bytes(op: str, result_bytes: int, group: int) -> float:
+    """Per-device bytes on ICI links, ring algorithms."""
+    g = max(group, 1)
+    frac = (g - 1) / g
+    if op == "all-reduce":
+        return 2.0 * result_bytes * frac  # reduce-scatter + all-gather phases
+    if op == "all-gather":
+        return result_bytes * frac  # receives everyone else's shard
+    if op == "reduce-scatter":
+        return result_bytes * (g - 1)  # operand = result × g
+    if op == "all-to-all":
+        return result_bytes * frac
+    return float(result_bytes)  # collective-permute
+
+
+def _match_collective(stripped: str) -> str | None:
+    m = re.search(r"=\s*(?:\([^)]*\)|\S+)\s+([a-z0-9-]+)", stripped)
+    if not m:
+        return None
+    op = m.group(1)
+    for k in COLLECTIVE_OPS:
+        if op == k or op == k + "-start":
+            return k
+    return None
+
+
+_COMP_START = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=\s*%?([\w.\-]+).*?body=\s*%?([\w.\-]+)", re.S
+)
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> dict:
+    """computation name → list of its body lines (flat, depth-1 braces)."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    depth = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if cur is None:
+            m = _COMP_START.match(s)
+            if m and "{" in s:
+                cur = m.group(1)
+                comps[cur] = []
+                depth = s.count("{") - s.count("}")
+                if depth <= 0:
+                    cur = None
+            continue
+        depth += s.count("{") - s.count("}")
+        comps[cur].append(s)
+        if depth <= 0:
+            cur = None
+    return comps
+
+
+def collective_bytes_from_text(hlo_text: str, loop_aware: bool = True) -> dict:
+    """Per collective kind: total operand bytes (per-device shapes).
+
+    ``loop_aware`` multiplies collectives inside while-loop bodies by the
+    loop trip count (largest integer constant compared in the loop's
+    condition computation — lax.scan lowers its length there). Without
+    this, a 61-layer scanned stack's per-layer collectives count once.
+    """
+    comps = _split_computations(hlo_text)
+
+    # per-computation collective wire bytes
+    comp_bytes: dict[str, dict] = {}
+    for name, lines in comps.items():
+        agg = {k: 0.0 for k in COLLECTIVE_OPS}
+        cnt = {k: 0 for k in COLLECTIVE_OPS}
+        for s in lines:
+            base = _match_collective(s)
+            if base:
+                rb = _result_bytes(s, base if base in s else base + "-start")
+                agg[base] += _wire_bytes(base, rb, _group_size(s))
+                cnt[base] += 1
+        comp_bytes[name] = {"bytes": agg, "counts": cnt}
+
+    # while nesting: body comp → (parent comp, trip count)
+    parents: dict[str, tuple[str, int]] = {}
+    for name, lines in comps.items():
+        for s in lines:
+            if "while(" not in s:
+                continue
+            m = _WHILE_RE.search(s)
+            if not m:
+                continue
+            cond, body = m.group(1), m.group(2)
+            trip = 1
+            if loop_aware and cond in comps:
+                consts = [int(c) for c in _CONST_RE.findall("\n".join(comps[cond]))]
+                big = [c for c in consts if c > 1]
+                if big:
+                    trip = max(big)
+            parents[body] = (name, trip)
+
+    def multiplier(name: str, depth: int = 0) -> int:
+        if depth > 16 or name not in parents:
+            return 1
+        parent, trip = parents[name]
+        return trip * multiplier(parent, depth + 1)
+
+    out = {k: 0 for k in COLLECTIVE_OPS}
+    counts = {k: 0 for k in COLLECTIVE_OPS}
+    loops = {}
+    for name, info in comp_bytes.items():
+        mult = multiplier(name)
+        has_coll = any(info["counts"][k] for k in COLLECTIVE_OPS)
+        if mult > 1 and has_coll:
+            loops[name] = {
+                "mult": mult,
+                "bytes": sum(info["bytes"][k] for k in COLLECTIVE_OPS),
+            }
+        for k in COLLECTIVE_OPS:
+            out[k] += info["bytes"][k] * mult
+            counts[k] += info["counts"][k] * mult
+    out["_counts"] = counts
+    out["_loops"] = loops
+    return out
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    # artifact numbers (scan bodies counted once — cross-checks)
+    raw_hlo_flops_per_dev: float
+    raw_hlo_bytes_per_dev: float
+    raw_collective_bytes_per_dev: float
+    # loop-corrected / analytic numbers (the table)
+    flops_per_dev: float
+    hbm_bytes_per_dev: float
+    collective_bytes_per_dev: float
+    collective_detail: dict
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_global: float
+    useful_ratio: float  # MODEL_FLOPS / (flops × devices)
+    mem_per_dev_bytes: float | None
+    fits_hbm: bool | None
+    note: str = ""
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def analyze(
+    compiled,
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    n_devices: int,
+    model_flops_global: float,
+    analytic_flops_global: float | None = None,
+    analytic_bytes_per_dev: float | None = None,
+    note: str = "",
+) -> RooflineReport:
+    cost = compiled.cost_analysis() or {}
+    raw_flops = float(cost.get("flops", 0.0))
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
+    text = compiled.as_text()
+    coll_raw = collective_bytes_from_text(text, loop_aware=False)
+    coll = collective_bytes_from_text(text, loop_aware=True)
+    _aux = ("_counts", "_loops")
+    raw_coll = float(sum(v for k, v in coll_raw.items() if k not in _aux))
+    coll_bytes = float(sum(v for k, v in coll.items() if k not in _aux))
+
+    flops_per_dev = (
+        analytic_flops_global / n_devices
+        if analytic_flops_global
+        else raw_flops
+    )
+    hbm_per_dev = analytic_bytes_per_dev if analytic_bytes_per_dev else raw_bytes
+
+    compute_s = flops_per_dev / hw.PEAK_FLOPS_BF16
+    memory_s = hbm_per_dev / hw.HBM_BW
+    collective_s = coll_bytes / hw.ICI_BW
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", collective_s),
+        key=lambda kv: kv[1],
+    )[0]
+
+    mem_stats = compiled.memory_analysis()
+    mem_per_dev = None
+    fits = None
+    if mem_stats is not None:
+        mem_per_dev = float(
+            getattr(mem_stats, "argument_size_in_bytes", 0)
+            + getattr(mem_stats, "output_size_in_bytes", 0)
+            + getattr(mem_stats, "temp_size_in_bytes", 0)
+            - getattr(mem_stats, "alias_size_in_bytes", 0)
+        )
+        fits = mem_per_dev <= hw.CHIP_HBM_BYTES
+
+    useful = (
+        model_flops_global / (flops_per_dev * n_devices)
+        if flops_per_dev > 0
+        else 0.0
+    )
+    return RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        n_devices=n_devices,
+        raw_hlo_flops_per_dev=raw_flops,
+        raw_hlo_bytes_per_dev=raw_bytes,
+        raw_collective_bytes_per_dev=raw_coll,
+        flops_per_dev=flops_per_dev,
+        hbm_bytes_per_dev=hbm_per_dev,
+        collective_bytes_per_dev=coll_bytes,
+        collective_detail=coll,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops_global=model_flops_global,
+        useful_ratio=useful,
+        mem_per_dev_bytes=mem_per_dev,
+        fits_hbm=fits,
+        note=note,
+    )

@@ -1,0 +1,6 @@
+"""TPU v5e hardware model (the assignment's constants)."""
+
+PEAK_FLOPS_BF16 = 197e12  # per chip, bf16
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+CHIP_HBM_BYTES = 16 * 1024**3  # 16 GiB v5e

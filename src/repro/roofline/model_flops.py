@@ -1,0 +1,112 @@
+"""Analytic MODEL_FLOPS = 6·N_active·tokens (2·N_active for inference).
+
+N_active follows the standard convention: all weights a token's forward
+touches (unembed matmul included, embedding *lookup* excluded; MoE expert
+weights scaled by the routed fraction (top_k + shared)/1). Attention's
+quadratic term is deliberately NOT included — the MODEL_FLOPS/HLO_FLOPS
+ratio in §Roofline then exposes attention + dispatch + remat overheads.
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.specs import WHISPER_DEC_LEN
+
+
+def active_params(cfg: ModelConfig) -> float:
+    D = cfg.d_model
+    n = 0.0
+
+    def attn_params() -> float:
+        if cfg.attention == "mla":
+            qk_all = cfg.qk_nope_dim + cfg.qk_rope_dim
+            q = (
+                D * cfg.q_lora_rank + cfg.q_lora_rank * cfg.n_heads * qk_all
+                if cfg.q_lora_rank
+                else D * cfg.n_heads * qk_all
+            )
+            kv = D * (cfg.kv_lora_rank + cfg.qk_rope_dim) + cfg.kv_lora_rank * (
+                cfg.n_heads * (cfg.qk_nope_dim + cfg.v_head_dim)
+            )
+            o = cfg.n_heads * cfg.v_head_dim * D
+            return q + kv + o
+        hd = cfg.hd
+        return D * cfg.n_heads * hd * 2 + D * cfg.n_kv_heads * hd * 2
+
+    def dense_mlp() -> float:
+        mult = 3 if cfg.mlp_gated else 2
+        return mult * D * cfg.d_ff
+
+    def moe_mlp() -> float:
+        ff = cfg.moe_d_ff or cfg.d_ff
+        mult = 3  # gated experts
+        active = (cfg.top_k + cfg.n_shared_experts) * mult * D * ff
+        return active + D * cfg.n_experts  # router
+
+    def mamba_params() -> float:
+        di = cfg.ssm_expand * D
+        nh = di // cfg.ssm_head_dim
+        proj = D * (2 * di + 2 * cfg.ssm_state + nh)
+        conv = cfg.ssm_conv * (di + 2 * cfg.ssm_state)
+        return proj + conv + di * D
+
+    if cfg.is_encdec:
+        # handled by encdec_split below; here return the decoder-side count
+        dec = cfg.n_layers * (attn_params() * 2 + dense_mlp())  # self + cross
+        n += dec
+    elif cfg.family == "ssm":
+        n += cfg.n_layers * mamba_params()
+    elif cfg.family == "hybrid":
+        for i in range(cfg.n_layers):
+            mixer = (
+                attn_params()
+                if (i % cfg.attn_every) == cfg.attn_every // 2
+                else mamba_params()
+            )
+            ffn = moe_mlp() if (i % max(cfg.moe_every, 1)) == 1 else dense_mlp()
+            n += mixer + ffn
+    elif cfg.is_moe:
+        n += cfg.first_dense_layers * (attn_params() + dense_mlp())
+        n += (cfg.n_layers - cfg.first_dense_layers) * (attn_params() + moe_mlp())
+    else:
+        n += cfg.n_layers * (attn_params() + dense_mlp())
+
+    n += D * cfg.vocab_size  # unembed matmul (tied or not, the matmul runs)
+    return n
+
+
+def total_params(cfg: ModelConfig) -> float:
+    """Full parameter count (for memory, not flops)."""
+    from repro.models.common import param_count
+    from repro.models.lm import model_schema
+
+    return float(param_count(model_schema(cfg)))
+
+
+def encoder_params(cfg: ModelConfig) -> float:
+    """Encoder-side active params (enc-dec only)."""
+    if not cfg.is_encdec:
+        return 0.0
+    D = cfg.d_model
+    hd = cfg.hd
+    attn = D * cfg.n_heads * hd * 2 + D * cfg.n_kv_heads * hd * 2
+    mlp = (3 if cfg.mlp_gated else 2) * D * cfg.d_ff
+    return cfg.n_enc_layers * (attn + mlp)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    n = active_params(cfg)
+    if cfg.is_encdec:
+        n_enc = encoder_params(cfg)
+        b = shape.global_batch
+        if shape.kind == "train":
+            return 6.0 * n_enc * b * shape.seq_len + 6.0 * n * b * WHISPER_DEC_LEN
+        if shape.kind == "prefill":
+            return 2.0 * n_enc * b * shape.seq_len + 2.0 * n * b * WHISPER_DEC_LEN
+        # decode: encoder already done; decoder one token each
+        return 2.0 * n * b
+    if shape.kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch

@@ -1,0 +1,45 @@
+"""Subprocess test: checkpoint saved on an 8-device mesh restores onto a
+4-device mesh (elastic rescale) with identical logical values."""
+
+import os
+
+assert "xla_force_host_platform_device_count" in os.environ.get("XLA_FLAGS", "")
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import Checkpointer
+import tempfile
+
+
+def main():
+    devs = jax.devices()
+    assert len(devs) == 8
+
+    mesh_a = jax.make_mesh((2, 4), ("data", "model"), devices=devs)
+    w = jnp.arange(64.0).reshape(8, 8)
+    sh_a = NamedSharding(mesh_a, P("data", "model"))
+    w_a = jax.device_put(w, sh_a)
+
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d)
+        ck.save(3, {"w": w_a}, blocking=True)
+
+        # elastic: restore onto a 4-device mesh (half the pod "failed")
+        mesh_b = jax.make_mesh((2, 2), ("data", "model"), devices=devs[:4])
+        sh_b = NamedSharding(mesh_b, P("data", "model"))
+        got, step = ck.restore(
+            template={"w": w}, shardings={"w": sh_b}
+        )
+        assert step == 3
+        np.testing.assert_allclose(np.asarray(got["w"]), np.asarray(w))
+        assert got["w"].sharding == sh_b
+        print("elastic restore: OK")
+
+    print("ALL-OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Subprocess test: sharded canny == oracle, on an 8-virtual-device mesh.
+
+Run with XLA_FLAGS=--xla_force_host_platform_device_count=8 (the parent
+test sets it). Verifies halo exchange, boundary patching, distributed
+hysteresis consensus, and the GCP planner end-to-end.
+"""
+
+import os
+
+assert "xla_force_host_platform_device_count" in os.environ.get("XLA_FLAGS", ""), (
+    "run me via tests/test_sharded.py"
+)
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.canny import CannyParams, canny_reference
+from repro.core.canny.golden_circle import plan, compile_plan
+from repro.core.canny.pipeline import make_canny
+from repro.core.patterns.dist import Dist
+from repro.data.images import synthetic_batch
+
+PARAMS = CannyParams(sigma=1.4, radius=2, low=0.08, high=0.2)
+
+
+def main():
+    devs = jax.devices()
+    assert len(devs) == 8, devs
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+
+    # --- batched, rows sharded 4-way, batch sharded 2-way ---------------
+    imgs = synthetic_batch(4, 128, 96, seed=11)
+    dist = Dist(mesh=mesh, batch_axes=("data",), space_axis="model")
+    out = np.asarray(make_canny(PARAMS, dist)(jnp.asarray(imgs)))
+    for i in range(imgs.shape[0]):
+        want = canny_reference(imgs[i], PARAMS)
+        assert (out[i] == want).all(), f"image {i} mismatch"
+    print("sharded batched: OK")
+
+    # --- single image, rows sharded only ---------------------------------
+    img = synthetic_batch(1, 64, 80, seed=5)[0]
+    dist1 = Dist(mesh=mesh, batch_axes=(), space_axis="model")
+    out1 = np.asarray(make_canny(PARAMS, dist1)(jnp.asarray(img)))
+    assert (out1 == canny_reference(img, PARAMS)).all()
+    print("sharded single: OK")
+
+    # --- GCP planner with a non-divisible height (pad path, exactness) ---
+    imgs2 = synthetic_batch(2, 70, 64, seed=7)  # 70 % 4 != 0
+    p = plan(2, 70, 64, PARAMS, mesh=mesh)
+    assert p.pad_rows == 2, p
+    fn = compile_plan(p)
+    out2 = np.asarray(fn(jnp.asarray(imgs2)))
+    for i in range(2):
+        want = canny_reference(imgs2[i], PARAMS)
+        assert (out2[i] == want).all(), f"padded image {i} mismatch"
+    print("gcp padded plan: OK")
+
+    # --- halo exchange unit check across pattern_scan --------------------
+    from repro.core.patterns.scan import pattern_scan
+    from jax.sharding import PartitionSpec as P
+
+    x = np.arange(32, dtype=np.float32)
+    want_scan = np.cumsum(x)
+    scan_fn = jax.jit(
+        jax.shard_map(
+            lambda xl: pattern_scan(jnp.add, xl, axis_name="model"),
+            mesh=mesh,
+            in_specs=P("model"),
+            out_specs=P("model"),
+            check_vma=False,
+        )
+    )
+    got_scan = np.asarray(scan_fn(jnp.asarray(x)))
+    np.testing.assert_allclose(got_scan, want_scan, rtol=1e-6)
+    print("distributed scan: OK")
+
+    print("ALL-OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Helper for tests that need multiple (virtual) devices.
+
+The dry-run mesh trick — XLA_FLAGS=--xla_force_host_platform_device_count
+— must not leak into the main test process (smoke tests must see 1
+device), so multi-device tests run their payload in a subprocess.
+"""
+
+from __future__ import annotations
+
+import os
+import pathlib
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def run_with_devices(script: str, n_devices: int = 8, timeout: int = 600) -> str:
+    """Run tests/subproc/<script> under n virtual devices; return stdout."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = str(REPO / "src")
+    path = REPO / "tests" / "subproc" / script
+    proc = subprocess.run(
+        [sys.executable, str(path)],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=timeout,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"{script} failed (rc={proc.returncode})\n"
+            f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr[-4000:]}"
+        )
+    return proc.stdout

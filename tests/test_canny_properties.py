@@ -1,0 +1,100 @@
+"""Hypothesis property tests on the Canny system's invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.canny import (
+    CannyParams,
+    canny_reference,
+    gaussian_reference,
+    hysteresis_reference,
+    nms_reference,
+    sobel_reference,
+)
+from repro.core.canny.gaussian import gaussian_stage
+from repro.core.canny.hysteresis import double_threshold, hysteresis_fixpoint
+from repro.core.canny.nms import nms_stage
+from repro.core.patterns.dist import StencilCtx
+from repro.data.images import synthetic_image
+
+SETTINGS = dict(max_examples=15, deadline=None)
+CTX = StencilCtx(None, "edge")
+
+
+@given(h=st.integers(8, 64), w=st.integers(8, 64), seed=st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_gaussian_preserves_mean_range(h, w, seed):
+    """Blur is an averaging filter: output within input range; a constant
+    image is a fixed point."""
+    img = synthetic_image(h, w, seed=seed)
+    p = CannyParams()
+    out = np.asarray(gaussian_stage(jnp.asarray(img), CTX, p))
+    assert out.min() >= img.min() - 1e-5
+    assert out.max() <= img.max() + 1e-5
+    const = np.full((h, w), 0.37, np.float32)
+    outc = np.asarray(gaussian_stage(jnp.asarray(const), CTX, p))
+    np.testing.assert_allclose(outc, 0.37, rtol=1e-5)
+
+
+@given(h=st.integers(8, 48), w=st.integers(8, 48), seed=st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_constant_image_has_no_edges(h, w, seed):
+    rng = np.random.default_rng(seed)
+    img = np.full((h, w), float(rng.uniform(0, 1)), np.float32)
+    assert canny_reference(img, CannyParams()).sum() == 0
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_nms_output_subset_of_magnitudes(seed):
+    """NMS only suppresses: every surviving value equals its input."""
+    rng = np.random.default_rng(seed)
+    mag = rng.uniform(0, 1, size=(24, 24)).astype(np.float32)
+    dirs = rng.integers(0, 4, size=(24, 24)).astype(np.uint8)
+    out = np.asarray(nms_stage(jnp.asarray(mag), jnp.asarray(dirs), CTX))
+    surviving = out > 0
+    np.testing.assert_array_equal(out[surviving], mag[surviving])
+
+
+@given(
+    h=st.integers(6, 32), w=st.integers(6, 32),
+    p_weak=st.floats(0.05, 0.95), seed=st.integers(0, 10_000),
+)
+@settings(**SETTINGS)
+def test_hysteresis_invariants(h, w, p_weak, seed):
+    """strong ⊆ edges ⊆ weak, monotone in thresholds, == BFS oracle."""
+    rng = np.random.default_rng(seed)
+    weak = rng.uniform(size=(h, w)) < p_weak
+    strong = weak & (rng.uniform(size=(h, w)) < 0.3)
+    got = np.asarray(
+        hysteresis_fixpoint(jnp.asarray(strong), jnp.asarray(weak), CTX)
+    ).astype(bool)
+    assert (got | ~strong).all() or (strong <= got).all()  # strong ⊆ edges
+    assert (got <= weak).all()  # edges ⊆ weak
+    # oracle equivalence on an equivalent magnitude encoding
+    mag = np.where(strong, 1.0, np.where(weak, 0.5, 0.0)).astype(np.float32)
+    want = hysteresis_reference(mag, CannyParams(low=0.4, high=0.9)).astype(bool)
+    assert (got == want).all()
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_more_permissive_thresholds_give_superset(seed):
+    img = synthetic_image(48, 48, seed=seed)
+    tight = canny_reference(img, CannyParams(low=0.15, high=0.3)).astype(bool)
+    loose = canny_reference(img, CannyParams(low=0.05, high=0.3)).astype(bool)
+    assert (tight <= loose).all()
+
+
+@given(seed=st.integers(0, 10_000), flip=st.booleans())
+@settings(**SETTINGS)
+def test_geometric_equivariance(seed, flip):
+    """Canny commutes with horizontal/vertical flips (symmetric stencils,
+    symmetric tie-breaking under >= on both neighbours)."""
+    img = synthetic_image(40, 40, seed=seed)
+    p = CannyParams(low=0.08, high=0.2)
+    a = canny_reference(img[::-1] if flip else img[:, ::-1], p)
+    b = canny_reference(img, p)
+    b = b[::-1] if flip else b[:, ::-1]
+    assert (a == b).all()

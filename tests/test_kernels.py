@@ -1,0 +1,213 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp ref oracles.
+
+Shape/dtype sweeps + hypothesis property tests, as required per kernel.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.canny import CannyParams, canny, canny_reference
+from repro.data.images import synthetic_image
+from repro.kernels.gaussian import gaussian_blur, gaussian_ref
+from repro.kernels.sobel import sobel, sobel_ref
+from repro.kernels.nms import nms, nms_ref
+from repro.kernels.hysteresis import hysteresis_from_masks, hysteresis_ref
+from repro.kernels.fused_canny import (
+    fused_canny,
+    fused_frontend,
+    fused_frontend_ref,
+)
+
+SETTINGS = dict(max_examples=12, deadline=None)
+SHAPES = [(8, 16), (33, 40), (64, 64), (128, 96), (250, 130)]
+DTYPES = [np.float32, np.float64, np.uint8]
+PARAMS = CannyParams(sigma=1.4, radius=2, low=0.08, high=0.2)
+
+
+def _img(shape, dtype, seed=0):
+    img = synthetic_image(*shape, seed=seed)
+    if dtype == np.uint8:
+        return (img * 255).astype(np.uint8)
+    return img.astype(dtype)
+
+
+# ---------------- gaussian ---------------------------------------------------
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_gaussian_kernel_sweep(shape, dtype):
+    img = _img(shape, dtype)
+    got = np.asarray(gaussian_blur(jnp.asarray(img), sigma=1.4, radius=2))
+    want = np.asarray(gaussian_ref(jnp.asarray(img), 1.4, 2))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+@given(
+    h=st.integers(6, 80),
+    w=st.integers(6, 80),
+    radius=st.integers(1, 4),
+    bh=st.sampled_from([8, 16, 32]),
+)
+@settings(**SETTINGS)
+def test_gaussian_kernel_property(h, w, radius, bh):
+    img = synthetic_image(h, w, seed=h * 97 + w)
+    got = np.asarray(
+        gaussian_blur(jnp.asarray(img), sigma=1.1, radius=radius, block_rows=bh)
+    )
+    want = np.asarray(gaussian_ref(jnp.asarray(img), 1.1, radius))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------- sobel ------------------------------------------------------
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("l2", [True, False])
+def test_sobel_kernel_sweep(shape, l2):
+    img = _img(shape, np.float32)
+    mag, dirs = sobel(jnp.asarray(img), l2_norm=l2)
+    wmag, wdirs = sobel_ref(jnp.asarray(img), l2_norm=l2)
+    np.testing.assert_allclose(np.asarray(mag), np.asarray(wmag), rtol=1e-5, atol=1e-5)
+    assert (np.asarray(dirs) == np.asarray(wdirs)).all()
+
+
+@given(h=st.integers(4, 64), w=st.integers(4, 64), seed=st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_sobel_kernel_property(h, w, seed):
+    img = synthetic_image(h, w, seed=seed)
+    mag, dirs = sobel(jnp.asarray(img), block_rows=16)
+    wmag, wdirs = sobel_ref(jnp.asarray(img))
+    np.testing.assert_allclose(np.asarray(mag), np.asarray(wmag), rtol=1e-5, atol=1e-5)
+    assert (np.asarray(dirs) == np.asarray(wdirs)).all()
+
+
+# ---------------- nms --------------------------------------------------------
+@pytest.mark.parametrize("shape", SHAPES)
+def test_nms_kernel_sweep(shape):
+    img = _img(shape, np.float32)
+    mag, dirs = sobel_ref(jnp.asarray(img))
+    got = np.asarray(nms(mag, dirs))
+    want = np.asarray(nms_ref(mag, dirs))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=0)
+
+
+@given(h=st.integers(4, 48), w=st.integers(4, 48), seed=st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_nms_kernel_property(h, w, seed):
+    rng = np.random.default_rng(seed)
+    mag = rng.uniform(0, 1, size=(h, w)).astype(np.float32)
+    dirs = rng.integers(0, 4, size=(h, w)).astype(np.uint8)
+    got = np.asarray(nms(jnp.asarray(mag), jnp.asarray(dirs), block_rows=16))
+    want = np.asarray(nms_ref(jnp.asarray(mag), jnp.asarray(dirs)))
+    np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+
+# ---------------- hysteresis -------------------------------------------------
+@pytest.mark.parametrize("shape", SHAPES)
+def test_hysteresis_kernel_sweep(shape):
+    rng = np.random.default_rng(7)
+    weak = rng.uniform(size=shape) < 0.35
+    strong = weak & (rng.uniform(size=shape) < 0.15)
+    got = np.asarray(
+        hysteresis_from_masks(jnp.asarray(strong), jnp.asarray(weak), block_rows=16)
+    )
+    want = np.asarray(hysteresis_ref(jnp.asarray(strong), jnp.asarray(weak)))
+    assert (got == want).all()
+
+
+@given(
+    h=st.integers(4, 40),
+    w=st.integers(4, 40),
+    p_weak=st.floats(0.1, 0.9),
+    seed=st.integers(0, 10_000),
+)
+@settings(**SETTINGS)
+def test_hysteresis_kernel_property(h, w, p_weak, seed):
+    """Chains through weak pixels must propagate identically to BFS."""
+    rng = np.random.default_rng(seed)
+    weak = rng.uniform(size=(h, w)) < p_weak
+    strong = weak & (rng.uniform(size=(h, w)) < 0.1)
+    got = np.asarray(
+        hysteresis_from_masks(jnp.asarray(strong), jnp.asarray(weak), block_rows=8)
+    )
+    want = np.asarray(hysteresis_ref(jnp.asarray(strong), jnp.asarray(weak)))
+    assert (got == want).all()
+
+
+def test_hysteresis_snake():
+    """Worst case: a serpentine weak path seeded at one end (crosses every
+    strip boundary many times — stresses the outer XLA loop)."""
+    h, w = 48, 17
+    weak = np.zeros((h, w), bool)
+    for r in range(h):
+        weak[r, :] = False
+        if r % 2 == 0:
+            weak[r, :] = True
+        else:
+            weak[r, -1 if (r // 2) % 2 == 0 else 0] = True
+    strong = np.zeros_like(weak)
+    strong[0, 0] = True
+    weak[0, 0] = True
+    got = np.asarray(
+        hysteresis_from_masks(jnp.asarray(strong), jnp.asarray(weak), block_rows=8)
+    )
+    want = np.asarray(hysteresis_ref(jnp.asarray(strong), jnp.asarray(weak)))
+    assert (got == want).all()
+    assert got.sum() == weak.sum()  # everything reachable
+
+
+# ---------------- fused ------------------------------------------------------
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("emit", ["nms", "code"])
+def test_fused_frontend_sweep(shape, emit):
+    img = _img(shape, np.float32)
+    got = np.asarray(
+        fused_frontend(jnp.asarray(img), 1.4, 2, 0.08, 0.2, True, emit)
+    )
+    want = np.asarray(fused_frontend_ref(jnp.asarray(img), 1.4, 2, 0.08, 0.2, True, emit))
+    if emit == "nms":
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+    else:
+        assert (got == want).mean() > 0.999  # threshold decisions at f32 noise
+
+@given(h=st.integers(8, 64), w=st.integers(8, 64), seed=st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_fused_frontend_property(h, w, seed):
+    img = synthetic_image(h, w, seed=seed)
+    got = np.asarray(
+        fused_frontend(jnp.asarray(img), 1.4, 2, 0.08, 0.2, True, "nms", 16)
+    )
+    want = np.asarray(
+        fused_frontend_ref(jnp.asarray(img), 1.4, 2, 0.08, 0.2, True, "nms")
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_fused_full_canny_vs_numpy_oracle():
+    img = synthetic_image(96, 80, seed=21)
+    got = np.asarray(fused_canny(jnp.asarray(img), 1.4, 2, 0.08, 0.2))
+    want = canny_reference(img, PARAMS)
+    assert (got == want).mean() > 0.999
+
+
+def test_backends_agree():
+    """jnp, per-stage pallas, fused pallas — all produce the same edges."""
+    img = synthetic_image(64, 72, seed=5)
+    a = np.asarray(canny(jnp.asarray(img), PARAMS, backend="jnp"))
+    b = np.asarray(canny(jnp.asarray(img), PARAMS, backend="pallas"))
+    c = np.asarray(canny(jnp.asarray(img), PARAMS, backend="fused"))
+    assert (a == b).mean() > 0.999
+    assert (a == c).mean() > 0.999
+
+
+# ---------------- batching ---------------------------------------------------
+def test_kernels_batched():
+    imgs = np.stack([synthetic_image(40, 48, seed=i) for i in range(3)])
+    blur = np.asarray(gaussian_blur(jnp.asarray(imgs)))
+    assert blur.shape == imgs.shape
+    mag, dirs = sobel(jnp.asarray(imgs))
+    assert mag.shape == imgs.shape and dirs.shape == imgs.shape
+    out = np.asarray(fused_canny(jnp.asarray(imgs), 1.4, 2, 0.08, 0.2))
+    assert out.shape == imgs.shape
+    for i in range(3):
+        want = np.asarray(fused_canny(jnp.asarray(imgs[i]), 1.4, 2, 0.08, 0.2))
+        assert (out[i] == want).all()

@@ -1,0 +1,130 @@
+"""MoE: routing invariants + sort-based dispatch vs a dense oracle."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.models.common import cast_float, init_params
+from repro.models.moe import _route, moe_ffn, moe_schema
+
+
+def tiny_moe_cfg(**kw) -> ModelConfig:
+    base = dict(
+        name="tiny-moe", family="moe", n_layers=1, d_model=16, n_heads=2,
+        n_kv_heads=2, d_ff=32, vocab_size=64, n_experts=8, top_k=2, moe_d_ff=24,
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def dense_oracle(p, x, cfg):
+    """Route per token, run its experts densely — no capacity, no dropping."""
+    b, s, d = x.shape
+    xf = np.asarray(x, np.float32).reshape(-1, d)
+    w, idx, _ = _route(p, jnp.asarray(xf), cfg)
+    w, idx = np.asarray(w, np.float32), np.asarray(idx)
+    up, gate, down = (np.asarray(p[k], np.float32) for k in ("up", "gate", "down"))
+    out = np.zeros_like(xf)
+    for t in range(xf.shape[0]):
+        for j in range(cfg.top_k):
+            e = idx[t, j]
+            h = (xf[t] @ up[e]) * _silu(xf[t] @ gate[e])
+            out[t] += w[t, j] * (h @ down[e])
+    return out.reshape(b, s, d)
+
+
+def _silu(z):
+    return z / (1.0 + np.exp(-z))
+
+
+def test_dispatch_matches_dense_oracle_ample_capacity():
+    cfg = tiny_moe_cfg()
+    p = cast_float(init_params(moe_schema(cfg), jax.random.PRNGKey(0)), jnp.float32)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 8, cfg.d_model)) * 0.3, jnp.float32)
+    got, aux = moe_ffn(p, x, cfg, capacity_factor=8.0)  # ample: nothing dropped
+    want = dense_oracle(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-4)
+    assert np.isfinite(float(aux))
+
+
+def test_capacity_drops_tokens(monkeypatch):
+    """With capacity 0-ish slack, overflowing tokens contribute nothing."""
+    import repro.models.moe as moe_mod
+
+    monkeypatch.setattr(moe_mod, "_DROPLESS_MAX_TOKENS", 0)  # force capacity path
+    cfg = tiny_moe_cfg(n_experts=2, top_k=1)
+    p = cast_float(init_params(moe_schema(cfg), jax.random.PRNGKey(0)), jnp.float32)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(1, 16, cfg.d_model)), jnp.float32)
+    tight, _ = moe_ffn(p, x, cfg, capacity_factor=0.25)
+    ample, _ = moe_ffn(p, x, cfg, capacity_factor=8.0)
+    # dropped rows are exactly zero
+    t = np.asarray(tight)[0]
+    a = np.asarray(ample)[0]
+    dropped = np.all(t == 0, axis=-1)
+    assert dropped.sum() > 0
+    kept = ~dropped
+    np.testing.assert_allclose(t[kept], a[kept], rtol=1e-4, atol=1e-4)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_routing_invariants(seed):
+    cfg = tiny_moe_cfg(router_scale=True)
+    p = cast_float(init_params(moe_schema(cfg), jax.random.PRNGKey(0)), jnp.float32)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(6, cfg.d_model)), jnp.float32)
+    w, idx, aux = _route(p, x, cfg)
+    w, idx = np.asarray(w), np.asarray(idx)
+    assert ((0 <= idx) & (idx < cfg.n_experts)).all()
+    # top-k indices unique per token
+    for t in range(idx.shape[0]):
+        assert len(set(idx[t])) == cfg.top_k
+    # normalized weights (router_scale)
+    np.testing.assert_allclose(w.sum(-1), 1.0, rtol=1e-4)
+    assert (w >= 0).all()
+    assert float(aux) >= 0
+
+
+def test_group_limited_routing_masks_groups():
+    cfg = tiny_moe_cfg(n_experts=8, top_k=2, n_groups=4, topk_groups=1)
+    p = cast_float(init_params(moe_schema(cfg), jax.random.PRNGKey(0)), jnp.float32)
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(16, cfg.d_model)), jnp.float32)
+    _, idx, _ = _route(p, x, cfg)
+    idx = np.asarray(idx)
+    group = idx // (cfg.n_experts // cfg.n_groups)
+    # all selected experts of a token must come from the same single group
+    assert (group == group[:, :1]).all()
+
+
+def test_shared_expert_always_contributes():
+    cfg = tiny_moe_cfg(n_shared_experts=1)
+    p = cast_float(init_params(moe_schema(cfg), jax.random.PRNGKey(0)), jnp.float32)
+    x = jnp.zeros((1, 4, cfg.d_model), jnp.float32)
+    # zero input → routed experts output 0 (silu(0)*0), shared too — use
+    # a nonzero input and compare with shared weights zeroed instead.
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(1, 4, cfg.d_model)), jnp.float32)
+    out1, _ = moe_ffn(p, x, cfg, capacity_factor=8.0)
+    p0 = dict(p)
+    p0["shared_down"] = jnp.zeros_like(p["shared_down"])
+    out0, _ = moe_ffn(p0, x, cfg, capacity_factor=8.0)
+    assert not np.allclose(np.asarray(out1), np.asarray(out0))
+
+
+def test_deepseek_v3_routing_shape():
+    cfg = get_config("deepseek-v3-671b").reduced()
+    p = cast_float(init_params(moe_schema(cfg), jax.random.PRNGKey(0)), jnp.float32)
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(size=(10, cfg.d_model)), jnp.float32)
+    w, idx, aux = _route(p, x, cfg)
+    assert w.shape == (10, cfg.top_k) and idx.shape == (10, cfg.top_k)
+    np.testing.assert_allclose(np.asarray(w).sum(-1), 1.0, rtol=1e-4)

@@ -1,0 +1,96 @@
+"""Optimizer + gradient compression: correctness and convergence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig
+from repro.optim import (
+    adamw_update,
+    clip_by_global_norm,
+    compress_grads_ef,
+    global_norm,
+    init_opt_state,
+    lr_at,
+)
+
+
+def quad_loss(params):
+    return jnp.sum((params["w"] - 3.0) ** 2) + jnp.sum((params["b"] + 1.0) ** 2)
+
+
+def _train(steps, compress: bool, lr=0.05):
+    tcfg = TrainConfig(
+        learning_rate=lr, weight_decay=0.0, warmup_steps=0, total_steps=steps,
+        schedule="constant",
+    )
+    params = {"w": jnp.zeros((4,)), "b": jnp.zeros((3,))}
+    opt = init_opt_state(params)
+    for _ in range(steps):
+        grads = jax.grad(quad_loss)(params)
+        if compress:
+            grads, opt = compress_grads_ef(grads, opt)
+        params, opt = adamw_update(params, grads, opt, tcfg)
+    return params
+
+
+def test_adamw_converges_quadratic():
+    params = _train(300, compress=False)
+    np.testing.assert_allclose(np.asarray(params["w"]), 3.0, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(params["b"]), -1.0, atol=1e-2)
+
+
+def test_compressed_grads_converge_too():
+    """int8 EF compression must not prevent convergence (error feedback)."""
+    params = _train(300, compress=True)
+    np.testing.assert_allclose(np.asarray(params["w"]), 3.0, atol=5e-2)
+    np.testing.assert_allclose(np.asarray(params["b"]), -1.0, atol=5e-2)
+
+
+def test_error_feedback_is_unbiased_cumulatively():
+    """Σ dequantized == Σ raw + residual (the EF invariant)."""
+    g = {"x": jnp.asarray(np.random.default_rng(0).normal(size=(64,)), jnp.float32)}
+    opt = {"step": jnp.zeros((), jnp.int32)}
+    total_deq = jnp.zeros((64,))
+    for _ in range(20):
+        deq, opt = compress_grads_ef(g, opt)
+        total_deq = total_deq + deq["x"]
+    # cumulative dequantized ≈ cumulative true gradient (residual bounded)
+    want = g["x"] * 20
+    resid = opt["ef"]["x"]
+    np.testing.assert_allclose(
+        np.asarray(total_deq + resid), np.asarray(want), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((3,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-5)
+    assert float(norm) > 1.0
+    small = {"a": jnp.full((3,), 1e-3)}
+    unclipped, _ = clip_by_global_norm(small, 1.0)
+    np.testing.assert_allclose(np.asarray(unclipped["a"]), 1e-3, rtol=1e-5)
+
+
+def test_lr_schedules():
+    tcfg = TrainConfig(learning_rate=1.0, warmup_steps=10, total_steps=110)
+    assert float(lr_at(tcfg, jnp.asarray(0))) < 0.2
+    assert float(lr_at(tcfg, jnp.asarray(9))) == pytest.approx(1.0)
+    assert float(lr_at(tcfg, jnp.asarray(110))) == pytest.approx(0.0, abs=1e-6)
+    lin = TrainConfig(learning_rate=1.0, warmup_steps=0, total_steps=100, schedule="linear")
+    assert float(lr_at(lin, jnp.asarray(50))) == pytest.approx(0.5, abs=0.02)
+
+
+def test_adamw_weight_decay_pulls_to_zero():
+    tcfg = TrainConfig(
+        learning_rate=0.1, weight_decay=1.0, warmup_steps=0, total_steps=200,
+        schedule="constant",
+    )
+    params = {"w": jnp.full((2,), 5.0)}
+    opt = init_opt_state(params)
+    for _ in range(200):
+        grads = {"w": jnp.zeros((2,))}
+        params, opt = adamw_update(params, grads, opt, tcfg)
+    assert abs(float(params["w"][0])) < 0.5

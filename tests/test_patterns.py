@@ -1,0 +1,139 @@
+"""Unit + property tests for the parallel-patterns library (local mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.patterns import (
+    PatternPipeline,
+    blocked_assoc_scan,
+    even_tiles,
+    pattern_map,
+    pattern_reduce,
+    pattern_scan,
+    pipeline_stages,
+    tile_counts,
+    assert_balanced,
+)
+from repro.core.patterns.dist import StencilCtx
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------- partition ------------------------------------------------------
+@given(extent=st.integers(1, 10_000), parts=st.integers(1, 64))
+@settings(**SETTINGS)
+def test_even_tiles_cover_and_balance(extent, parts):
+    tiles = even_tiles(extent, parts)
+    assert len(tiles) == parts
+    assert tiles[0][0] == 0 and tiles[-1][1] == extent
+    sizes = [b - a for a, b in tiles]
+    assert all(s >= 0 for s in sizes)
+    assert max(sizes) - min(sizes) <= 1
+    for (a0, b0), (a1, b1) in zip(tiles, tiles[1:]):
+        assert b0 == a1  # contiguous
+
+
+def test_tile_counts_balanced():
+    counts = tile_counts((4096, 4096), (16, 16))
+    assert_balanced(counts, tolerance_ratio=0.0)  # divisible → exact
+    counts2 = tile_counts((4099, 4097), (16, 16))
+    assert_balanced(counts2, tolerance_ratio=0.02)
+
+
+def test_assert_balanced_raises():
+    with pytest.raises(AssertionError):
+        assert_balanced(np.array([100, 1]))
+
+
+# ---------- scan -----------------------------------------------------------
+@given(
+    n_blocks=st.integers(1, 8),
+    block=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_blocked_scan_matches_flat_scan(n_blocks, block, seed):
+    n = n_blocks * block
+    x = np.random.default_rng(seed).normal(size=(n, 3)).astype(np.float32)
+    got = blocked_assoc_scan(jnp.add, jnp.asarray(x), block=block)
+    want = jax.lax.associative_scan(jnp.add, jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=1e-5)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_blocked_scan_max_monoid(seed):
+    x = np.random.default_rng(seed).normal(size=(32,)).astype(np.float32)
+    got = blocked_assoc_scan(jnp.maximum, jnp.asarray(x), block=8)
+    want = np.maximum.accumulate(x)
+    np.testing.assert_allclose(np.asarray(got), want)
+
+
+def test_blocked_scan_rejects_ragged():
+    with pytest.raises(ValueError):
+        blocked_assoc_scan(jnp.add, jnp.zeros((10,)), block=4)
+
+
+def test_pattern_scan_local_is_assoc_scan():
+    x = jnp.arange(16.0)
+    np.testing.assert_allclose(
+        np.asarray(pattern_scan(jnp.add, x)), np.cumsum(np.arange(16.0))
+    )
+
+
+# ---------- map / reduce ----------------------------------------------------
+def test_pattern_map_local():
+    f = pattern_map(lambda x: x * 2 + 1)
+    x = jnp.arange(8.0)
+    np.testing.assert_allclose(np.asarray(f(x)), np.arange(8.0) * 2 + 1)
+
+
+@given(kind=st.sampled_from(["sum", "max", "min"]), seed=st.integers(0, 1000))
+@settings(**SETTINGS)
+def test_pattern_reduce_local(kind, seed):
+    x = np.random.default_rng(seed).normal(size=(33,)).astype(np.float32)
+    got = float(pattern_reduce(kind)(jnp.asarray(x)))
+    want = {"sum": np.sum, "max": np.max, "min": np.min}[kind](x)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+# ---------- pipeline --------------------------------------------------------
+def test_pipeline_stages_compose():
+    f = pipeline_stages(lambda x: x + 1, lambda x: x * 3)
+    assert float(f(jnp.asarray(2.0))) == 9.0
+
+
+def test_pattern_pipeline_preserves_order():
+    fn = jax.jit(lambda x: x * 2)
+    pipe = PatternPipeline(fn)
+    feed = [np.full((4,), i, np.float32) for i in range(7)]
+    outs = list(pipe.run(feed))
+    assert len(outs) == 7
+    for i, o in enumerate(outs):
+        np.testing.assert_allclose(np.asarray(o), np.full((4,), 2 * i))
+
+
+def test_pattern_pipeline_empty_feed():
+    pipe = PatternPipeline(jax.jit(lambda x: x))
+    assert list(pipe.run([])) == []
+
+
+# ---------- stencil ctx (local) ---------------------------------------------
+def test_stencil_ctx_pad_modes():
+    ctx = StencilCtx(None, "edge")
+    x = jnp.arange(6.0).reshape(2, 3)
+    pe = ctx.pad_rows(x, 1)
+    assert pe.shape == (4, 3)
+    np.testing.assert_allclose(np.asarray(pe[0]), np.asarray(x[0]))
+    pz = ctx.pad_rows(x, 1, pad_mode="zero")
+    np.testing.assert_allclose(np.asarray(pz[0]), np.zeros(3))
+    pc = ctx.pad_cols(x, 2)
+    assert pc.shape == (2, 7)
+
+
+def test_stencil_ctx_rejects_bad_mode():
+    with pytest.raises(ValueError):
+        StencilCtx(None, "wrap")

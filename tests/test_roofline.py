@@ -1,0 +1,106 @@
+"""Roofline machinery: HLO collective parser, loop correction, flop models."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, TrainConfig, get_config
+from repro.roofline.analysis import (
+    _group_size,
+    _result_bytes,
+    _wire_bytes,
+    collective_bytes_from_text,
+)
+from repro.roofline.analytic import analytic_flops, attention_flops
+from repro.roofline.model_flops import active_params, model_flops
+
+HLO = """
+HloModule test
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  ROOT %r = f32[] add(f32[] %a, f32[] %b)
+}
+
+%cond (p: (s32[], f32[16,8])) -> pred[] {
+  %iv = s32[] get-tuple-element(%p), index=0
+  %k = s32[] constant(7)
+  ROOT %lt = pred[] compare(%iv, %k), direction=LT
+}
+
+%body (p: (s32[], f32[16,8])) -> (s32[], f32[16,8]) {
+  %x = f32[16,8]{1,0} get-tuple-element(%p), index=1
+  %ar = f32[16,8]{1,0} all-reduce(%x), replica_groups=[2,4]<=[8], to_apply=%add
+  ROOT %t = (s32[], f32[16,8]) tuple(%iv2, %ar)
+}
+
+ENTRY %main (x: f32[16,8]) -> f32[16,8] {
+  %ag = f32[16,8]{1,0} all-gather(%x0), replica_groups=[2,4]<=[8], dimensions={0}
+  %w = (s32[], f32[16,8]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[16,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_collective_parser_counts_and_loops():
+    flat = collective_bytes_from_text(HLO, loop_aware=False)
+    aware = collective_bytes_from_text(HLO, loop_aware=True)
+    b = 16 * 8 * 4
+    # all-gather outside the loop: counted once either way
+    assert flat["all-gather"] == aware["all-gather"] == pytest.approx(b * 3 / 4)
+    # all-reduce inside the 7-trip while: ×7 under loop_aware
+    assert flat["all-reduce"] == pytest.approx(2 * b * 3 / 4)
+    assert aware["all-reduce"] == pytest.approx(7 * 2 * b * 3 / 4)
+
+
+def test_wire_bytes_model():
+    assert _wire_bytes("all-reduce", 100, 4) == pytest.approx(150.0)
+    assert _wire_bytes("all-gather", 100, 4) == pytest.approx(75.0)
+    assert _wire_bytes("reduce-scatter", 100, 4) == pytest.approx(300.0)
+    assert _wire_bytes("collective-permute", 100, 4) == 100.0
+    assert _wire_bytes("all-reduce", 100, 1) == 0.0  # degenerate group
+
+
+def test_group_size_parsing():
+    assert _group_size("replica_groups=[16,16]<=[256]") == 16
+    assert _group_size("replica_groups={{0,1,2,3}}") == 4
+    assert _group_size("no groups here") == 1
+
+
+def test_result_bytes_parsing():
+    line = "%ar = f32[32,128]{1,0} all-reduce(%dot), replica_groups=[2,4]<=[8]"
+    assert _result_bytes(line, "all-reduce") == 32 * 128 * 4
+
+
+def test_model_flops_sanity():
+    cfg = get_config("qwen2-7b")
+    n = active_params(cfg)
+    assert 6e9 < n < 9e9  # ~7B active
+    tr = model_flops(cfg, SHAPES["train_4k"])
+    assert tr == pytest.approx(6.0 * n * 256 * 4096)
+    dec = model_flops(cfg, SHAPES["decode_32k"])
+    assert dec == pytest.approx(2.0 * n * 128)
+
+
+def test_moe_active_params_scale_with_topk():
+    v3 = get_config("deepseek-v3-671b")
+    n_active = active_params(v3)
+    assert n_active < 60e9  # ~37B active vs 671B total
+
+
+def test_swa_caps_attention_flops():
+    danube = get_config("h2o-danube-1.8b")
+    full = attention_flops(
+        danube, SHAPES["decode_32k"], chunked=False
+    )
+    # window 4096 caps the key range at decode
+    assert full <= 2.2 * 128 * 4096 * (
+        danube.n_heads * danube.hd * 2
+    ) * danube.n_layers * 1.01
+
+
+def test_analytic_flops_train_exceeds_inference():
+    cfg = get_config("yi-9b")
+    t = analytic_flops(cfg, SHAPES["train_4k"], TrainConfig())
+    p = analytic_flops(cfg, SHAPES["prefill_32k"], TrainConfig())
+    assert t > 0 and p > 0

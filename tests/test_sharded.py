@@ -1,0 +1,23 @@
+"""Multi-device (8 virtual CPU) integration tests, subprocess-isolated."""
+
+from tests.subproc_utils import run_with_devices
+
+
+def test_sharded_canny_and_patterns():
+    out = run_with_devices("sharded_canny.py", n_devices=8)
+    assert "ALL-OK" in out
+
+
+def test_elastic_checkpoint_restore():
+    out = run_with_devices("elastic.py", n_devices=8)
+    assert "ALL-OK" in out
+
+
+def test_moe_expert_parallel_variants():
+    out = run_with_devices("moe_ep.py", n_devices=8)
+    assert "ALL-OK" in out
+
+
+def test_pipeline_parallel_gpipe():
+    out = run_with_devices("pipeline_pp.py", n_devices=4)
+    assert "ALL-OK" in out
