@@ -9,7 +9,12 @@ the LM table reads the dry-run artifacts.
   load_balance                   paper figs 11–12 (exact tile counts)
   image_size_scaling             paper §2.2 ("high quality images")
   hysteresis_modes               paper claim C3 (serial vs parallel fixpoint)
+  batched_throughput             batch-grid fused path vs vmap-of-2D lifting
   roofline_table                 §Roofline summary from experiments/dryrun
+
+Besides the CSV on stdout, results land in ``BENCH_<git rev>.json`` next
+to this file (name → {us_per_call, derived}) for machine-readable
+regression tracking across PRs.
 """
 
 from __future__ import annotations
@@ -17,6 +22,7 @@ from __future__ import annotations
 import json
 import pathlib
 import statistics
+import subprocess
 import sys
 import time
 
@@ -41,7 +47,8 @@ from repro.core.canny.nms import nms_stage
 from repro.core.canny.sobel import sobel_stage
 from repro.core.patterns.dist import StencilCtx
 from repro.core.patterns.partition import tile_counts
-from repro.data.images import synthetic_image
+from repro.data.images import synthetic_batch, synthetic_image
+from repro.kernels.fused_canny.ops import fused_canny
 
 PARAMS = CannyParams(sigma=1.4, low=0.08, high=0.2)
 CTX = StencilCtx(None, "edge")
@@ -153,6 +160,33 @@ def hysteresis_modes(h=512, w=512):
         )
 
 
+def batched_throughput(h=512, w=512, sizes=(1, 4, 8)):
+    """Batch-grid fused path (ONE pallas_call per stage over a
+    (batch, strip) grid) vs lifting the 2D detector with jax.vmap (what
+    ``common.batchify`` did before the batch dim became a grid axis)."""
+    args = (1.4, 2, float(PARAMS.low), float(PARAMS.high))
+    vmap_fused = jax.jit(jax.vmap(lambda x: fused_canny(x, *args)))
+    for b in sizes:
+        imgs = jnp.asarray(synthetic_batch(b, h, w, seed=7))
+        us_vmap = _timeit(lambda: np.asarray(vmap_fused(imgs)))
+        mpxs = b * h * w / us_vmap
+        row(f"canny_vmap2d_b{b}_{h}px", us_vmap, f"{mpxs:.2f} MPx/s")
+        us_grid = _timeit(lambda: np.asarray(fused_canny(imgs, *args)))
+        mpxs = b * h * w / us_grid
+        row(
+            f"canny_batchgrid_b{b}_{h}px",
+            us_grid,
+            f"{mpxs:.2f} MPx/s speedup_vs_vmap={us_vmap/us_grid:.2f}x",
+        )
+
+    # outputs must be bit-identical to the serial numpy oracle
+    imgs = synthetic_batch(2, h, w, seed=7)
+    got = np.asarray(fused_canny(jnp.asarray(imgs), *args))
+    exact = all((got[i] == canny_reference(imgs[i], PARAMS)).all() for i in range(2))
+    row("canny_batchgrid_bit_exact", 0.0, f"vs_canny_reference={exact}")
+    assert exact, "batch-grid fused output diverged from canny_reference"
+
+
 def roofline_table():
     """LM cells summary from the dry-run artifacts (see EXPERIMENTS.md)."""
     d = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
@@ -170,6 +204,29 @@ def roofline_table():
         )
 
 
+def _git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=pathlib.Path(__file__).resolve().parent,
+            capture_output=True,
+            text=True,
+            check=True,
+        ).stdout.strip()
+    except Exception:
+        return "worktree"
+
+
+def write_artifact() -> pathlib.Path:
+    """Dump the collected rows as BENCH_<rev>.json next to this file."""
+    out = pathlib.Path(__file__).resolve().parent / f"BENCH_{_git_rev()}.json"
+    payload = {
+        name: {"us_per_call": us, "derived": derived} for name, us, derived in ROWS
+    }
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    return out
+
+
 def main() -> None:
     print("name,us_per_call,derived")
     fig8_9_suboptimal_vs_optimal()
@@ -177,7 +234,10 @@ def main() -> None:
     load_balance()
     image_size_scaling()
     hysteresis_modes()
+    batched_throughput()
     roofline_table()
+    path = write_artifact()
+    print(f"# wrote {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,37 @@
+"""Version compatibility shims for jax API drift.
+
+The repo targets the modern spellings; these helpers let the same code
+run on older jax releases (the CI container pins 0.4.x):
+
+- ``shard_map``: ``jax.shard_map(..., check_vma=...)`` vs
+  ``jax.experimental.shard_map.shard_map(..., check_rep=...)``.
+- ``axis_size``: ``jax.lax.axis_size`` is missing on older jax;
+  ``psum(1, axis)`` constant-folds to the same static int there.
+
+See also ``distributed/sharding.py:abstract_mesh`` for the
+``AbstractMesh`` constructor drift.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def axis_size(axis_name) -> int:
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    if hasattr(jax, "shard_map"):
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw
+    )

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core.canny.params import CannyParams
 from repro.core.canny.gaussian import gaussian_stage
 from repro.core.canny.sobel import sobel_stage
@@ -31,9 +32,28 @@ from repro.core.patterns.dist import Dist, StencilCtx
 # kernels/ registers callables here at import time (avoids a hard dep)
 _BACKENDS: dict[str, Callable] = {}
 
+# serving-capable backends: fn(imgs (b,h,w) f32, true_hw (b,2) i32, params,
+# interpret) → uint8 edges. True-size-aware, so the serving layer can pad
+# requests to shape buckets and stay bit-exact (see serve/engine.py).
+_SERVING_BACKENDS: dict[str, Callable] = {}
+
 
 def register_backend(name: str, fn: Callable) -> None:
     _BACKENDS[name] = fn
+
+
+def register_serving_backend(name: str, fn: Callable) -> None:
+    _SERVING_BACKENDS[name] = fn
+
+
+def resolve_serving_backend(name: str) -> Callable | None:
+    """The true-size-aware entry for ``name``, or None if it has none."""
+    if name not in _SERVING_BACKENDS:
+        try:
+            import repro.kernels.canny_backends  # noqa: F401  (registers)
+        except ImportError:  # pragma: no cover
+            return None
+    return _SERVING_BACKENDS.get(name)
 
 
 def canny_local_stages(
@@ -66,11 +86,24 @@ def make_canny(
     dist: Dist = Dist(),
     backend: str = "jnp",
     local_sweeps: int = 2,
+    bucket_multiple: int | None = 64,
 ) -> Callable[[jax.Array], jax.Array]:
-    """Build a jitted canny detector for images shaped (h, w) or (b, h, w)."""
+    """Build a jitted canny detector for images shaped (h, w) or (b, h, w).
+
+    Serving-capable backends (``fused``) return a shape-bucketed runner:
+    any (b, h, w) is padded to a bucket and cropped back (bit-exact via
+    per-image true sizes), so new shapes inside a bucket never recompile.
+    Pass ``bucket_multiple=None`` to force exact-shape compilation.
+    """
     stage_fn = _resolve_stage_fn(backend)
 
     if dist.is_local:
+        serve_fn = resolve_serving_backend(backend) if bucket_multiple else None
+        if serve_fn is not None:
+            from repro.serve.engine import BucketedCanny
+
+            return BucketedCanny(serve_fn, params, bucket_multiple)
+
         ctx = StencilCtx(None, "edge")
 
         @jax.jit
@@ -93,7 +126,7 @@ def make_canny(
         else:
             raise ValueError(f"expected (h,w) or (b,h,w); got ndim={ndim}")
 
-        local = jax.shard_map(
+        local = compat.shard_map(
             lambda x: stage_fn(x, params, ctx, local_sweeps=local_sweeps)
             if stage_fn is canny_local_stages
             else stage_fn(x, params, ctx),

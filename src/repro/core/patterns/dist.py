@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh
 
+from repro import compat
+
 
 @dataclasses.dataclass(frozen=True)
 class Dist:
@@ -126,7 +128,7 @@ def _halo_exchange(
     sharded stencil bit-identical to the unsharded one.
     """
     axis = axis % x.ndim
-    n = lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
     if n == 1:
         return _pad_axis(x, halo, axis, pad_mode)
 

@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
+
 T = TypeVar("T")
 
 
@@ -87,7 +89,7 @@ def pattern_scan(
     if axis_name is None:
         return local
 
-    n = lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
     if n == 1:
         return local
 

@@ -16,13 +16,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.canny.params import CannyParams
-from repro.core.canny.pipeline import register_backend
+from repro.core.canny.pipeline import register_backend, register_serving_backend
 from repro.core.patterns.dist import StencilCtx
 from repro.kernels.gaussian.ops import gaussian_blur
 from repro.kernels.sobel.ops import sobel
 from repro.kernels.nms.ops import nms
 from repro.kernels.hysteresis.ops import hysteresis_from_masks
-from repro.kernels.fused_canny.ops import fused_frontend
+from repro.kernels.fused_canny.ops import fused_canny, fused_frontend
 
 
 def _require_local(ctx: StencilCtx, name: str) -> None:
@@ -55,5 +55,26 @@ def _fused(img: jax.Array, params: CannyParams, ctx: StencilCtx, **_):
     return hysteresis_from_masks(code >= 2, code >= 1)
 
 
+def _fused_serving(
+    imgs: jax.Array,
+    true_hw: jax.Array,
+    params: CannyParams,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """True-size-aware fused path for the bucketed serving layer: border
+    math anchors at per-image (h, w), so bucket padding is bit-exact."""
+    return fused_canny(
+        imgs.astype(jnp.float32),
+        sigma=params.sigma,
+        radius=params.radius,
+        low=params.low,
+        high=params.high,
+        l2_norm=params.l2_norm,
+        interpret=interpret,
+        true_hw=true_hw,
+    )
+
+
 register_backend("pallas", _staged)
 register_backend("fused", _fused)
+register_serving_backend("fused", _fused_serving)

@@ -1,23 +1,29 @@
-"""Shared Pallas plumbing for the row-strip stencil kernels.
+"""Shared Pallas plumbing for the batch-native row-strip stencil kernels.
 
 TPU adaptation of the paper's stencils: each kernel instance owns a
-(BH, W) row strip staged HBM→VMEM by ``pallas_call``. Halos are obtained
-with the **neighbour-strip trick**: the same input is bound three times
-with block index maps ``i−1, i, i+1`` (clamped at the grid ends), so the
-kernel sees its strip plus both neighbours without dynamic DMA. Boundary
-strips patch their halo rows in-register (edge-replicate or zero) to
-match the oracle's border semantics exactly.
+(BT, BH, W) tile — BT whole-image slots by a BH-row strip — staged
+HBM→VMEM by ``pallas_call`` over a 2D ``(batch_tiles, n_strips)`` grid.
+The batch is therefore first-class: one launch covers every image, the
+strip math vectorizes across the BT in-block images, and the grid only
+tiles what VMEM can't hold.
+
+Halos are obtained with the **neighbour-strip trick**: the same input is
+bound three times with strip-axis index maps ``i−1, i, i+1`` (clamped at
+the grid ends), so the kernel sees its strip plus both neighbours
+without dynamic DMA. Clamping is per-image by construction: blocks never
+straddle images on the batch axis, so a clamped neighbour always comes
+from the same image. Boundary strips patch their halo rows in-register
+(edge-replicate or zero) to match the oracle's border semantics exactly.
 
 Strips are (8,128)-aligned for the VPU; BH defaults to 128 rows and
-shrinks for small images. ops.py wrappers pad the row count up to a
-multiple of BH with edge-replicated rows — provably output-invariant for
-every Canny stage (clone rows neither change gradients in the crop region
-nor add connectivity; see DESIGN.md).
+shrinks for small images, and BT is chosen so the working set fits the
+VMEM budget. ops.py wrappers pad the row count up to a multiple of BH
+with edge-replicated rows — provably output-invariant for every Canny
+stage (clone rows neither change gradients in the crop region nor add
+connectivity; see DESIGN.md).
 """
 
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -41,32 +47,67 @@ def pick_block_rows(h: int, target: int = 128, min_rows: int = 1) -> int:
     return max(min(h, target), min_rows)
 
 
-def strip_specs(n_strips: int, bh: int, w: int):
-    """(prev, cur, next) BlockSpecs for the neighbour-strip halo trick."""
-    prev = pl.BlockSpec((bh, w), lambda i: (jnp.maximum(i - 1, 0), 0))
-    cur = pl.BlockSpec((bh, w), lambda i: (i, 0))
-    nxt = pl.BlockSpec((bh, w), lambda i: (jnp.minimum(i + 1, n_strips - 1), 0))
+def pick_batch_block(
+    b: int,
+    bh: int,
+    w: int,
+    budget_bytes: int | None = None,
+    live_buffers: int = 10,
+) -> int:
+    """Images per kernel instance (the BT block dim). Largest divisor of
+    ``b`` whose working set (≈``live_buffers`` f32 strip-sized arrays per
+    image) fits the VMEM budget; interpret mode gets a roomier budget —
+    there the point of BT is amortizing per-grid-cell overhead, not VMEM.
+    """
+    if budget_bytes is None:
+        budget_bytes = (8 << 20) if on_tpu() else (256 << 20)
+    per_image = max(bh * w * 4 * live_buffers, 1)
+    bt = max(1, min(b, budget_bytes // per_image))
+    while b % bt:
+        bt -= 1
+    return bt
+
+
+def strip_specs(n_strips: int, bh: int, w: int, bt: int = 1):
+    """(prev, cur, next) BlockSpecs for the neighbour-strip halo trick on
+    a 2D ``(batch_tiles, n_strips)`` grid. Blocks are (BT, BH, W): the
+    strip-axis clamp is per-image because a block never crosses images.
+    """
+    prev = pl.BlockSpec((bt, bh, w), lambda b, i: (b, jnp.maximum(i - 1, 0), 0))
+    cur = pl.BlockSpec((bt, bh, w), lambda b, i: (b, i, 0))
+    nxt = pl.BlockSpec(
+        (bt, bh, w), lambda b, i: (b, jnp.minimum(i + 1, n_strips - 1), 0)
+    )
     return prev, cur, nxt
 
 
-def out_strip_spec(bh: int, w: int):
-    return pl.BlockSpec((bh, w), lambda i: (i, 0))
+def out_strip_spec(bh: int, w: int, bt: int = 1):
+    return pl.BlockSpec((bt, bh, w), lambda b, i: (b, i, 0))
 
 
-def assemble_rows(prev, cur, nxt, halo: int, mode: str):
-    """Build the halo-extended strip (BH+2·halo, W) inside the kernel.
+def per_image_spec(cols: int, bt: int = 1):
+    """Spec for per-image metadata rows, e.g. the (B, 2) true-size table:
+    every strip of image-block b binds the same (BT, cols) slice."""
+    return pl.BlockSpec((bt, cols), lambda b, i: (b, 0))
+
+
+STRIP_AXIS = 1  # grid axis that walks row strips; axis 0 tiles the batch
+
+
+def assemble_rows(prev, cur, nxt, halo: int, mode: str, grid_axis: int = STRIP_AXIS):
+    """Build the halo-extended tile (..., BH+2·halo, W) inside the kernel.
 
     ``prev``/``nxt`` are the clamped neighbour strips; at the grid ends
     they alias ``cur``, so their contribution is replaced by the border
     rule (edge-replicate or zeros).
     """
-    i = pl.program_id(0)
-    n = pl.num_programs(0)
-    top = prev[-halo:, :]
-    bot = nxt[:halo, :]
+    i = pl.program_id(grid_axis)
+    n = pl.num_programs(grid_axis)
+    top = prev[..., -halo:, :]
+    bot = nxt[..., :halo, :]
     if mode == "edge":
-        top_fix = jnp.broadcast_to(cur[0:1, :], top.shape)
-        bot_fix = jnp.broadcast_to(cur[-1:, :], bot.shape)
+        top_fix = jnp.broadcast_to(cur[..., 0:1, :], top.shape)
+        bot_fix = jnp.broadcast_to(cur[..., -1:, :], bot.shape)
     elif mode == "zero":
         top_fix = jnp.zeros_like(top)
         bot_fix = jnp.zeros_like(bot)
@@ -74,22 +115,23 @@ def assemble_rows(prev, cur, nxt, halo: int, mode: str):
         raise ValueError(mode)
     top = jnp.where(i == 0, top_fix, top)
     bot = jnp.where(i == n - 1, bot_fix, bot)
-    return jnp.concatenate([top, cur, bot], axis=0)
+    return jnp.concatenate([top, cur, bot], axis=-2)
 
 
 def pad_cols(x, halo: int, mode: str):
     """In-register horizontal halo (width is never sharded across strips)."""
     if halo == 0:
         return x
+    lshape = x.shape[:-1] + (halo,)
     if mode == "edge":
-        left = jnp.broadcast_to(x[:, 0:1], (x.shape[0], halo))
-        right = jnp.broadcast_to(x[:, -1:], (x.shape[0], halo))
+        left = jnp.broadcast_to(x[..., 0:1], lshape)
+        right = jnp.broadcast_to(x[..., -1:], lshape)
     elif mode == "zero":
-        left = jnp.zeros((x.shape[0], halo), x.dtype)
+        left = jnp.zeros(lshape, x.dtype)
         right = left
     else:
         raise ValueError(mode)
-    return jnp.concatenate([left, x, right], axis=1)
+    return jnp.concatenate([left, x, right], axis=-1)
 
 
 def pad_rows_to_multiple(img, bh: int, mode: str = "edge"):
@@ -113,15 +155,60 @@ def crop_rows(x, h: int):
     return jax.lax.slice_in_dim(x, 0, h, axis=-2)
 
 
-def batchify(fn):
-    """Lift an (H, W) kernel wrapper over an optional leading batch dim."""
+def as_batch(x):
+    """Normalize (H, W) | (B, H, W) → ((B, H, W), had_batch_dim)."""
+    if x.ndim == 2:
+        return x[None], False
+    if x.ndim == 3:
+        return x, True
+    raise ValueError(f"expected (h,w) or (b,h,w), got {x.shape}")
 
-    @functools.wraps(fn)
-    def run(x, *args, **kwargs):
-        if x.ndim == 2:
-            return fn(x, *args, **kwargs)
-        if x.ndim == 3:
-            return jax.vmap(lambda xi: fn(xi, *args, **kwargs))(x)
-        raise ValueError(f"expected (h,w) or (b,h,w), got {x.shape}")
 
-    return run
+_BITS = 32
+
+
+def pad_cols_to_multiple(x, m: int):
+    """Zero-pad the last axis up to a multiple of ``m``; returns
+    (padded, original_w). Zero cols are inert for mask stages."""
+    w = x.shape[-1]
+    pad = (-w) % m
+    if pad == 0:
+        return x, w
+    pads = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, pads), w
+
+
+def pack_mask(x):
+    """bool/uint8 mask (..., W) → (..., W//32) uint32, bit k = pixel
+    32·word + k. W must be a multiple of 32 (see pad_cols_to_multiple)."""
+    w = x.shape[-1]
+    if w % _BITS:
+        raise ValueError(f"W={w} not a multiple of {_BITS}")
+    b = (x != 0).reshape(*x.shape[:-1], w // _BITS, _BITS).astype(jnp.uint32)
+    return jnp.sum(b << jnp.arange(_BITS, dtype=jnp.uint32), axis=-1, dtype=jnp.uint32)
+
+
+def unpack_mask(words):
+    """(..., NW) uint32 → (..., NW·32) uint8 mask."""
+    bits = (words[..., None] >> jnp.arange(_BITS, dtype=jnp.uint32)) & jnp.uint32(1)
+    return bits.reshape(*words.shape[:-1], words.shape[-1] * _BITS).astype(jnp.uint8)
+
+
+def select_row(x, idx):
+    """Per-image dynamic row select: (BT, N, W) + (BT, 1, 1) indices →
+    (BT, 1, W). The block batch dim is static, so this unrolls into BT
+    single-row dynamic slices — far cheaper than a one-hot reduction."""
+    rows = [
+        jax.lax.dynamic_slice_in_dim(x[i], idx[i, 0, 0], 1, axis=0)
+        for i in range(x.shape[0])
+    ]
+    return jnp.stack(rows)
+
+
+def select_col(x, idx):
+    """Per-image dynamic column select on axis -1 (see ``select_row``)."""
+    cols = [
+        jax.lax.dynamic_slice_in_dim(x[i], idx[i, 0, 0], 1, axis=1)
+        for i in range(x.shape[0])
+    ]
+    return jnp.stack(cols)

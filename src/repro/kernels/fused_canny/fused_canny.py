@@ -9,13 +9,21 @@ rows) in and one uint8 code map out:
     baseline traffic / px : r4 + (4+1)w + (4+1+4)r + (4+4)rw + 4r+1w ≈ 26 B
     fused traffic  / px   : 4 r + 1 w ≈ 5 B        (≈5× less — memory-bound)
 
-The fused kernel computes on a halo-extended strip; halo math per stage
-(blur needs ±(r+2) input rows to emit bh+4 rows, sobel eats 1, NMS eats
-1) with in-register border fixes replicating the oracle's exact
-semantics at image borders (gauss/sobel edge-replicate, NMS zero
-neighbours). Emits code = (mag>=low) + (mag>=high) ∈ {0,1,2} uint8 —
-threshold fused for free, and the downstream hysteresis kernel reads
-1 byte/px instead of 4.
+The fused kernel computes on a halo-extended (BT, BH+2·(r+2), W) tile;
+halo math per stage (blur needs ±(r+2) input rows to emit bh+4 rows,
+sobel eats 1, NMS eats 1) with in-register border fixes replicating the
+oracle's exact semantics at image borders (gauss/sobel edge-replicate,
+NMS zero neighbours). Batch-native: one launch covers the whole batch on
+a (batch, strip) grid, vectorized across the BT in-block images.
+
+Border fixes anchor at PER-IMAGE true sizes read from a (B, 2) int32
+table — images bucketed/padded to a common (H, W) by the serving engine
+still come out bit-identical to the unpadded oracle, and the padded
+region of the code map is guaranteed 0 (inert under hysteresis).
+
+Emits code = (mag>=low) + (mag>=high) ∈ {0,1,2} uint8 — threshold fused
+for free, and the downstream hysteresis kernel reads 1 byte/px
+instead of 4.
 """
 
 from __future__ import annotations
@@ -36,73 +44,83 @@ def _kernel(
     prev_ref,
     cur_ref,
     nxt_ref,
-    out_ref,
-    *,
+    hw_ref,
+    *out_refs,
     taps: tuple[float, ...],
     radius: int,
     l2_norm: bool,
     low: float,
     high: float,
     emit: str,
-    h_true: int,
 ):
     r = radius
     h2 = r + 2
-    bh, w = cur_ref.shape
-    i = pl.program_id(0)
+    bt, bh, w = cur_ref.shape
+    i = pl.program_id(common.STRIP_AXIS)
+    ht = hw_ref[:, 0].reshape(bt, 1, 1)  # per-image true height
+    wt = hw_ref[:, 1].reshape(bt, 1, 1)  # per-image true width
 
-    # ---- gaussian on the (bh + 2*h2, w) extended strip -------------------
-    # Rows >= h_true are edge clones added by ops.py, so the blur of every
-    # real row already matches the oracle's edge-replicate semantics.
+    # ---- gaussian on the (bt, bh + 2*h2, w) extended tile ----------------
+    # Rows >= ht and cols >= wt are edge clones added by ops.py/the engine,
+    # so the blur of every real pixel already matches the oracle's
+    # edge-replicate semantics.
     ext = common.assemble_rows(prev_ref[...], cur_ref[...], nxt_ref[...], h2, "edge")
     xp = common.pad_cols(ext, r, "edge")
     tmp = jnp.zeros_like(ext)
     for t in range(2 * r + 1):
-        tmp = tmp + taps[t] * jax.lax.slice_in_dim(xp, t, t + w, axis=1)
+        tmp = tmp + taps[t] * jax.lax.slice_in_dim(xp, t, t + w, axis=-1)
     nblur = bh + 4
-    blur = jnp.zeros((nblur, w), jnp.float32)
+    blur = jnp.zeros((bt, nblur, w), jnp.float32)
     for t in range(2 * r + 1):
-        blur = blur + taps[t] * jax.lax.slice_in_dim(tmp, t, t + nblur, axis=0)
+        blur = blur + taps[t] * jax.lax.slice_in_dim(tmp, t, t + nblur, axis=-2)
 
     # Global row id of each blur row: g = i*bh + idx - 2 (idx = local row).
-    grow = jax.lax.broadcasted_iota(jnp.int32, (nblur, 1), 0) + i * bh - 2
+    grow = jax.lax.broadcasted_iota(jnp.int32, (1, nblur, 1), 1) + i * bh - 2
+    gcol = jax.lax.broadcasted_iota(jnp.int32, (1, 1, w), 2)
 
     # Border fix 1: the oracle edge-replicates the *blurred* image for
-    # sobel; virtual rows (g < 0 or g >= h_true) were instead blurred from
-    # replicated/padded inputs. Overwrite with the first/last TRUE blur
-    # row. The last true row may live in this strip at dynamic local index
-    # (h_true-1) - i*bh + 2 — fetch it with a clamped dynamic slice.
-    top_fix = jnp.broadcast_to(blur[2:3, :], blur.shape)
-    last_local = jnp.clip(h_true - 1 - i * bh + 2, 0, nblur - 1)
-    last_row = jax.lax.dynamic_slice_in_dim(blur, last_local, 1, axis=0)
-    bot_fix = jnp.broadcast_to(last_row, blur.shape)
+    # sobel; virtual rows (g < 0 or g >= ht) and cols (>= wt) were instead
+    # blurred from replicated/padded inputs. Overwrite with the first/last
+    # TRUE blur row/col. The last true row may live in this strip at
+    # dynamic per-image local index (ht-1) - i*bh + 2 — fetched with one
+    # unrolled dynamic slice per in-block image. Rows first, cols second:
+    # the bottom-right corner then lands on blur[ht-1, wt-1].
+    top_fix = jnp.broadcast_to(blur[..., 2:3, :], blur.shape)
+    last_local = jnp.clip(ht - 1 - i * bh + 2, 0, nblur - 1)
+    bot_row = common.select_row(blur, last_local)
     blur = jnp.where(grow < 0, top_fix, blur)
-    blur = jnp.where(grow >= h_true, bot_fix, blur)
+    blur = jnp.where(grow >= ht, jnp.broadcast_to(bot_row, blur.shape), blur)
+    right_col = common.select_col(blur, jnp.clip(wt - 1, 0, w - 1))
+    blur = jnp.where(gcol >= wt, jnp.broadcast_to(right_col, blur.shape), blur)
 
-    # ---- sobel on blur → (bh+2, w) mag/dirs -------------------------------
+    # ---- sobel on blur → (bt, bh+2, w) mag/dirs ---------------------------
     sob_ext = common.pad_cols(blur, 1, "edge")
     mag, dirs = sobel_math(sob_ext, bh + 2, w, l2_norm)
 
     # Border fix 2: NMS treats out-of-image neighbours as 0 — zero every
-    # magnitude row outside [0, h_true).
-    mgrow = jax.lax.broadcasted_iota(jnp.int32, (bh + 2, 1), 0) + i * bh - 1
-    mag = jnp.where((mgrow < 0) | (mgrow >= h_true), 0.0, mag)
+    # magnitude row/col outside [0, ht) × [0, wt). This also guarantees a
+    # zero code map over the padded region (inert under hysteresis).
+    mgrow = jax.lax.broadcasted_iota(jnp.int32, (1, bh + 2, 1), 1) + i * bh - 1
+    mag = jnp.where((mgrow < 0) | (mgrow >= ht) | (gcol >= wt), 0.0, mag)
 
-    # ---- NMS → (bh, w) -----------------------------------------------------
+    # ---- NMS → (bt, bh, w) -------------------------------------------------
     nms_ext = common.pad_cols(mag, 1, "zero")
-    suppressed = nms_math(nms_ext, dirs[1 : bh + 1, :], bh, w)
+    suppressed = nms_math(nms_ext, dirs[..., 1 : bh + 1, :], bh, w)
 
     if emit == "nms":
-        out_ref[...] = suppressed
-    else:  # "code": fused double threshold, 1 B/px
+        out_refs[0][...] = suppressed
+    elif emit == "code":  # fused double threshold, 1 B/px
         code = (suppressed >= low).astype(jnp.uint8) + (
             suppressed >= high
         ).astype(jnp.uint8)
-        out_ref[...] = code
+        out_refs[0][...] = code
+    else:  # "packed": strong/weak masks bit-packed for hysteresis, 2 bit/px
+        out_refs[0][...] = common.pack_mask(suppressed >= high)
+        out_refs[1][...] = common.pack_mask(suppressed >= low)
 
 
 def fused_canny_strips(
-    img: jax.Array,
+    imgs: jax.Array,
     sigma: float,
     radius: int,
     low: float,
@@ -111,20 +129,24 @@ def fused_canny_strips(
     emit: str = "code",
     block_rows: int | None = None,
     interpret: bool | None = None,
-    h_true: int | None = None,
+    true_hw: jax.Array | None = None,
+    batch_block: int | None = None,
 ) -> jax.Array:
-    """(H, W) f32 → NMS magnitudes (f32) or threshold code map (uint8).
+    """(B, H, W) f32 → NMS magnitudes (f32), threshold code map (uint8),
+    or — emit="packed" — the (strong, weak) masks bit-packed 32 px/uint32
+    word, ready for the hysteresis kernel (requires W % 32 == 0).
 
-    ``h_true`` is the pre-padding image height: border fixes anchor there,
-    not at the padded grid end.
+    ``true_hw`` is a (B, 2) int32 table of pre-padding (height, width) per
+    image: border fixes anchor there, not at the padded grid end. Defaults
+    to the full (H, W) for every image.
     """
-    if emit not in ("nms", "code"):
+    if emit not in ("nms", "code", "packed"):
         raise ValueError(emit)
     if interpret is None:
         interpret = common.default_interpret()
-    h, w = img.shape
-    if h_true is None:
-        h_true = h
+    b, h, w = imgs.shape
+    if true_hw is None:
+        true_hw = jnp.broadcast_to(jnp.asarray([h, w], jnp.int32), (b, 2))
     h2 = radius + 2
     bh = block_rows or common.pick_block_rows(h, min_rows=h2)
     if h % bh != 0:
@@ -132,9 +154,25 @@ def fused_canny_strips(
     if bh < h2:
         raise ValueError(f"block_rows={bh} must be >= radius+2={h2}")
     n = h // bh
+    bt = batch_block or common.pick_batch_block(b, bh, w)
     taps = tuple(float(t) for t in gaussian_kernel1d(sigma, radius))
-    prev, cur, nxt = common.strip_specs(n, bh, w)
-    out_dtype = jnp.float32 if emit == "nms" else jnp.uint8
+    prev, cur, nxt = common.strip_specs(n, bh, w, bt)
+    if emit == "packed":
+        if w % 32:
+            raise ValueError(f"emit='packed' needs W % 32 == 0, got W={w}")
+        nw = w // 32
+        out_specs = (
+            common.out_strip_spec(bh, nw, bt),
+            common.out_strip_spec(bh, nw, bt),
+        )
+        out_shape = (
+            jax.ShapeDtypeStruct((b, h, nw), jnp.uint32),
+            jax.ShapeDtypeStruct((b, h, nw), jnp.uint32),
+        )
+    else:
+        out_specs = common.out_strip_spec(bh, w, bt)
+        out_dtype = jnp.float32 if emit == "nms" else jnp.uint8
+        out_shape = jax.ShapeDtypeStruct((b, h, w), out_dtype)
     return pl.pallas_call(
         functools.partial(
             _kernel,
@@ -144,11 +182,10 @@ def fused_canny_strips(
             low=low,
             high=high,
             emit=emit,
-            h_true=h_true,
         ),
-        grid=(n,),
-        in_specs=[prev, cur, nxt],
-        out_specs=common.out_strip_spec(bh, w),
-        out_shape=jax.ShapeDtypeStruct((h, w), out_dtype),
+        grid=(b // bt, n),
+        in_specs=[prev, cur, nxt, common.per_image_spec(2, bt)],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
-    )(img, img, img)
+    )(imgs, imgs, imgs, true_hw.astype(jnp.int32))

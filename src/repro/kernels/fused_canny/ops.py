@@ -1,4 +1,10 @@
-"""Jit'd wrappers: fused front-end and the full Pallas Canny detector."""
+"""Jit'd wrappers: fused front-end and the full Pallas Canny detector.
+
+Batch-native: (b, h, w) inputs run in ONE pallas_call per stage (front-
+end, then one per hysteresis sweep). ``true_hw`` lets the serving engine
+run shape-bucketed batches — images padded to a common bucket are
+processed bit-identically to their unpadded selves.
+"""
 
 from __future__ import annotations
 
@@ -9,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels import common
 from repro.kernels.fused_canny.fused_canny import fused_canny_strips
-from repro.kernels.hysteresis.ops import hysteresis_from_masks
+from repro.kernels.hysteresis.ops import hysteresis_from_masks, packed_fixpoint
 
 
 @functools.partial(
@@ -18,7 +24,6 @@ from repro.kernels.hysteresis.ops import hysteresis_from_masks
         "sigma", "radius", "low", "high", "l2_norm", "emit", "block_rows", "interpret",
     ),
 )
-@common.batchify
 def fused_frontend(
     img: jax.Array,
     sigma: float = 1.4,
@@ -29,16 +34,24 @@ def fused_frontend(
     emit: str = "code",
     block_rows: int | None = None,
     interpret: bool | None = None,
+    true_hw: jax.Array | None = None,
 ) -> jax.Array:
     """Gauss+Sobel+NMS(+threshold) in one kernel pass."""
-    img = img.astype(jnp.float32)
+    if emit not in ("nms", "code"):  # "packed" flows through fused_canny only
+        raise ValueError(emit)
+    imgs, had_batch = common.as_batch(img.astype(jnp.float32))
     h2 = radius + 2
-    bh = block_rows or common.pick_block_rows(img.shape[-2], min_rows=h2)
-    padded, h = common.pad_rows_to_multiple(img, bh)
+    bh = block_rows or common.pick_block_rows(imgs.shape[-2], min_rows=h2)
+    padded, h = common.pad_rows_to_multiple(imgs, bh)
+    if true_hw is None:
+        true_hw = jnp.broadcast_to(
+            jnp.asarray([h, imgs.shape[-1]], jnp.int32), (imgs.shape[0], 2)
+        )
     out = fused_canny_strips(
-        padded, sigma, radius, low, high, l2_norm, emit, bh, interpret, h_true=h
+        padded, sigma, radius, low, high, l2_norm, emit, bh, interpret, true_hw
     )
-    return common.crop_rows(out, h)
+    out = common.crop_rows(out, h)
+    return out if had_batch else out[0]
 
 
 @functools.partial(
@@ -56,11 +69,36 @@ def fused_canny(
     l2_norm: bool = True,
     block_rows: int | None = None,
     interpret: bool | None = None,
+    true_hw: jax.Array | None = None,
 ) -> jax.Array:
-    """Full Canny: fused front-end + in-VMEM-fixpoint hysteresis. uint8 edges."""
-    code = fused_frontend(
-        img, sigma, radius, low, high, l2_norm, "code", block_rows, interpret
+    """Full Canny: fused front-end + in-VMEM-fixpoint hysteresis. uint8 edges.
+
+    When W divides 32 the front-end hands the hysteresis kernel bit-packed
+    strong/weak words directly (2 bit/px between stages, no unpacked mask
+    ever touches HBM); otherwise it falls back to the uint8 code map.
+    """
+    imgs, had_batch = common.as_batch(img.astype(jnp.float32))
+    w = imgs.shape[-1]
+    if w % 32:
+        code = fused_frontend(
+            imgs, sigma, radius, low, high, l2_norm, "code", block_rows, interpret,
+            true_hw,
+        )
+        edges = hysteresis_from_masks(code >= 2, code >= 1, block_rows, interpret)
+        return edges if had_batch else edges[0]
+
+    h2 = radius + 2
+    bh = block_rows or common.pick_block_rows(imgs.shape[-2], min_rows=h2)
+    padded, h = common.pad_rows_to_multiple(imgs, bh)
+    if true_hw is None:
+        true_hw = jnp.broadcast_to(
+            jnp.asarray([h, w], jnp.int32), (imgs.shape[0], 2)
+        )
+    # rows beyond each image's true height carry zero code by kernel
+    # construction, so the fixpoint can run on the padded grid directly
+    strong_w, weak_w = fused_canny_strips(
+        padded, sigma, radius, low, high, l2_norm, "packed", bh, interpret, true_hw
     )
-    strong = code >= 2
-    weak = code >= 1
-    return hysteresis_from_masks(strong, weak, block_rows, interpret)
+    packed = packed_fixpoint(strong_w, weak_w, bh, interpret)
+    edges = common.crop_rows(common.unpack_mask(packed), h)
+    return edges if had_batch else edges[0]

@@ -1,9 +1,10 @@
-"""Separable Gaussian blur — Pallas TPU row-strip kernel.
+"""Separable Gaussian blur — batch-native Pallas row-strip kernel.
 
-One VMEM round-trip per strip: the halo-extended strip is convolved
-horizontally (in-register shifts across the full width) then vertically
-(static row slices), both passes fused so the intermediate never touches
-HBM. Taps accumulate in ascending order to match the oracle bit-for-bit.
+One VMEM round-trip per tile: the halo-extended (BT, BH+2r, W) tile is
+convolved horizontally (in-register shifts across the full width) then
+vertically (static row slices), both passes fused so the intermediate
+never touches HBM, and both vectorized across the BT in-block images.
+Taps accumulate in ascending order to match the oracle bit-for-bit.
 """
 
 from __future__ import annotations
@@ -21,46 +22,52 @@ from repro.kernels import common
 def _kernel(prev_ref, cur_ref, nxt_ref, out_ref, *, taps: tuple[float, ...], radius: int):
     r = radius
     ext = common.assemble_rows(prev_ref[...], cur_ref[...], nxt_ref[...], r, "edge")
-    bh, w = cur_ref.shape
+    bt, bh, w = cur_ref.shape
 
-    # horizontal pass over the halo-extended strip
+    # horizontal pass over the halo-extended tile
     xp = common.pad_cols(ext, r, "edge")
     tmp = jnp.zeros_like(ext)
     for i in range(2 * r + 1):
-        tmp = tmp + taps[i] * jax.lax.slice_in_dim(xp, i, i + w, axis=1)
+        tmp = tmp + taps[i] * jax.lax.slice_in_dim(xp, i, i + w, axis=-1)
 
     # vertical pass consumes the halo rows
-    out = jnp.zeros((bh, w), jnp.float32)
+    out = jnp.zeros((bt, bh, w), jnp.float32)
     for i in range(2 * r + 1):
-        out = out + taps[i] * jax.lax.slice_in_dim(tmp, i, i + bh, axis=0)
+        out = out + taps[i] * jax.lax.slice_in_dim(tmp, i, i + bh, axis=-2)
     out_ref[...] = out
 
 
 def gaussian_blur_strips(
-    img: jax.Array,
+    imgs: jax.Array,
     sigma: float,
     radius: int,
     block_rows: int | None = None,
     interpret: bool | None = None,
+    batch_block: int | None = None,
 ) -> jax.Array:
-    """(H, W) f32 → blurred (H, W) f32. H must be a multiple of block_rows."""
+    """(B, H, W) f32 → blurred (B, H, W) f32 in ONE pallas_call.
+
+    H must be a multiple of block_rows; the (batch, strip) grid covers
+    the whole batch.
+    """
     if interpret is None:
         interpret = common.default_interpret()
-    h, w = img.shape
+    b, h, w = imgs.shape
     bh = block_rows or common.pick_block_rows(h)
     if h % bh != 0:
         raise ValueError(f"H={h} not a multiple of block_rows={bh}")
     if bh < radius:
         raise ValueError(f"block_rows={bh} must be >= radius={radius}")
     n = h // bh
+    bt = batch_block or common.pick_batch_block(b, bh, w)
     taps = tuple(float(t) for t in gaussian_kernel1d(sigma, radius))
 
-    prev, cur, nxt = common.strip_specs(n, bh, w)
+    prev, cur, nxt = common.strip_specs(n, bh, w, bt)
     return pl.pallas_call(
         functools.partial(_kernel, taps=taps, radius=radius),
-        grid=(n,),
+        grid=(b // bt, n),
         in_specs=[prev, cur, nxt],
-        out_specs=common.out_strip_spec(bh, w),
-        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+        out_specs=common.out_strip_spec(bh, w, bt),
+        out_shape=jax.ShapeDtypeStruct((b, h, w), jnp.float32),
         interpret=interpret,
-    )(img, img, img)
+    )(imgs, imgs, imgs)

@@ -12,7 +12,6 @@ from repro.kernels.gaussian.gaussian import gaussian_blur_strips
 
 
 @functools.partial(jax.jit, static_argnames=("sigma", "radius", "block_rows", "interpret"))
-@common.batchify
 def gaussian_blur(
     img: jax.Array,
     sigma: float = 1.4,
@@ -20,9 +19,13 @@ def gaussian_blur(
     block_rows: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Gaussian blur of an (h, w) or (b, h, w) image, any float dtype in."""
-    img = img.astype(jnp.float32)
-    bh = block_rows or common.pick_block_rows(img.shape[-2], min_rows=radius)
-    padded, h = common.pad_rows_to_multiple(img, bh)
+    """Gaussian blur of an (h, w) or (b, h, w) image, any float dtype in.
+
+    Batches run in a single pallas_call over a (batch, strip) grid.
+    """
+    imgs, had_batch = common.as_batch(img.astype(jnp.float32))
+    bh = block_rows or common.pick_block_rows(imgs.shape[-2], min_rows=radius)
+    padded, h = common.pad_rows_to_multiple(imgs, bh)
     out = gaussian_blur_strips(padded, sigma, radius, bh, interpret)
-    return common.crop_rows(out, h)
+    out = common.crop_rows(out, h)
+    return out if had_batch else out[0]

@@ -1,4 +1,12 @@
-"""Jit'd hysteresis: XLA while-loop around the in-VMEM fixpoint kernel."""
+"""Jit'd hysteresis: ONE XLA while-loop drives the whole batch.
+
+Masks are bit-packed once (32 px/uint32 word), every sweep is a single
+pallas_call over the (batch, strip) grid on the packed words, and the
+(B, n_strips) changed map is reduced once per sweep to decide whether to
+launch another. A batch therefore costs max-over-images sweeps of
+whole-batch launches — not b lockstep per-image loops each paying
+per-launch overhead — and each sweep moves 1 bit/px of HBM traffic.
+"""
 
 from __future__ import annotations
 
@@ -12,6 +20,26 @@ from repro.kernels import common
 from repro.kernels.hysteresis.hysteresis import hysteresis_sweep_strips
 
 
+def packed_fixpoint(
+    strong_words: jax.Array,
+    weak_words: jax.Array,
+    block_rows: int,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Drive packed (B, H, W//32) masks to the global fixpoint: one XLA
+    while-loop of whole-batch sweep launches. H must divide block_rows."""
+
+    def body(carry):
+        e, _ = carry
+        e2, changed = hysteresis_sweep_strips(e, weak_words, block_rows, interpret)
+        return e2, changed.sum()
+
+    packed, _ = lax.while_loop(
+        lambda c: c[1] > 0, body, (strong_words, jnp.asarray(1, jnp.int32))
+    )
+    return packed
+
+
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
 def hysteresis_from_masks(
     strong: jax.Array,
@@ -20,26 +48,17 @@ def hysteresis_from_masks(
     interpret: bool | None = None,
 ) -> jax.Array:
     """(h,w) or (b,h,w) strong/weak bool|uint8 masks → uint8 edges."""
-    if strong.ndim == 3:
-        return jax.vmap(
-            lambda s, wk: hysteresis_from_masks(s, wk, block_rows, interpret)
-        )(strong, weak)
-    s8 = strong.astype(jnp.uint8)
-    w8 = weak.astype(jnp.uint8)
+    s8, had_batch = common.as_batch(strong.astype(jnp.uint8))
+    w8, _ = common.as_batch(weak.astype(jnp.uint8))
     bh = block_rows or common.pick_block_rows(s8.shape[-2], min_rows=1)
     # zero pad: no pixels → no paths → connectivity exactly preserved
     sp, h = common.pad_rows_to_multiple(s8, bh, mode="zero")
     wp, _ = common.pad_rows_to_multiple(w8, bh, mode="zero")
-
-    def body(carry):
-        e, _ = carry
-        e2, changed = hysteresis_sweep_strips(e, wp, bh, interpret)
-        return e2, changed.sum()
-
-    edges, _ = lax.while_loop(
-        lambda c: c[1] > 0, body, (sp, jnp.asarray(1, jnp.int32))
-    )
-    return common.crop_rows(edges, h)
+    sp, w = common.pad_cols_to_multiple(sp, 32)
+    wp, _ = common.pad_cols_to_multiple(wp, 32)
+    packed = packed_fixpoint(common.pack_mask(sp), common.pack_mask(wp), bh, interpret)
+    edges = common.crop_rows(common.unpack_mask(packed)[..., :w], h)
+    return edges if had_batch else edges[0]
 
 
 @functools.partial(jax.jit, static_argnames=("low", "high", "block_rows", "interpret"))

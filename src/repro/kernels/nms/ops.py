@@ -19,13 +19,12 @@ def nms(
     interpret: bool | None = None,
 ) -> jax.Array:
     """(h, w) or (b, h, w) magnitude+bins → suppressed magnitude."""
-    if mag.ndim == 3:
-        return jax.vmap(lambda m, d: nms(m, d, block_rows, interpret))(mag, dirs)
-    mag = mag.astype(jnp.float32)
-    bh = block_rows or common.pick_block_rows(mag.shape[-2], min_rows=1)
+    mags, had_batch = common.as_batch(mag.astype(jnp.float32))
+    dirss, _ = common.as_batch(dirs)
+    bh = block_rows or common.pick_block_rows(mags.shape[-2], min_rows=1)
     # zero rows: out-of-image neighbours count 0 — edge clones would feed
     # wrong diagonal comparisons at the true bottom border.
-    mp, h = common.pad_rows_to_multiple(mag, bh, mode="zero")
-    dp, _ = common.pad_rows_to_multiple(dirs, bh, mode="zero")
-    out = nms_strips(mp, dp, bh, interpret)
-    return common.crop_rows(out, h)
+    mp, h = common.pad_rows_to_multiple(mags, bh, mode="zero")
+    dp, _ = common.pad_rows_to_multiple(dirss, bh, mode="zero")
+    out = common.crop_rows(nms_strips(mp, dp, bh, interpret), h)
+    return out if had_batch else out[0]

@@ -12,7 +12,6 @@ from repro.kernels.sobel.sobel import sobel_strips
 
 
 @functools.partial(jax.jit, static_argnames=("l2_norm", "block_rows", "interpret"))
-@common.batchify
 def sobel(
     img: jax.Array,
     l2_norm: bool = True,
@@ -20,8 +19,9 @@ def sobel(
     interpret: bool | None = None,
 ):
     """(h, w) or (b, h, w) → (magnitude f32, direction-bin uint8)."""
-    img = img.astype(jnp.float32)
-    bh = block_rows or common.pick_block_rows(img.shape[-2], min_rows=1)
-    padded, h = common.pad_rows_to_multiple(img, bh)
+    imgs, had_batch = common.as_batch(img.astype(jnp.float32))
+    bh = block_rows or common.pick_block_rows(imgs.shape[-2], min_rows=1)
+    padded, h = common.pad_rows_to_multiple(imgs, bh)
     mag, dirs = sobel_strips(padded, l2_norm, bh, interpret)
-    return common.crop_rows(mag, h), common.crop_rows(dirs, h)
+    mag, dirs = common.crop_rows(mag, h), common.crop_rows(dirs, h)
+    return (mag, dirs) if had_batch else (mag[0], dirs[0])

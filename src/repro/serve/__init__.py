@@ -1,0 +1,3 @@
+from repro.serve.engine import BucketedCanny, CannyEngine, EngineStats
+
+__all__ = ["BucketedCanny", "CannyEngine", "EngineStats"]

@@ -15,6 +15,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 from repro.core.canny import CannyParams, canny_reference
 from repro.core.canny.golden_circle import plan, compile_plan
 from repro.core.canny.pipeline import make_canny
@@ -63,7 +65,7 @@ def main():
     x = np.arange(32, dtype=np.float32)
     want_scan = np.cumsum(x)
     scan_fn = jax.jit(
-        jax.shard_map(
+        compat.shard_map(
             lambda xl: pattern_scan(jnp.add, xl, axis_name="model"),
             mesh=mesh,
             in_specs=P("model"),

@@ -1,0 +1,163 @@
+"""Batch-grid kernels + serving engine vs the per-image reference oracle.
+
+The batch dimension is a first-class Pallas grid axis: a whole (b, h, w)
+batch runs in ONE pallas_call per stage. These tests pin the property
+that makes that safe — batched outputs are ELEMENT-WISE IDENTICAL to
+running each image alone through the numpy/jnp oracles — including the
+regression traps: odd heights that force row padding, and batches whose
+images need different hysteresis sweep counts (a lockstep-loop bug would
+over- or under-propagate some image).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.canny import CannyParams, canny_reference, make_canny
+from repro.data.images import synthetic_image
+from repro.kernels.fused_canny import fused_canny, fused_frontend, fused_frontend_ref
+from repro.kernels.gaussian import gaussian_blur, gaussian_ref
+from repro.kernels.hysteresis import hysteresis_from_masks, hysteresis_ref
+from repro.kernels.nms import nms, nms_ref
+from repro.kernels.sobel import sobel, sobel_ref
+from repro.serve.engine import CannyEngine
+
+PARAMS = CannyParams(sigma=1.4, radius=2, low=0.08, high=0.2)
+
+
+def _batch(b, h, w, seed=0):
+    return np.stack([synthetic_image(h, w, seed=seed + i) for i in range(b)])
+
+
+# ---------------- per-stage kernels, batched vs per-image oracle ------------
+@pytest.mark.parametrize("b", [1, 3])
+@pytest.mark.parametrize("shape", [(64, 64), (61, 77)])  # odd H % block_rows != 0
+def test_gaussian_batched_matches_per_image(b, shape):
+    imgs = _batch(b, *shape, seed=11)
+    got = np.asarray(gaussian_blur(jnp.asarray(imgs), block_rows=16))
+    for i in range(b):
+        want = np.asarray(gaussian_ref(jnp.asarray(imgs[i]), 1.4, 2))
+        np.testing.assert_allclose(got[i], want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b", [1, 3])
+def test_sobel_batched_matches_per_image(b):
+    imgs = _batch(b, 61, 77, seed=23)
+    mag, dirs = sobel(jnp.asarray(imgs), block_rows=16)
+    for i in range(b):
+        wmag, wdirs = sobel_ref(jnp.asarray(imgs[i]))
+        np.testing.assert_allclose(np.asarray(mag)[i], np.asarray(wmag), rtol=1e-5, atol=1e-5)
+        assert (np.asarray(dirs)[i] == np.asarray(wdirs)).all()
+
+
+@pytest.mark.parametrize("b", [1, 3])
+def test_nms_batched_matches_per_image(b):
+    refs = [sobel_ref(jnp.asarray(synthetic_image(61, 77, seed=23 + i))) for i in range(b)]
+    mag = jnp.stack([m for m, _ in refs])
+    dirs = jnp.stack([d for _, d in refs])
+    sup = np.asarray(nms(mag, dirs, block_rows=16))
+    for i in range(b):
+        want = np.asarray(nms_ref(*refs[i]))
+        np.testing.assert_allclose(sup[i], want, rtol=0, atol=0)
+
+
+# ---------------- fused front-end + full fused canny ------------------------
+@pytest.mark.parametrize("b", [1, 3])
+@pytest.mark.parametrize("shape", [(64, 64), (61, 77)])
+def test_fused_frontend_batched_matches_per_image(b, shape):
+    imgs = _batch(b, *shape, seed=37)
+    got = np.asarray(fused_frontend(jnp.asarray(imgs), 1.4, 2, 0.08, 0.2, True, "nms", 16))
+    for i in range(b):
+        want = np.asarray(
+            fused_frontend_ref(jnp.asarray(imgs[i]), 1.4, 2, 0.08, 0.2, True, "nms")
+        )
+        np.testing.assert_allclose(got[i], want, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("b", [1, 3])
+@pytest.mark.parametrize("shape", [(64, 64), (61, 77)])
+def test_fused_canny_batched_bit_exact(b, shape):
+    imgs = _batch(b, *shape, seed=41)
+    got = np.asarray(fused_canny(jnp.asarray(imgs), 1.4, 2, 0.08, 0.2))
+    for i in range(b):
+        want = canny_reference(imgs[i], PARAMS)
+        assert (got[i] == want).all(), f"image {i}: {(got[i] != want).mean():.2%} differ"
+
+
+# ---------------- hysteresis: per-image sweep counts ------------------------
+def test_hysteresis_batched_different_sweep_counts():
+    """One image converges instantly, one needs a long serpentine chain
+    crossing every strip boundary, one is in between. Lockstep bugs show
+    up as early-terminated (or over-propagated) members."""
+    h, w = 48, 33
+    strong = np.zeros((3, h, w), bool)
+    weak = np.zeros((3, h, w), bool)
+    # image 0: isolated strong pixel, zero extra sweeps
+    strong[0, 5, 5] = weak[0, 5, 5] = True
+    # image 1: serpentine weak path seeded at one end (worst case)
+    for r in range(h):
+        if r % 2 == 0:
+            weak[1, r, :] = True
+        else:
+            weak[1, r, -1 if (r // 2) % 2 == 0 else 0] = True
+    strong[1, 0, 0] = weak[1, 0, 0] = True
+    # image 2: one straight vertical chain
+    weak[2, :, 16] = True
+    strong[2, 0, 16] = True
+    got = np.asarray(
+        hysteresis_from_masks(jnp.asarray(strong), jnp.asarray(weak), block_rows=8)
+    )
+    for i in range(3):
+        want = np.asarray(
+            hysteresis_ref(jnp.asarray(strong[i]), jnp.asarray(weak[i]))
+        )
+        assert (got[i] == want).all(), f"image {i} diverged from per-image fixpoint"
+    assert got[1].sum() == weak[1].sum()  # the snake fully propagated
+
+
+@pytest.mark.parametrize("b", [1, 3])
+def test_hysteresis_batched_random(b):
+    rng = np.random.default_rng(99)
+    weak = rng.uniform(size=(b, 50, 37)) < 0.4
+    strong = weak & (rng.uniform(size=(b, 50, 37)) < 0.12)
+    got = np.asarray(
+        hysteresis_from_masks(jnp.asarray(strong), jnp.asarray(weak), block_rows=16)
+    )
+    for i in range(b):
+        want = np.asarray(hysteresis_ref(jnp.asarray(strong[i]), jnp.asarray(weak[i])))
+        assert (got[i] == want).all()
+
+
+# ---------------- serving engine -------------------------------------------
+def test_engine_mixed_sizes_bit_exact_zero_recompiles():
+    engine = CannyEngine(PARAMS, bucket_multiple=64, max_batch=4)
+    sizes = [(96, 128), (100, 100), (96, 128), (61, 77)]
+    reqs = [synthetic_image(h, w, seed=60 + i) for i, (h, w) in enumerate(sizes)]
+    out = engine.process(reqs)
+    for r, e in zip(reqs, out):
+        assert e.shape == r.shape
+        assert (e == canny_reference(r, PARAMS)).all()
+    compiles = engine.stats.compiles
+    assert compiles == len({(-(-h // 64) * 64, -(-w // 64) * 64) for h, w in sizes})
+    # second wave with the same batch profile but NEW exact shapes inside
+    # the same (batch, h, w) buckets → no new compiles
+    reqs2 = [
+        synthetic_image(90, 120, seed=70),
+        synthetic_image(120, 90, seed=71),
+        synthetic_image(100, 128, seed=72),
+        synthetic_image(50, 70, seed=73),
+    ]
+    out2 = engine.process(reqs2)
+    for r, e in zip(reqs2, out2):
+        assert (e == canny_reference(r, PARAMS)).all()
+    assert engine.stats.compiles == compiles
+
+
+def test_make_canny_fused_is_shape_bucketed():
+    det = make_canny(PARAMS, backend="fused")
+    img = synthetic_image(96, 128, seed=80)
+    assert (np.asarray(det(jnp.asarray(img))) == canny_reference(img, PARAMS)).all()
+    c0 = det.compiles
+    img2 = synthetic_image(100, 100, seed=81)  # same 128x128 bucket
+    assert (np.asarray(det(jnp.asarray(img2))) == canny_reference(img2, PARAMS)).all()
+    assert det.compiles == c0

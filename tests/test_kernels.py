@@ -6,7 +6,7 @@ Shape/dtype sweeps + hypothesis property tests, as required per kernel.
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.canny import CannyParams, canny, canny_reference
 from repro.data.images import synthetic_image
