@@ -10,6 +10,8 @@ the LM table reads the dry-run artifacts.
   image_size_scaling             paper §2.2 ("high quality images")
   hysteresis_modes               paper claim C3 (serial vs parallel fixpoint)
   batched_throughput             batch-grid fused path vs vmap-of-2D lifting
+  stream_fps                     farm/stream workload: temporal warm-start
+                                 hysteresis on vs off (bit-identical edges)
   roofline_table                 §Roofline summary from experiments/dryrun
 
 Besides the CSV on stdout, results land in ``BENCH_<git rev>.json`` next
@@ -187,6 +189,37 @@ def batched_throughput(h=512, w=512, sizes=(1, 4, 8)):
     assert exact, "batch-grid fused output diverged from canny_reference"
 
 
+def stream_fps(frames=24, h=256, w=256, hold=4, block_rows=32):
+    """Streaming workload (paper's farm-of-pipelines): fps over a
+    temporally coherent synthetic video with warm-start hysteresis on vs
+    off. Warm threads the previous frame's packed edge words into the
+    fixpoint seed (exactness-gated), so edges must stay bit-identical —
+    only sweep counts and wall clock may move."""
+    from repro.stream import SyntheticStream, TemporalCanny
+
+    source = SyntheticStream(frames, h, w, seed=0, hold=hold, n_moving=4)
+    outs = {}
+    for warm in (False, True):
+        TemporalCanny(PARAMS, warm=warm, block_rows=block_rows).step(
+            jnp.asarray(source.frame(0))  # compile outside the clock
+        )
+        det = TemporalCanny(PARAMS, warm=warm, block_rows=block_rows)
+        t0 = time.perf_counter()
+        outs[warm] = [np.asarray(det(jnp.asarray(f))) for f in source]
+        dt = time.perf_counter() - t0
+        tot = det.cost_totals()
+        name = "stream_fps_warm" if warm else "stream_fps_cold"
+        row(
+            name,
+            dt / frames * 1e6,
+            f"{frames/dt:.2f} fps launches={tot['launches']} "
+            f"dilations={tot['dilations']}",
+        )
+    exact = all((a == b).all() for a, b in zip(outs[False], outs[True]))
+    row("stream_warm_bit_exact", 0.0, f"warm_vs_cold={exact}")
+    assert exact, "warm-start stream diverged from cold"
+
+
 def roofline_table():
     """LM cells summary from the dry-run artifacts (see EXPERIMENTS.md)."""
     d = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
@@ -235,6 +268,7 @@ def main() -> None:
     image_size_scaling()
     hysteresis_modes()
     batched_throughput()
+    stream_fps()
     roofline_table()
     path = write_artifact()
     print(f"# wrote {path}", file=sys.stderr)

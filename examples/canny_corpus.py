@@ -1,10 +1,15 @@
-"""End-to-end driver: stream a synthetic image corpus through the sharded
-Canny pipeline with double buffering, checkpoint/resume, and a watchdog.
+"""End-to-end driver: stream a synthetic image corpus through the Canny
+pipeline via the streaming subsystem, with checkpoint/resume and a
+watchdog.
 
-This is the paper-kind end-to-end run (image processing, not LM training):
-a few hundred batches of images flow through the detector; killing and
-restarting the script resumes exactly where it left off (deterministic
-(seed, step) corpus + step-counter checkpoint).
+This is the paper-kind end-to-end run (image processing, not LM
+training): a few hundred batches of images flow through the detector;
+killing and restarting the script resumes exactly where it left off
+(deterministic (seed, step) corpus + step-counter checkpoint). The data
+path is the stream subsystem's — a seekable ``CorpusReplay`` source
+behind a bounded ``Prefetcher``, drained by the farm scheduler (source
+synthesis, H2D transfer, and device compute all overlap) — the same code
+path ``repro.launch.canny_stream`` uses for video.
 
 Run:  PYTHONPATH=src python examples/canny_corpus.py [--batches 200]
 """
@@ -17,18 +22,11 @@ import time
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import Checkpointer
 from repro.core.canny import CannyParams, make_canny
-from repro.core.patterns.pipeline import PatternPipeline
 from repro.distributed.fault_tolerance import StepWatchdog
-from repro.data.images import synthetic_batch
-
-
-def corpus(seed: int, start: int, total: int, batch: int, h: int, w: int):
-    for step in range(start, total):
-        yield step, synthetic_batch(batch, h, w, seed=seed * 100_000 + step)
+from repro.stream import CorpusReplay, FarmScheduler, Prefetcher
 
 
 def main():
@@ -37,6 +35,7 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--height", type=int, default=256)
     ap.add_argument("--width", type=int, default=256)
+    ap.add_argument("--workers", type=int, default=1)
     ap.add_argument("--ckpt-dir", default="canny_corpus_ckpt")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -58,16 +57,24 @@ def main():
         start = latest + 1
         print(f"resumed at batch {start} ({stats['images']} images done)")
 
-    pipe = PatternPipeline(detector)  # double-buffered H2D overlap
+    # seekable (seed, step) source + bounded prefetch + farm scheduler:
+    # the stream subsystem replaces the hand-rolled corpus/double-buffer.
+    source = CorpusReplay(
+        steps=args.batches,
+        height=args.height,
+        width=args.width,
+        seed=args.seed,
+        batch=args.batch,
+        start=start,
+    )
+    # shared bucketed detector; workers yield device arrays so the
+    # pipeline's H2D(i+1) still overlaps compute(i) — the host sync
+    # happens once, at emission, inside StreamWorker
+    sched = FarmScheduler(params, n_workers=args.workers, detector=detector)
     wd = StepWatchdog()
-    feed = corpus(args.seed, start, args.batches, args.batch, args.height, args.width)
     t0 = time.perf_counter()
-    for step, edges in zip(
-        range(start, args.batches),
-        pipe.run(imgs for _, imgs in feed),
-    ):
+    for step, e in zip(range(start, args.batches), sched.run(Prefetcher(source))):
         wd.step_start()
-        e = np.asarray(edges)
         stats["edge_px"] += float(e.sum())
         stats["images"] += e.shape[0]
         report = wd.step_end()
@@ -91,6 +98,7 @@ def main():
     if done > 0:
         mpx = done * args.batch * args.height * args.width / 1e6
         print(f"processed {done} batches ({mpx:.0f} MPx) in {dt:.1f}s → {mpx/dt:.2f} MPx/s")
+        print(f"stream: {sched.stats.summary()}")
     ck.save(args.batches - 1, {
         "edge_px": jnp.asarray(stats["edge_px"]),
         "images": jnp.asarray(stats["images"], jnp.int32),

@@ -34,6 +34,34 @@ def double_threshold(nms_mag: jax.Array, params: CannyParams):
     return strong, weak
 
 
+def warm_seed(strong, weak, prev_strong, prev_weak, prev_edges):
+    """Temporal warm-start seed for the hysteresis fixpoint — EXACT.
+
+    The fixpoint is the least fixed point of the monotone map
+    F(e) = (dilate₈(e) ∧ weak) ∨ e started from a seed ⊇ strong; any seed
+    that is also a SUBSET of the true answer E = closure(strong, weak)
+    converges to exactly E (iterates increase and stay inside E). The
+    previous frame's edges are such a subset whenever the masks only
+    GREW: strongₚ ⊆ strong ∧ weakₚ ⊆ weak ⇒ Eₚ ⊆ E by monotonicity of
+    closure in both arguments. The gate below checks that per image with
+    pure bitwise ops and falls back to the cold seed (= strong) the
+    moment any mask bit disappeared — so the result is bit-identical to
+    cold hysteresis on EVERY frame, and static / grow-only frames start
+    at (or near) the answer and converge in ~1 sweep.
+
+    Works elementwise on bool masks and on bit-packed uint32 words alike;
+    inputs are (b, h, w) / (b, h, w//32). An all-zero previous state is a
+    valid "no history" value: the gate passes and the extra seed is empty,
+    i.e. frame 0 is automatically cold.
+    """
+    removed = (prev_strong & ~strong) | (prev_weak & ~weak)
+    grew_only = ~jnp.any(removed != 0, axis=(-2, -1))  # (b,)
+    extra = jnp.where(
+        grew_only[..., None, None], prev_edges & weak, jnp.zeros_like(prev_edges)
+    )
+    return strong | extra
+
+
 def _dilate8(e: jax.Array, ctx: StencilCtx) -> jax.Array:
     """8-connected binary dilation (zero-padded borders)."""
     h, w = e.shape[-2], e.shape[-1]
@@ -66,27 +94,45 @@ def hysteresis_fixpoint(
     exchange (useful when exchanges dominate; correctness is unaffected
     because the loop runs to global convergence either way).
     """
+    return hysteresis_fixpoint_count(strong, weak, ctx, local_sweeps)[0]
+
+
+def hysteresis_fixpoint_count(
+    strong: jax.Array,
+    weak: jax.Array,
+    ctx: StencilCtx,
+    local_sweeps: int = 1,
+    seed: jax.Array | None = None,
+):
+    """Fixpoint + sweep count; optionally seeded (see ``warm_seed``).
+
+    ``seed`` must satisfy strong ⊆ seed ⊆ closure(strong, weak) — then the
+    answer is unchanged and only the sweep count (returned int32 scalar,
+    the stat the streaming layer reports) depends on the seed.
+    """
     strong = strong.astype(jnp.bool_)
     weak = weak.astype(jnp.bool_)
     local_ctx = StencilCtx(None, ctx.pad_mode)  # shard-local sweeps
 
     def body(carry):
-        edges, _ = carry
+        edges, _, n = carry
         new = edges
         for _ in range(max(1, local_sweeps) - 1):
             new = _dilate8(new, local_ctx) & weak | new
         new = _dilate8(new, ctx) & weak | new  # sweep with halo exchange
         changed = jnp.any(new != edges)
         changed = ctx.any_global(changed)
-        return new, changed
+        return new, changed, n + 1
 
     def cond(carry):
         return carry[1]
 
-    edges0 = strong
+    edges0 = strong if seed is None else seed.astype(jnp.bool_)
     # prime the loop: one sweep decides whether we iterate at all
-    edges, _ = lax.while_loop(cond, body, (edges0, jnp.asarray(True)))
-    return edges.astype(jnp.uint8)
+    edges, _, n = lax.while_loop(
+        cond, body, (edges0, jnp.asarray(True), jnp.asarray(0, jnp.int32))
+    )
+    return edges.astype(jnp.uint8), n
 
 
 def hysteresis_stage(

@@ -1,7 +1,8 @@
 """Structured parallel patterns — the GCP "kernel layer" on TPU.
 
 The paper expresses the Canny pipeline with Cilk Plus structured patterns
-(map / stencil / pipeline / reduce) and lets the runtime schedule them.
+(map / stencil / pipeline / farm / reduce) and lets the runtime schedule
+them.
 Here the same vocabulary is provided as composable JAX combinators that
 lower to SPMD programs: maps vectorize onto the VPU, stencils exchange
 halos across mesh shards with ``lax.ppermute``, reductions become
@@ -24,6 +25,7 @@ from repro.core.patterns.stencil import (
 )
 from repro.core.patterns.reduce import pattern_reduce, tree_allreduce
 from repro.core.patterns.scan import blocked_assoc_scan, pattern_scan
+from repro.core.patterns.farm import Farm, farm_map
 from repro.core.patterns.pipeline import PatternPipeline, pipeline_stages
 from repro.core.patterns.partition import (
     even_tiles,
@@ -43,6 +45,8 @@ __all__ = [
     "tree_allreduce",
     "blocked_assoc_scan",
     "pattern_scan",
+    "Farm",
+    "farm_map",
     "PatternPipeline",
     "pipeline_stages",
     "even_tiles",

@@ -1,0 +1,159 @@
+"""Farm pattern — N workers drain one stream, results emitted in order.
+
+The paper's top-level composition is a *farm of pipelines*: a stream of
+images fans out to N replicated CED pipelines and the results merge back
+in input order. This module is the host-side scheduler for that shape:
+
+  * **dispatch** is round-robin over per-worker bounded queues, so the
+    frame→worker assignment is a pure function of the sequence number
+    (deterministic replay, and per-worker streams are contiguous strides
+    — worker k sees frames k, k+N, k+2N, … which keeps any per-worker
+    temporal state maximally fresh).
+  * **backpressure**: the feeder blocks when a worker's queue is full, so
+    at most ``n_workers · (queue_depth + 1)`` items are in flight and a
+    slow consumer throttles the source instead of buffering the stream.
+  * **in-order emission**: results park in a reorder buffer keyed by
+    sequence number; the consumer sees exactly the input order (paper
+    claim C4). The buffer is bounded by the same backpressure invariant:
+    ``|reorder| ≤ n_workers · (queue_depth + 2)``.
+
+Workers are either plain callables (item → result, run on a worker
+thread) or objects with a ``stream(items) → results`` iterator method
+(1:1 and order-preserving) for workers that pipeline internally, e.g. a
+double-buffered ``PatternPipeline`` overlapping H2D transfer with
+compute. Python threads suffice: the heavy lifting happens inside JAX
+dispatch/NumPy, which release the GIL.
+"""
+
+from __future__ import annotations
+
+import collections
+import queue
+import threading
+from typing import Callable, Iterable, Iterator, Sequence
+
+
+def put_cancellable(q: queue.Queue, msg, cancelled: Callable[[], bool]) -> bool:
+    """Bounded put that polls ``cancelled`` instead of blocking forever —
+    the backpressure primitive the farm feeder and the stream Prefetcher
+    share. Returns False if cancelled before the item fit."""
+    while not cancelled():
+        try:
+            q.put(msg, timeout=0.1)
+            return True
+        except queue.Full:
+            continue
+    return False
+
+
+class Farm:
+    """Farm executor over ``workers`` (callables or ``.stream`` objects)."""
+
+    def __init__(self, workers: Sequence, queue_depth: int = 2):
+        if not workers:
+            raise ValueError("farm needs at least one worker")
+        if queue_depth < 1:
+            raise ValueError("queue_depth must be >= 1")
+        self.workers = list(workers)
+        self.queue_depth = queue_depth
+        # live input queues, exposed for depth sampling by stats layers
+        self.queues: list[queue.Queue] = []
+
+    def queue_depths(self) -> list[int]:
+        """Instantaneous input-queue depths (approximate, for stats)."""
+        return [q.qsize() for q in self.queues]
+
+    def run(self, feed: Iterable) -> Iterator:
+        """Yield one result per feed item, in feed order."""
+        n = len(self.workers)
+        self.queues = qs = [queue.Queue(maxsize=self.queue_depth) for _ in range(n)]
+        reorder: dict[int, object] = {}
+        cond = threading.Condition()
+        state = {"total": None, "error": None, "cancel": False}
+
+        def post_error(exc: BaseException) -> None:
+            with cond:
+                if state["error"] is None:
+                    state["error"] = exc
+                cond.notify_all()
+
+        def cancelled() -> bool:
+            return state["cancel"]
+
+        def feeder() -> None:
+            seq = 0
+            try:
+                for item in feed:
+                    if not put_cancellable(qs[seq % n], (seq, item), cancelled):
+                        return
+                    seq += 1
+            except BaseException as exc:  # noqa: BLE001 — relayed to consumer
+                post_error(exc)
+            finally:
+                with cond:
+                    state["total"] = seq
+                    cond.notify_all()
+                for q in qs:
+                    put_cancellable(q, None, cancelled)  # end-of-stream sentinels
+
+        def worker_loop(k: int) -> None:
+            w = self.workers[k]
+            seqs: collections.deque[int] = collections.deque()
+
+            def items() -> Iterator:
+                while True:
+                    msg = qs[k].get()
+                    if msg is None or state["cancel"]:
+                        return
+                    seqs.append(msg[0])
+                    yield msg[1]
+
+            stream = getattr(w, "stream", None)
+            results = stream(items()) if stream is not None else map(w, items())
+            try:
+                for res in results:
+                    with cond:
+                        reorder[seqs.popleft()] = res
+                        cond.notify_all()
+            except BaseException as exc:  # noqa: BLE001 — relayed to consumer
+                post_error(exc)
+
+        threads = [threading.Thread(target=feeder, daemon=True)] + [
+            threading.Thread(target=worker_loop, args=(k,), daemon=True)
+            for k in range(n)
+        ]
+        for t in threads:
+            t.start()
+
+        nxt = 0
+        try:
+            while True:
+                with cond:
+                    cond.wait_for(
+                        lambda: state["error"] is not None
+                        or nxt in reorder
+                        or (state["total"] is not None and nxt >= state["total"])
+                    )
+                    if state["error"] is not None:
+                        raise state["error"]
+                    if nxt not in reorder:  # nxt == total: stream exhausted
+                        return
+                    res = reorder.pop(nxt)
+                yield res  # outside the lock: the consumer may be slow
+                nxt += 1
+        finally:
+            state["cancel"] = True
+            for q in qs:  # unblock workers parked on q.get()
+                try:
+                    q.put_nowait(None)
+                except queue.Full:
+                    pass
+            for t in threads:
+                t.join(timeout=5.0)
+
+
+def farm_map(
+    fn: Callable, feed: Iterable, n_workers: int = 2, queue_depth: int = 2
+) -> Iterator:
+    """Convenience: farm a pure function over a stream, in-order results."""
+    return Farm([fn] * n_workers, queue_depth).run(feed)

@@ -1,4 +1,10 @@
-from repro.kernels.fused_canny.ops import fused_canny, fused_frontend
+from repro.kernels.fused_canny.ops import fused_canny, fused_canny_warm, fused_frontend
 from repro.kernels.fused_canny.ref import fused_canny_ref, fused_frontend_ref
 
-__all__ = ["fused_canny", "fused_frontend", "fused_canny_ref", "fused_frontend_ref"]
+__all__ = [
+    "fused_canny",
+    "fused_canny_warm",
+    "fused_frontend",
+    "fused_canny_ref",
+    "fused_frontend_ref",
+]

@@ -13,9 +13,14 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.canny.hysteresis import warm_seed
 from repro.kernels import common
 from repro.kernels.fused_canny.fused_canny import fused_canny_strips
-from repro.kernels.hysteresis.ops import hysteresis_from_masks, packed_fixpoint
+from repro.kernels.hysteresis.ops import (
+    hysteresis_from_masks,
+    packed_fixpoint,
+    packed_fixpoint_count,
+)
 
 
 @functools.partial(
@@ -102,3 +107,59 @@ def fused_canny(
     packed = packed_fixpoint(strong_w, weak_w, bh, interpret)
     edges = common.crop_rows(common.unpack_mask(packed), h)
     return edges if had_batch else edges[0]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "sigma", "radius", "low", "high", "l2_norm", "block_rows", "interpret",
+    ),
+)
+def fused_canny_warm(
+    imgs: jax.Array,
+    prev_strong_w: jax.Array,
+    prev_weak_w: jax.Array,
+    prev_edges_w: jax.Array,
+    sigma: float = 1.4,
+    radius: int = 2,
+    low: float = 0.1,
+    high: float = 0.2,
+    l2_norm: bool = True,
+    block_rows: int | None = None,
+    interpret: bool | None = None,
+    true_hw: jax.Array | None = None,
+):
+    """One streaming frame step: fused front-end + WARM-STARTED hysteresis.
+
+    The previous frame's packed (strong, weak, edges) words are threaded
+    into the hysteresis fixpoint as an extra seed, gated per image by the
+    grow-only check (``core.canny.hysteresis.warm_seed``) that keeps the
+    result bit-identical to the cold path on every frame. All-zero prev
+    words are the valid "no history" state (frame 0 runs cold), so the
+    same compiled program serves cold and warm frames.
+
+    (b, h, w) f32 with W % 32 == 0 (the stream layer pads + anchors via
+    ``true_hw``) → (edges uint8 (b, h, w),
+                    state  = (strong_w, weak_w, edges_w) packed
+                             (b, Hp, W//32) words to thread into the next
+                             frame,
+                    cost   = (launches, dilations) int32 scalars — see
+                             ``packed_fixpoint_count`` — for the
+                             warm-savings stats).
+    """
+    imgs = imgs.astype(jnp.float32)
+    b, h, w = imgs.shape
+    if w % 32:
+        raise ValueError(f"fused_canny_warm needs W % 32 == 0, got W={w}")
+    h2 = radius + 2
+    bh = block_rows or common.pick_block_rows(h, min_rows=h2)
+    padded, h = common.pad_rows_to_multiple(imgs, bh)
+    if true_hw is None:
+        true_hw = jnp.broadcast_to(jnp.asarray([h, w], jnp.int32), (b, 2))
+    strong_w, weak_w = fused_canny_strips(
+        padded, sigma, radius, low, high, l2_norm, "packed", bh, interpret, true_hw
+    )
+    seed = warm_seed(strong_w, weak_w, prev_strong_w, prev_weak_w, prev_edges_w)
+    packed, launches, dilations = packed_fixpoint_count(seed, weak_w, bh, interpret)
+    edges = common.crop_rows(common.unpack_mask(packed), h)
+    return edges, (strong_w, weak_w, packed), (launches, dilations)

@@ -1,4 +1,15 @@
-from repro.kernels.hysteresis.ops import hysteresis, hysteresis_from_masks
+from repro.kernels.hysteresis.ops import (
+    hysteresis,
+    hysteresis_from_masks,
+    packed_fixpoint,
+    packed_fixpoint_count,
+)
 from repro.kernels.hysteresis.ref import hysteresis_ref
 
-__all__ = ["hysteresis", "hysteresis_from_masks", "hysteresis_ref"]
+__all__ = [
+    "hysteresis",
+    "hysteresis_from_masks",
+    "packed_fixpoint",
+    "packed_fixpoint_count",
+    "hysteresis_ref",
+]

@@ -28,16 +28,39 @@ def packed_fixpoint(
 ) -> jax.Array:
     """Drive packed (B, H, W//32) masks to the global fixpoint: one XLA
     while-loop of whole-batch sweep launches. H must divide block_rows."""
+    return packed_fixpoint_count(strong_words, weak_words, block_rows, interpret)[0]
+
+
+def packed_fixpoint_count(
+    seed_words: jax.Array,
+    weak_words: jax.Array,
+    block_rows: int,
+    interpret: bool | None = None,
+):
+    """``packed_fixpoint`` + its cost: → (packed, launches, dilations).
+
+    The first operand is the fixpoint SEED — the cold start passes the
+    strong words, the streaming layer passes ``warm_seed``-gated words
+    (strong ∨ previous-frame edges when the masks only grew, which leaves
+    the fixpoint unchanged but starts it at/near the answer).
+
+    ``launches`` counts HBM-level sweep launches including the final
+    no-change verification (a warm-started static frame reports 1);
+    ``dilations`` sums the productive in-VMEM masked dilations over every
+    (image, strip) tile and launch (a warm-started static frame reports
+    0) — the work a warm start saves.
+    """
 
     def body(carry):
-        e, _ = carry
+        e, _, n, work = carry
         e2, changed = hysteresis_sweep_strips(e, weak_words, block_rows, interpret)
-        return e2, changed.sum()
+        return e2, changed.sum(), n + 1, work + changed.sum()
 
-    packed, _ = lax.while_loop(
-        lambda c: c[1] > 0, body, (strong_words, jnp.asarray(1, jnp.int32))
+    zero = jnp.asarray(0, jnp.int32)
+    packed, _, n, work = lax.while_loop(
+        lambda c: c[1] > 0, body, (seed_words, zero + 1, zero, zero)
     )
-    return packed
+    return packed, n, work
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))

@@ -1,3 +1,3 @@
-from repro.serve.engine import BucketedCanny, CannyEngine, EngineStats
+from repro.serve.engine import BucketedCanny, CannyEngine, EngineStats, Ticket
 
-__all__ = ["BucketedCanny", "CannyEngine", "EngineStats"]
+__all__ = ["BucketedCanny", "CannyEngine", "EngineStats", "Ticket"]

@@ -31,6 +31,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import statistics
+import threading
 import time
 from typing import Callable, Sequence
 
@@ -50,6 +51,17 @@ def next_pow2(x: int) -> int:
     while p < x:
         p *= 2
     return p
+
+
+def percentile(samples, q: float) -> float:
+    """q-quantile of a bounded sample window; 0 when empty. Shared by the
+    engine and stream stats so the clamp logic lives in one place."""
+    if not samples:
+        return 0.0
+    if len(samples) == 1:  # quantiles() needs >= 2 points
+        return next(iter(samples))
+    qs = statistics.quantiles(samples, n=100, method="inclusive")
+    return qs[min(98, max(0, int(q * 100) - 1))]
 
 
 class _BucketCache:
@@ -144,12 +156,7 @@ class EngineStats:
         return self.true_px / self.wall_s / 1e6 if self.wall_s else 0.0
 
     def latency_ms(self, q: float) -> float:
-        if not self.latencies_ms:
-            return 0.0
-        if len(self.latencies_ms) == 1:  # quantiles() needs >= 2 points
-            return next(iter(self.latencies_ms))
-        qs = statistics.quantiles(self.latencies_ms, n=100, method="inclusive")
-        return qs[min(98, max(0, int(q * 100) - 1))]
+        return percentile(self.latencies_ms, q)
 
     def pad_overhead(self) -> float:
         return self.padded_px / self.true_px - 1.0 if self.true_px else 0.0
@@ -164,6 +171,41 @@ class EngineStats:
         )
 
 
+class Ticket:
+    """Handle for a ``CannyEngine.submit`` request; resolves at drain."""
+
+    __slots__ = ("_engine", "_result", "_error", "_done")
+
+    def __init__(self, engine: "CannyEngine"):
+        self._engine = engine
+        self._result: np.ndarray | None = None
+        self._error: BaseException | None = None
+        self._done = False
+
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    def _resolve(self, result: np.ndarray) -> None:
+        self._result = result
+        self._done = True
+
+    def _fail(self, exc: BaseException) -> None:
+        self._error = exc
+        self._done = True
+
+    def result(self) -> np.ndarray:
+        """The uint8 edge map; drains the engine if still pending. Raises
+        the wave's exception if its ``process`` call failed."""
+        while not self._done:
+            if self._engine.drain() == 0 and not self._done:
+                time.sleep(1e-3)  # another thread's in-flight wave holds us
+        if self._error is not None:
+            raise self._error
+        assert self._result is not None
+        return self._result
+
+
 class CannyEngine:
     """Batch-assembling Canny server for mixed-size request streams.
 
@@ -171,6 +213,12 @@ class CannyEngine:
     group into power-of-two batches (≤ ``max_batch``), runs one batch-
     grid launch per group, and crops per-request results back out.
     Outputs are bit-identical to running each request alone.
+
+    The async plane — ``submit`` enqueues a request and returns a
+    ``Ticket``; ``drain`` flushes everything pending as one ``process``
+    wave (so requests accumulated between drains share bucket batches).
+    The farm scheduler's micro-batching path rides this API. Thread-safe:
+    concurrent submits/drains serialize on an internal lock.
     """
 
     def __init__(
@@ -193,6 +241,42 @@ class CannyEngine:
         self.max_batch = max_batch
         self._cache = _BucketCache(serve_fn, params, interpret, donate)
         self.stats = EngineStats()
+        self._lock = threading.Lock()
+        self._drain_lock = threading.Lock()
+        self._pending: list[tuple[np.ndarray, Ticket]] = []
+
+    # -- async request plane ------------------------------------------------
+    def submit(self, image: np.ndarray) -> Ticket:
+        """Enqueue one (h, w) image; resolves at the next ``drain``."""
+        if image.ndim != 2:
+            raise ValueError(f"expected (h,w), got {image.shape}")
+        ticket = Ticket(self)
+        with self._lock:
+            self._pending.append((image, ticket))
+        return ticket
+
+    def drain(self) -> int:
+        """Run every pending request as one wave; returns how many ran.
+
+        ``_drain_lock`` serializes whole waves, so concurrent drains (e.g.
+        two threads calling ``Ticket.result``) never run ``process`` — and
+        its stats/bucket-cache updates — in parallel. A failing wave fails
+        its tickets (``result`` re-raises) instead of stranding them.
+        """
+        with self._drain_lock:
+            with self._lock:
+                pending, self._pending = self._pending, []
+            if not pending:
+                return 0
+            try:
+                results = self.process([img for img, _ in pending])
+            except BaseException as exc:
+                for _, ticket in pending:
+                    ticket._fail(exc)
+                raise
+            for (_, ticket), res in zip(pending, results):
+                ticket._resolve(res)
+            return len(pending)
 
     # -- request plane -----------------------------------------------------
     def process(self, images: Sequence[np.ndarray]) -> list[np.ndarray]:

@@ -1,0 +1,205 @@
+"""Farm scheduler — the paper's farm-of-pipelines over a frame stream.
+
+``FarmScheduler`` fans a frame source out to N workers and merges edge
+maps back in input order (``core.patterns.farm``). Each worker is a
+double-buffered ``PatternPipeline`` — transfer(i+1) overlaps compute(i)
+— wrapping either its OWN ``TemporalCanny`` (stateful warm-start; worker
+k sees frames k, k+N, … so its "previous frame" is N frames stale, which
+only costs sweeps, never correctness) or a SHARED stateless detector
+(e.g. one ``BucketedCanny``, so all workers drive one compile cache — the
+single-device "shard the bucketed engine" configuration).
+
+Because warm-start is exact and dispatch is deterministic round-robin,
+a farm with any worker count emits frames bit-identical to the
+single-worker (and cold) path — the property ``tests/test_stream.py``
+pins.
+
+``FarmScheduler.run_engine`` is the micro-batching alternative: frames
+flow through ``CannyEngine.submit``/``drain`` waves (mixed sizes OK),
+trading per-frame latency for batch-grid throughput.
+
+``StreamStats`` aggregates fps, per-stage latency (host prep+H2D vs
+device compute), farm queue depths, and the warm-start fixpoint savings
+(sweep launches + in-VMEM dilations, cumulative).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Callable, Iterable, Iterator
+
+import jax
+import numpy as np
+
+from repro.core.canny.params import CannyParams
+from repro.core.patterns.farm import Farm
+from repro.core.patterns.pipeline import PatternPipeline
+from repro.serve.engine import percentile
+from repro.stream.temporal import TemporalCanny
+
+
+@dataclasses.dataclass
+class StreamStats:
+    frames: int = 0
+    wall_s: float = 0.0
+    launches: int = 0  # hysteresis sweep launches (see packed_fixpoint_count)
+    dilations: int = 0  # productive in-VMEM dilation sweeps
+    prep_ms: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=4096)
+    )
+    compute_ms: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=4096)
+    )
+    queue_depth: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=4096)
+    )
+    _lock: threading.Lock = dataclasses.field(default_factory=threading.Lock)
+
+    def record_prep(self, ms: float) -> None:
+        with self._lock:
+            self.prep_ms.append(ms)
+
+    def record_compute(self, ms: float) -> None:
+        with self._lock:
+            self.compute_ms.append(ms)
+
+    def record_cost(self, launches: int, dilations: int) -> None:
+        with self._lock:
+            self.launches += launches
+            self.dilations += dilations
+
+    def fps(self) -> float:
+        return self.frames / self.wall_s if self.wall_s else 0.0
+
+    def summary(self) -> str:
+        depth = (
+            sum(self.queue_depth) / len(self.queue_depth) if self.queue_depth else 0.0
+        )
+        return (
+            f"frames={self.frames} fps={self.fps():.2f} "
+            f"prep_p50={percentile(self.prep_ms, 0.5):.1f}ms "
+            f"compute_p50={percentile(self.compute_ms, 0.5):.1f}ms "
+            f"compute_p95={percentile(self.compute_ms, 0.95):.1f}ms "
+            f"queue_depth~{depth:.1f} "
+            f"hysteresis: launches={self.launches} dilations={self.dilations}"
+        )
+
+
+class StreamWorker:
+    """One farm worker: prep → (H2D ‖ compute) → host edges, 1:1 in order.
+
+    ``step`` maps a device frame to ``(edges, cost)`` (cost may be None
+    for stateless detectors). The inner ``PatternPipeline`` keeps one
+    frame's transfer in flight while the previous frame computes.
+    """
+
+    def __init__(
+        self,
+        step: Callable,
+        stats: StreamStats,
+        device=None,
+    ):
+        self.step = step
+        self.stats = stats
+        self.device = device
+
+    def _run_step(self, x):
+        out = self.step(x)
+        return out if isinstance(out, tuple) else (out, None)
+
+    def stream(self, frames: Iterable[np.ndarray]) -> Iterator[np.ndarray]:
+        def prepped():  # prep timed here: the pipeline runs it one frame ahead
+            for f in frames:
+                t0 = time.perf_counter()
+                arr = np.asarray(f, np.float32)
+                self.stats.record_prep((time.perf_counter() - t0) * 1e3)
+                yield arr
+
+        pipe = PatternPipeline(self._run_step, sharding=self.device)
+        for edges, cost in pipe.run(prepped()):
+            t1 = time.perf_counter()
+            out = np.asarray(edges)  # blocks until the device result lands
+            self.stats.record_compute((time.perf_counter() - t1) * 1e3)
+            if cost is not None:
+                self.stats.record_cost(int(cost[0]), int(cost[1]))
+            yield out
+
+
+class FarmScheduler:
+    """Farm of warm-start Canny pipelines over any frame source."""
+
+    def __init__(
+        self,
+        params: CannyParams = CannyParams(),
+        n_workers: int | None = None,
+        warm: bool = True,
+        queue_depth: int = 2,
+        backend: str | None = None,
+        block_rows: int | None = None,
+        detector: Callable | None = None,
+        devices=None,
+    ):
+        devices = list(devices) if devices is not None else jax.local_devices()
+        if n_workers is None:
+            n_workers = max(2, len(devices))
+        self.params = params
+        self.warm = warm
+        self.stats = StreamStats()
+        self.detectors: list = []
+        workers = []
+        for k in range(n_workers):
+            if detector is not None:
+                step: Callable = detector  # shared: e.g. one BucketedCanny
+            else:
+                t = TemporalCanny(
+                    params, warm=warm, backend=backend, block_rows=block_rows
+                )
+                self.detectors.append(t)
+                step = t.step
+            workers.append(StreamWorker(step, self.stats, devices[k % len(devices)]))
+        self.farm = Farm(workers, queue_depth=queue_depth)
+
+    def run(self, source: Iterable[np.ndarray]) -> Iterator[np.ndarray]:
+        """Yield uint8 edge maps in frame order; updates ``self.stats``."""
+        t0 = time.perf_counter()
+        for edges in self.farm.run(source):
+            self.stats.frames += 1
+            self.stats.queue_depth.append(sum(self.farm.queue_depths()))
+            self.stats.wall_s = time.perf_counter() - t0
+            yield edges
+
+    def run_engine(
+        self,
+        source: Iterable[np.ndarray],
+        engine=None,
+        max_batch: int = 8,
+    ) -> Iterator[np.ndarray]:
+        """Micro-batching path: frames ride ``CannyEngine.submit``/``drain``.
+
+        Collects up to ``max_batch`` frames, drains them as one bucketed
+        batch-grid launch, and emits in order — higher throughput, wave
+        latency. Mixed frame sizes are fine (the engine buckets them).
+        """
+        if engine is None:
+            from repro.serve.engine import CannyEngine
+
+            engine = CannyEngine(self.params, max_batch=max_batch)
+        t0 = time.perf_counter()
+        pending = []
+
+        def flush():
+            engine.drain()
+            for ticket in pending:
+                self.stats.frames += 1
+                self.stats.wall_s = time.perf_counter() - t0
+                yield ticket.result()
+            pending.clear()
+
+        for frame in source:
+            pending.append(engine.submit(np.asarray(frame, np.float32)))
+            if len(pending) >= max_batch:
+                yield from flush()
+        yield from flush()

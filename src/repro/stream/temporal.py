@@ -1,0 +1,177 @@
+"""Temporal warm-start Canny — per-stream state threading between frames.
+
+``TemporalCanny`` is the stateful frame detector the streaming subsystem
+schedules: each call runs one frame (or frame batch) and threads the
+packed strong/weak/edge words into the next frame's hysteresis fixpoint
+as a warm seed. The seed is gated by the grow-only monotonicity check
+(``core.canny.hysteresis.warm_seed``), so the output is bit-identical to
+the cold detector on EVERY frame — warm-start changes only how many
+sweeps the fixpoint needs (~1 on static/grow-only frames). ``warm=False``
+turns the threading off for correctness comparisons; the answer must not
+change, only the sweep counts.
+
+Two execution paths behind one API:
+
+  * ``backend="fused"`` — the Pallas fused front-end + bit-parallel
+    packed hysteresis (``kernels.fused_canny.ops.fused_canny_warm``);
+    state lives as (b, Hp, W//32) uint32 words.
+  * ``backend="jnp"``   — plain-JAX stages + seeded bool fixpoint; the
+    portable fallback when the Pallas kernels are unavailable.
+
+``backend=None`` picks fused when the kernel package imports, else jnp.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.canny.hysteresis import (
+    double_threshold,
+    hysteresis_fixpoint_count,
+    warm_seed,
+)
+from repro.core.canny.params import CannyParams
+from repro.core.patterns.dist import StencilCtx
+
+
+def _resolve_backend(backend: str | None) -> str:
+    if backend in ("fused", "jnp"):
+        return backend
+    if backend is not None:
+        raise ValueError(f"unknown temporal backend {backend!r}")
+    try:
+        import repro.kernels.fused_canny  # noqa: F401
+
+        return "fused"
+    except ImportError:  # pragma: no cover - exercised without Pallas
+        return "jnp"
+
+
+class TemporalCanny:
+    """Stateful streaming detector: cold-exact edges + warm sweep counts.
+
+    ``step`` maps an (h, w) or (b, h, w) frame to (edges, cost) where
+    ``cost = (launches, dilations)`` int32 device scalars (see
+    ``packed_fixpoint_count``; the jnp path reports its sweep count as
+    both launches and productive dilations-1). State resets whenever the
+    input shape changes; ``reset()`` forces the next frame cold.
+    """
+
+    def __init__(
+        self,
+        params: CannyParams = CannyParams(),
+        warm: bool = True,
+        backend: str | None = None,
+        block_rows: int | None = None,
+        interpret: bool | None = None,
+    ):
+        self.params = params
+        self.warm = warm
+        self.backend = _resolve_backend(backend)
+        self.block_rows = block_rows
+        self.interpret = interpret
+        self._shape: tuple[int, int, int] | None = None
+        self._state = None
+        self._cost_log: list = []  # device scalars; folded lazily so the
+        self._cost_done = [0, 0, 0]  # hot loop never blocks on a sync
+        if self.backend == "jnp":
+            self._jnp_step = self._make_jnp_step()
+
+    # -- state plane ---------------------------------------------------------
+    def reset(self) -> None:
+        self._state = None
+
+    def _zero_state(self, b: int, h: int, wp: int, bh: int):
+        hp = -(-h // bh) * bh
+        z = jnp.zeros((b, hp, wp // 32), jnp.uint32)
+        return z, z, z
+
+    # -- jnp fallback --------------------------------------------------------
+    def _make_jnp_step(self) -> Callable:
+        from repro.core.canny.gaussian import gaussian_stage
+        from repro.core.canny.nms import nms_stage
+        from repro.core.canny.sobel import sobel_stage
+
+        params, ctx = self.params, StencilCtx(None, "edge")
+
+        @jax.jit
+        def step(imgs, prev_strong, prev_weak, prev_edges):
+            blur = gaussian_stage(imgs, ctx, params)
+            mag, dirs = sobel_stage(blur, ctx, params)
+            sup = nms_stage(mag, dirs, ctx)
+            strong, weak = double_threshold(sup, params)
+            seed = warm_seed(strong, weak, prev_strong, prev_weak, prev_edges)
+            edges, n = hysteresis_fixpoint_count(strong, weak, ctx, seed=seed)
+            return edges, (strong, weak, edges.astype(bool)), (n, n - 1)
+
+        return step
+
+    # -- frame plane ---------------------------------------------------------
+    def step(self, frame: jax.Array):
+        x = jnp.asarray(frame, jnp.float32)
+        squeeze = x.ndim == 2
+        if squeeze:
+            x = x[None]
+        if x.ndim != 3:
+            raise ValueError(f"expected (h,w) or (b,h,w), got {frame.shape}")
+        b, h, w = x.shape
+        if self._shape != (b, h, w):
+            self.reset()
+            self._shape = (b, h, w)
+
+        if self.backend == "jnp":
+            if self._state is None:
+                z = jnp.zeros((b, h, w), bool)
+                self._state = (z, z, z)
+            edges, state, cost = self._jnp_step(x, *self._state)
+        else:
+            from repro.kernels import common
+            from repro.kernels.fused_canny.ops import fused_canny_warm
+
+            p = self.params
+            bh = self.block_rows or common.pick_block_rows(h, min_rows=p.radius + 2)
+            wp = -(-w // 32) * 32
+            if wp != w:  # edge cols + the true-size table keep this bit-exact
+                x = jnp.pad(x, ((0, 0), (0, 0), (0, wp - w)), mode="edge")
+            true_hw = jnp.broadcast_to(jnp.asarray([h, w], jnp.int32), (b, 2))
+            if self._state is None:
+                self._state = self._zero_state(b, h, wp, bh)
+            edges, state, cost = fused_canny_warm(
+                x,
+                *self._state,
+                sigma=p.sigma,
+                radius=p.radius,
+                low=p.low,
+                high=p.high,
+                l2_norm=p.l2_norm,
+                block_rows=bh,
+                interpret=self.interpret,
+                true_hw=true_hw,
+            )
+            edges = edges[..., :w]
+        if self.warm:
+            self._state = state
+        # warm=False keeps the zero state: every frame runs the cold seed
+        self._cost_log.append(cost)
+        if len(self._cost_log) >= 1024:  # bound the pending-scalar window
+            self._fold_costs()
+        return (edges[0] if squeeze else edges), cost
+
+    def __call__(self, frame: jax.Array) -> jax.Array:
+        return self.step(frame)[0]
+
+    # -- stats plane ---------------------------------------------------------
+    def _fold_costs(self) -> None:
+        log, self._cost_log = self._cost_log, []
+        self._cost_done[0] += len(log)
+        self._cost_done[1] += sum(int(n) for n, _ in log)
+        self._cost_done[2] += sum(int(d) for _, d in log)
+
+    def cost_totals(self) -> dict[str, int]:
+        """Cumulative (synced) fixpoint cost over all frames stepped."""
+        self._fold_costs()
+        frames, launches, dilations = self._cost_done
+        return {"frames": frames, "launches": launches, "dilations": dilations}

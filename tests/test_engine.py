@@ -1,0 +1,149 @@
+"""Direct unit tests for the serving engine (`serve/engine.py`).
+
+Pins the request-plane contracts on their own, away from the kernel
+tests: the shape helpers' edge cases, the bucket-cache hit/miss
+accounting, mixed-size ``process`` crop exactness vs the serial oracle,
+and the async submit/drain plane the stream scheduler rides.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.canny import CannyParams, canny_reference
+from repro.data.images import synthetic_image
+from repro.serve.engine import BucketedCanny, CannyEngine, next_pow2, round_up
+
+PARAMS = CannyParams(sigma=1.4, radius=2, low=0.08, high=0.2)
+
+
+# ---------------- shape helpers ---------------------------------------------
+@pytest.mark.parametrize(
+    "x,m,want",
+    [(0, 64, 0), (1, 64, 64), (63, 64, 64), (64, 64, 64), (65, 64, 128), (1, 1, 1)],
+)
+def test_round_up(x, m, want):
+    assert round_up(x, m) == want
+
+
+@pytest.mark.parametrize(
+    "x,want", [(0, 1), (1, 1), (2, 2), (3, 4), (4, 4), (5, 8), (8, 8), (9, 16)]
+)
+def test_next_pow2(x, want):
+    assert next_pow2(x) == want
+
+
+# ---------------- bucket cache accounting -----------------------------------
+def test_bucketed_canny_cache_hit_miss_counts():
+    from repro.core.canny.pipeline import resolve_serving_backend
+
+    det = BucketedCanny(resolve_serving_backend("fused"), PARAMS, bucket_multiple=32)
+    assert det.compiles == 0
+    det(jnp.asarray(synthetic_image(40, 40, seed=1)))  # miss → (1, 64, 64)
+    assert det.compiles == 1
+    det(jnp.asarray(synthetic_image(33, 50, seed=2)))  # hit: same bucket
+    assert det.compiles == 1
+    det(jnp.asarray(synthetic_image(40, 70, seed=3)))  # miss → (1, 64, 96)
+    assert det.compiles == 2
+    det(jnp.asarray(np.stack([synthetic_image(40, 40, seed=4)] * 2)))  # b miss
+    assert det.compiles == 3
+    det(jnp.asarray(synthetic_image(64, 64, seed=5)))  # hit: exact bucket edge
+    assert det.compiles == 3
+
+
+def test_engine_stats_track_hits_and_misses():
+    engine = CannyEngine(PARAMS, bucket_multiple=32, max_batch=4)
+    engine.process([synthetic_image(33, 33, seed=0)])
+    assert (engine.stats.requests, engine.stats.batches, engine.stats.compiles) == (
+        1, 1, 1,
+    )
+    # same bucket, batch grows 1 → 2: new (batch, h, w) key compiles again
+    engine.process([synthetic_image(40, 40, seed=i) for i in range(2)])
+    assert (engine.stats.requests, engine.stats.compiles) == (3, 2)
+    # replay both profiles: pure cache hits
+    engine.process([synthetic_image(35, 60 % 33 + 20, seed=9)])
+    engine.process([synthetic_image(41, 44, seed=i) for i in range(2)])
+    assert engine.stats.compiles == 2
+    assert engine.stats.requests == 6
+
+
+def test_engine_mixed_size_process_is_bit_exact():
+    engine = CannyEngine(PARAMS, bucket_multiple=32, max_batch=4)
+    sizes = [(33, 47), (64, 64), (50, 70), (33, 47), (21, 90)]
+    reqs = [synthetic_image(h, w, seed=10 + i) for i, (h, w) in enumerate(sizes)]
+    out = engine.process(reqs)
+    for r, e in zip(reqs, out):
+        assert e.shape == r.shape and e.dtype == np.uint8
+        assert (e == canny_reference(r, PARAMS)).all()
+    assert engine.stats.true_px == sum(h * w for h, w in sizes)
+    assert engine.stats.padded_px >= engine.stats.true_px
+    assert engine.stats.pad_overhead() >= 0.0
+
+
+def test_engine_process_rejects_batched_request():
+    engine = CannyEngine(PARAMS)
+    with pytest.raises(ValueError, match="expected \\(h,w\\)"):
+        engine.process([np.zeros((2, 32, 32), np.float32)])
+
+
+# ---------------- async submit/drain plane ----------------------------------
+def test_submit_drain_matches_process():
+    sizes = [(33, 47), (64, 64), (33, 47)]
+    reqs = [synthetic_image(h, w, seed=20 + i) for i, (h, w) in enumerate(sizes)]
+
+    sync = CannyEngine(PARAMS, bucket_multiple=32, max_batch=4)
+    want = sync.process(reqs)
+
+    engine = CannyEngine(PARAMS, bucket_multiple=32, max_batch=4)
+    tickets = [engine.submit(r) for r in reqs]
+    assert not any(t.done for t in tickets)
+    assert engine.drain() == 3
+    assert all(t.done for t in tickets)
+    for t, w in zip(tickets, want):
+        assert (t.result() == w).all()
+    # a drained engine drains to zero; results keep resolving
+    assert engine.drain() == 0
+    assert (tickets[0].result() == want[0]).all()
+
+
+def test_ticket_result_auto_drains():
+    engine = CannyEngine(PARAMS, bucket_multiple=32)
+    req = synthetic_image(40, 40, seed=30)
+    ticket = engine.submit(req)
+    assert (ticket.result() == canny_reference(req, PARAMS)).all()  # no drain()
+    assert ticket.done
+    assert engine.stats.requests == 1
+
+
+def test_submit_rejects_batched_frame():
+    engine = CannyEngine(PARAMS)
+    with pytest.raises(ValueError, match="expected \\(h,w\\)"):
+        engine.submit(np.zeros((2, 32, 32), np.float32))
+
+
+def test_drain_failure_fails_tickets_instead_of_stranding_them():
+    """A wave whose process() raises must poison its tickets — a waiter
+    in result() gets the exception rather than spinning forever."""
+    engine = CannyEngine(PARAMS, bucket_multiple=32)
+    ticket = engine.submit(synthetic_image(20, 20, seed=1))
+
+    def boom(images):
+        raise RuntimeError("kernel exploded")
+
+    engine.process = boom
+    with pytest.raises(RuntimeError, match="kernel exploded"):
+        engine.drain()
+    assert ticket.done
+    with pytest.raises(RuntimeError, match="kernel exploded"):
+        ticket.result()
+
+
+def test_submitted_waves_share_bucket_batches():
+    """Requests accumulated between drains batch together: 4 same-bucket
+    submits at max_batch=4 run as ONE batch-grid launch."""
+    engine = CannyEngine(PARAMS, bucket_multiple=32, max_batch=4)
+    tickets = [engine.submit(synthetic_image(33, 40, seed=40 + i)) for i in range(4)]
+    engine.drain()
+    assert engine.stats.batches == 1
+    assert engine.stats.requests == 4
+    assert all(t.done for t in tickets)

@@ -1,0 +1,320 @@
+"""Streaming subsystem invariants.
+
+The three properties the farm-of-pipelines design rests on:
+
+  1. **Order + identity**: a farm with any worker count emits frames in
+     input order, bit-identical to the single-worker path.
+  2. **Warm-start exactness**: temporal warm-start hysteresis matches
+     cold hysteresis exactly on EVERY frame of EVERY stream — the
+     grow-only gate makes the seed choice invisible except in sweep
+     counts (property-tested over random mask streams, where stale seeds
+     would poison an ungated warm start).
+  3. **Sources are deterministic/seekable** so streams replay exactly.
+"""
+
+import functools
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.canny import CannyParams, canny_reference
+from repro.core.canny.hysteresis import warm_seed
+from repro.core.patterns.farm import Farm, farm_map
+from repro.kernels import common
+from repro.kernels.fused_canny import fused_canny
+from repro.kernels.hysteresis import hysteresis_ref, packed_fixpoint_count
+from repro.stream import (
+    CorpusReplay,
+    FarmScheduler,
+    NpySequence,
+    Prefetcher,
+    SyntheticStream,
+    TemporalCanny,
+    write_npy_sequence,
+)
+
+PARAMS = CannyParams(sigma=1.4, radius=2, low=0.08, high=0.2)
+
+
+# ---------------- farm pattern ----------------------------------------------
+def test_farm_emits_in_order_and_matches_serial():
+    items = list(range(23))
+    fn = lambda x: x * x  # noqa: E731
+    for n_workers in (1, 2, 4):
+        got = list(farm_map(fn, items, n_workers=n_workers))
+        assert got == [x * x for x in items]
+
+
+def test_farm_backpressure_bounds_inflight():
+    """The feeder may never run more than n·(depth+1) items ahead of the
+    slowest consumer — the queue bound, not the stream length."""
+    import threading
+    import time
+
+    n_workers, depth = 2, 1
+    fed = []
+    release = threading.Event()
+
+    def feed():
+        for i in range(100):
+            fed.append(i)
+            yield i
+
+    def slow(x):
+        release.wait(timeout=10.0)
+        return x
+
+    farm = Farm([slow] * n_workers, queue_depth=depth)
+    it = iter(farm.run(feed()))
+    time.sleep(0.3)  # let the feeder run as far ahead as it can
+    # in flight: per worker ≤ depth queued + 1 executing (+1 feeder-held)
+    assert len(fed) <= n_workers * (depth + 1) + 1
+    release.set()
+    assert list(it) == list(range(100))
+
+
+def test_farm_propagates_worker_errors():
+    def boom(x):
+        if x == 3:
+            raise ValueError("worker died")
+        return x
+
+    with pytest.raises(ValueError, match="worker died"):
+        list(farm_map(boom, range(8), n_workers=2))
+
+
+def test_farm_scheduler_bit_identical_across_worker_counts():
+    frames = list(SyntheticStream(6, 64, 64, seed=5, hold=2))
+    outs = {}
+    for n_workers in (1, 3):
+        sched = FarmScheduler(PARAMS, n_workers=n_workers, block_rows=16)
+        outs[n_workers] = list(sched.run(frames))
+        assert sched.stats.frames == len(frames)
+    assert all((a == b).all() for a, b in zip(outs[1], outs[3]))
+    # and the farm output is the true answer, not merely self-consistent
+    want = canny_reference(frames[0], PARAMS)
+    assert (outs[3][0] == want).all()
+
+
+def test_farm_scheduler_shared_bucketed_detector():
+    """Single-device config: every worker drives ONE BucketedCanny, so the
+    compile cache is shared and outputs stay bit-exact."""
+    from repro.core.canny import make_canny
+
+    det = make_canny(PARAMS, backend="fused")
+    frames = list(SyntheticStream(5, 64, 96, seed=9))
+    det(jnp.asarray(frames[0]))  # warm the bucket before threads race
+    sched = FarmScheduler(PARAMS, n_workers=2, detector=lambda x: np.asarray(det(x)))
+    got = list(sched.run(frames))
+    for f, e in zip(frames, got):
+        assert (np.asarray(e) == canny_reference(f, PARAMS)).all()
+
+
+# ---------------- temporal warm-start: exactness ----------------------------
+def _random_mask_stream(rng, frames, b, h, w):
+    """Adversarial mask streams: dense weak fields plus region edits, so
+    warm seeds regularly go stale (removed bits) and regularly stay valid
+    (grow-only frames)."""
+    weak = rng.uniform(size=(b, h, w)) < 0.45
+    strong = weak & (rng.uniform(size=(b, h, w)) < 0.1)
+    for _ in range(frames):
+        mode = rng.integers(0, 3)
+        if mode == 0:  # static frame
+            pass
+        elif mode == 1:  # grow-only: add weak + strong bits
+            weak = weak | (rng.uniform(size=weak.shape) < 0.05)
+            strong = (strong | (weak & (rng.uniform(size=weak.shape) < 0.02)))
+        else:  # destructive: clear a random rectangle (stale seeds!)
+            y0, x0 = int(rng.integers(0, h // 2)), int(rng.integers(0, w // 2))
+            weak = weak.copy()
+            strong = strong.copy()
+            weak[:, y0 : y0 + h // 2, x0 : x0 + w // 2] = False
+            strong &= weak
+        yield strong, weak
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def _warm_step(sw, ww, prev_s, prev_w, prev_e, block_rows=8):
+    seed = warm_seed(sw, ww, prev_s, prev_w, prev_e)
+    return packed_fixpoint_count(seed, ww, block_rows)
+
+
+def _warm_chain(stream, block_rows=8):
+    """Run the packed fixpoint over a mask stream, threading warm state.
+
+    Pads rows/cols with zeros (inert for hysteresis) so any (h, w) works;
+    the zero prev-state makes frame 0 cold through the same code path.
+    """
+    prev = None
+    for strong, weak in stream:
+        sp, h = common.pad_rows_to_multiple(
+            jnp.asarray(strong).astype(jnp.uint8), block_rows, mode="zero"
+        )
+        wp, _ = common.pad_rows_to_multiple(
+            jnp.asarray(weak).astype(jnp.uint8), block_rows, mode="zero"
+        )
+        sp, w = common.pad_cols_to_multiple(sp, 32)
+        wp, _ = common.pad_cols_to_multiple(wp, 32)
+        sw, ww = common.pack_mask(sp), common.pack_mask(wp)
+        if prev is None:
+            prev = (jnp.zeros_like(sw),) * 3
+        packed, n, work = _warm_step(sw, ww, *prev, block_rows=block_rows)
+        prev = (sw, ww, packed)
+        edges = common.crop_rows(common.unpack_mask(packed)[..., :w], h)
+        yield strong, weak, edges, int(n), int(work)
+
+
+def test_warm_equals_cold_on_adversarial_mask_streams():
+    rng = np.random.default_rng(1234)
+    for trial in range(4):
+        for strong, weak, warm_edges, _, _ in _warm_chain(
+            _random_mask_stream(rng, frames=5, b=2, h=24, w=32)
+        ):
+            for i in range(strong.shape[0]):
+                want = np.asarray(
+                    hysteresis_ref(jnp.asarray(strong[i]), jnp.asarray(weak[i]))
+                )
+                got = np.asarray(warm_edges)[i]
+                assert (got == want).all(), f"trial {trial}: warm diverged from cold"
+
+
+def test_warm_static_frames_converge_in_one_sweep():
+    """Serpentine chain: cold needs ~n_strips launches; a repeated frame
+    warm-starts at the answer — 1 verification launch, 0 dilations."""
+    h, w = 48, 32
+    strong = np.zeros((1, h, w), bool)
+    weak = np.zeros((1, h, w), bool)
+    for r in range(h):
+        if r % 2 == 0:
+            weak[0, r, :] = True
+        else:
+            weak[0, r, -1 if (r // 2) % 2 == 0 else 0] = True
+    strong[0, 0, 0] = weak[0, 0, 0] = True
+    stream = [(strong, weak)] * 3
+    stats = [(n, work) for *_, n, work in _warm_chain(iter(stream))]
+    (n0, w0), (n1, w1), (n2, w2) = stats
+    assert n0 >= 5 and w0 > 0  # cold start pays the chain
+    assert n1 == 1 and w1 == 0  # warm static: one verifying launch
+    assert n2 == 1 and w2 == 0
+
+
+def test_temporal_canny_warm_equals_cold_on_moving_stream():
+    src = SyntheticStream(6, 61, 77, seed=3, hold=2, noise=0.01)
+    warm = TemporalCanny(PARAMS, warm=True, block_rows=16)
+    cold = TemporalCanny(PARAMS, warm=False, block_rows=16)
+    for i, frame in enumerate(src):
+        ew, _ = warm.step(jnp.asarray(frame))
+        ec, _ = cold.step(jnp.asarray(frame))
+        assert (np.asarray(ew) == np.asarray(ec)).all(), f"frame {i}"
+        want = canny_reference(frame, PARAMS)  # and both match the oracle
+        assert (np.asarray(ew) == want).all(), f"frame {i} vs oracle"
+
+
+def test_temporal_canny_jnp_backend_matches_fused():
+    src = SyntheticStream(4, 48, 64, seed=7, hold=2)
+    fused = TemporalCanny(PARAMS, warm=True, backend="fused", block_rows=16)
+    jnpp = TemporalCanny(PARAMS, warm=True, backend="jnp")
+    for frame in src:
+        ef, _ = fused.step(jnp.asarray(frame))
+        ej, _ = jnpp.step(jnp.asarray(frame))
+        assert (np.asarray(ef) == np.asarray(ej)).all()
+
+
+def test_temporal_canny_resets_on_shape_change():
+    t = TemporalCanny(PARAMS, warm=True, block_rows=16)
+    a = SyntheticStream(1, 48, 64, seed=1).frame(0)
+    b = SyntheticStream(1, 64, 96, seed=2).frame(0)
+    for frame in (a, b, a):  # shape flips must not poison the state
+        e, _ = t.step(jnp.asarray(frame))
+        assert (np.asarray(e) == canny_reference(frame, PARAMS)).all()
+
+
+@given(data=st.data())
+@settings(max_examples=10, deadline=None)
+def test_warm_equals_cold_property(data):
+    """Hypothesis drives the stream edits; exactness must survive all."""
+    h = data.draw(st.integers(12, 28), label="h")
+    w = data.draw(st.integers(8, 40), label="w")
+    seed = data.draw(st.integers(0, 2**31 - 1), label="seed")
+    rng = np.random.default_rng(seed)
+    for strong, weak, warm_edges, _, _ in _warm_chain(
+        _random_mask_stream(rng, frames=4, b=1, h=h, w=w)
+    ):
+        want = np.asarray(
+            hysteresis_ref(jnp.asarray(strong[0]), jnp.asarray(weak[0]))
+        )
+        assert (np.asarray(warm_edges)[0] == want).all()
+
+
+# ---------------- fused warm step vs full fused detector --------------------
+def test_fused_canny_warm_zero_state_equals_fused_canny():
+    from repro.kernels.fused_canny.ops import fused_canny_warm
+
+    imgs = jnp.asarray(
+        np.stack([SyntheticStream(1, 64, 64, seed=s).frame(0) for s in (1, 2)])
+    )
+    bh = 16
+    z = jnp.zeros((2, 64, 2), jnp.uint32)
+    edges, state, (n, d) = fused_canny_warm(
+        imgs, z, z, z, sigma=1.4, radius=2, low=0.08, high=0.2, block_rows=bh
+    )
+    want = fused_canny(imgs, 1.4, 2, 0.08, 0.2, block_rows=bh)
+    assert (np.asarray(edges) == np.asarray(want)).all()
+
+
+# ---------------- sources ---------------------------------------------------
+def test_synthetic_stream_deterministic_and_held():
+    a = list(SyntheticStream(6, 32, 48, seed=11, hold=3))
+    b = list(SyntheticStream(6, 32, 48, seed=11, hold=3))
+    assert all((x == y).all() for x, y in zip(a, b))
+    assert (a[0] == a[1]).all() and (a[1] == a[2]).all()  # held
+    assert not (a[2] == a[3]).all()  # motion between hold groups
+    src = SyntheticStream(6, 32, 48, seed=11, hold=3)
+    assert (src.frame(4) == a[4]).all()  # seekable
+
+
+def test_corpus_replay_seekable():
+    full = list(CorpusReplay(steps=5, height=16, width=16, seed=3, batch=2))
+    tail = list(CorpusReplay(steps=5, height=16, width=16, seed=3, batch=2, start=3))
+    assert len(full) == 5 and len(tail) == 2
+    assert all((x == y).all() for x, y in zip(full[3:], tail))
+
+
+def test_npy_sequence_roundtrip(tmp_path):
+    frames = list(SyntheticStream(4, 16, 24, seed=2))
+    assert write_npy_sequence(tmp_path / "seq", frames) == 4
+    back = list(NpySequence(tmp_path / "seq"))
+    assert len(back) == 4
+    assert all((x == y).all() for x, y in zip(frames, back))
+
+
+def test_prefetcher_transparent():
+    src = SyntheticStream(7, 16, 16, seed=4)
+    direct = list(src)
+    fetched = list(Prefetcher(src, depth=3))
+    assert len(fetched) == 7
+    assert all((x == y).all() for x, y in zip(direct, fetched))
+
+
+def test_prefetcher_propagates_source_errors():
+    def bad():
+        yield np.zeros((4, 4), np.float32)
+        raise RuntimeError("disk on fire")
+
+    it = iter(Prefetcher(bad(), depth=2))
+    next(it)
+    with pytest.raises(RuntimeError, match="disk on fire"):
+        list(it)
+
+
+# ---------------- engine micro-batch path -----------------------------------
+def test_run_engine_in_order_and_exact():
+    frames = list(SyntheticStream(5, 64, 64, seed=6))
+    sched = FarmScheduler(PARAMS)
+    got = list(sched.run_engine(frames, max_batch=2))
+    assert len(got) == 5
+    for f, e in zip(frames, got):
+        assert (e == canny_reference(f, PARAMS)).all()
