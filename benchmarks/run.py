@@ -10,6 +10,10 @@ the LM table reads the dry-run artifacts.
   image_size_scaling             paper §2.2 ("high quality images")
   hysteresis_modes               paper claim C3 (serial vs parallel fixpoint)
   batched_throughput             batch-grid fused path vs vmap-of-2D lifting
+  sharded_throughput             fused kernels inside shard_map on a forced
+                                 8-device host mesh vs the local path
+                                 (bit-identical; runs in a subprocess so
+                                 the forced device count can't leak)
   stream_fps                     farm/stream workload: temporal warm-start
                                  hysteresis on vs off (bit-identical edges)
   roofline_table                 §Roofline summary from experiments/dryrun
@@ -189,6 +193,70 @@ def batched_throughput(h=512, w=512, sizes=(1, 4, 8)):
     assert exact, "batch-grid fused output diverged from canny_reference"
 
 
+def _sharded_payload(h=256, w=256, b=8):
+    """Runs INSIDE the forced-8-device subprocess (see sharded_throughput):
+    local fused batch vs the same batch inside shard_map on a data-only
+    and a data x model mesh, plus bit-identity across all three."""
+    from repro.core.patterns.dist import Dist
+
+    args = (1.4, 2, float(PARAMS.low), float(PARAMS.high))
+    imgs = jnp.asarray(synthetic_batch(b, h, w, seed=13))
+    us_local = _timeit(lambda: np.asarray(fused_canny(imgs, *args)), n=3)
+    row(f"canny_sharded_local_b{b}_{h}px", us_local, f"{b*h*w/us_local:.2f} MPx/s")
+
+    local_out = np.asarray(fused_canny(imgs, *args))
+    exact = True
+    meshes = {
+        "data8": (jax.make_mesh((8,), ("data",)), ("data",), None),
+        "data2model4": (
+            jax.make_mesh((2, 4), ("data", "model")), ("data",), "model",
+        ),
+    }
+    for name, (mesh, batch_axes, space) in meshes.items():
+        dist = Dist(mesh=mesh, batch_axes=batch_axes, space_axis=space)
+        us = _timeit(lambda: np.asarray(fused_canny(imgs, *args, dist=dist)), n=3)
+        row(
+            f"canny_sharded_{name}_b{b}_{h}px",
+            us,
+            f"{b*h*w/us:.2f} MPx/s vs_local={us_local/us:.2f}x",
+        )
+        exact &= bool(
+            (np.asarray(fused_canny(imgs, *args, dist=dist)) == local_out).all()
+        )
+    row("canny_sharded_bit_exact", 0.0, f"vs_local_fused={exact}")
+    assert exact, "sharded fused output diverged from the local fused path"
+
+
+def sharded_throughput():
+    """Fused kernels under shard_map vs local, on 8 forced host devices.
+
+    The device-count flag must be set before jax initializes, so the
+    measurement runs in a subprocess (same trick as tests/test_sharded.py)
+    and its CSV rows are folded into this process's table. Interpret-mode
+    CPU numbers measure composition overhead, not TPU speedups — the
+    headline is the bit-exactness row plus the scaling shape.
+    """
+    import os
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    proc = subprocess.run(
+        [sys.executable, str(pathlib.Path(__file__).resolve()), "--sharded-payload"],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=1800,
+    )
+    if proc.returncode != 0:
+        row("sharded_throughput", 0.0, f"FAILED rc={proc.returncode}")
+        print(proc.stderr[-2000:], file=sys.stderr)
+        raise AssertionError("sharded_throughput subprocess failed")
+    for line in proc.stdout.splitlines():
+        parts = line.strip().split(",", 2)
+        if len(parts) == 3 and parts[0].startswith("canny_sharded"):
+            row(parts[0], float(parts[1]), parts[2])
+
+
 def stream_fps(frames=24, h=256, w=256, hold=4, block_rows=32):
     """Streaming workload (paper's farm-of-pipelines): fps over a
     temporally coherent synthetic video with warm-start hysteresis on vs
@@ -268,6 +336,7 @@ def main() -> None:
     image_size_scaling()
     hysteresis_modes()
     batched_throughput()
+    sharded_throughput()
     stream_fps()
     roofline_table()
     path = write_artifact()
@@ -275,4 +344,8 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    if "--sharded-payload" in sys.argv:
+        print("name,us_per_call,derived")
+        _sharded_payload()
+    else:
+        main()

@@ -33,16 +33,28 @@ from repro.core.patterns.dist import Dist, StencilCtx
 _BACKENDS: dict[str, Callable] = {}
 
 # serving-capable backends: fn(imgs (b,h,w) f32, true_hw (b,2) i32, params,
-# interpret) → uint8 edges. True-size-aware, so the serving layer can pad
-# requests to shape buckets and stay bit-exact (see serve/engine.py).
+# interpret, dist) → uint8 edges. True-size-aware, so the serving layer can
+# pad requests to shape buckets and stay bit-exact (see serve/engine.py);
+# mesh-aware through ``dist`` (a non-local Dist runs the same kernels
+# inside shard_map — one distribution plane for every entry point).
 _SERVING_BACKENDS: dict[str, Callable] = {}
 
 
-def register_backend(name: str, fn: Callable) -> None:
+def register_backend(name: str, fn: Callable, override: bool = False) -> None:
+    if name in _BACKENDS and not override:
+        raise ValueError(
+            f"canny backend {name!r} is already registered; pass "
+            "override=True to replace it deliberately"
+        )
     _BACKENDS[name] = fn
 
 
-def register_serving_backend(name: str, fn: Callable) -> None:
+def register_serving_backend(name: str, fn: Callable, override: bool = False) -> None:
+    if name in _SERVING_BACKENDS and not override:
+        raise ValueError(
+            f"serving backend {name!r} is already registered; pass "
+            "override=True to replace it deliberately"
+        )
     _SERVING_BACKENDS[name] = fn
 
 
@@ -94,16 +106,22 @@ def make_canny(
     any (b, h, w) is padded to a bucket and cropped back (bit-exact via
     per-image true sizes), so new shapes inside a bucket never recompile.
     Pass ``bucket_multiple=None`` to force exact-shape compilation.
+
+    ``dist`` is the one distribution plane: a non-local Dist makes a
+    serving-capable backend run its batch-grid kernels inside shard_map
+    (bucket batches shard over the data axes, rows over the space axis),
+    while the jnp stage path wraps the stages in shard_map as before —
+    either way, one queue of work drains across the whole mesh.
     """
     stage_fn = _resolve_stage_fn(backend)
 
+    serve_fn = resolve_serving_backend(backend) if bucket_multiple else None
+    if serve_fn is not None:
+        from repro.serve.engine import BucketedCanny
+
+        return BucketedCanny(serve_fn, params, bucket_multiple, dist=dist)
+
     if dist.is_local:
-        serve_fn = resolve_serving_backend(backend) if bucket_multiple else None
-        if serve_fn is not None:
-            from repro.serve.engine import BucketedCanny
-
-            return BucketedCanny(serve_fn, params, bucket_multiple)
-
         ctx = StencilCtx(None, "edge")
 
         @jax.jit
@@ -112,8 +130,7 @@ def make_canny(
 
         return run_local
 
-    sync = tuple(dist.batch_axes) + ((dist.space_axis,) if dist.space_axis else ())
-    ctx = StencilCtx(dist.space_axis, "edge", sync_axes=sync)
+    ctx = StencilCtx(dist.space_axis, "edge", sync_axes=dist.sync_axes())
     mesh = dist.mesh
     cache: dict[int, Callable] = {}
 

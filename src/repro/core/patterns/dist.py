@@ -11,12 +11,13 @@ patterns ("parallelism on any underlying parallel architecture").
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import Mesh
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro import compat
 
@@ -44,6 +45,25 @@ class Dist:
         if self.mesh is None or self.space_axis is None:
             return 1
         return self.mesh.shape[self.space_axis]
+
+    def batch_size(self) -> int:
+        """Total shards of the leading batch dim (1 in local mode)."""
+        if self.mesh is None or not self.batch_axes:
+            return 1
+        return math.prod(self.mesh.shape[a] for a in self.batch_axes)
+
+    def sync_axes(self) -> tuple[str, ...]:
+        """Every mesh axis a convergence decision must be agreed over."""
+        space = (self.space_axis,) if self.space_axis is not None else ()
+        return tuple(self.batch_axes) + space
+
+    def batch_spec(self) -> P:
+        """PartitionSpec for a (B, H, W) batch under this distribution."""
+        return P(self.batch_axes or None, self.space_axis, None)
+
+    def table_spec(self) -> P:
+        """PartitionSpec for per-image metadata rows, e.g. (B, 2) tables."""
+        return P(self.batch_axes or None, None)
 
 
 LOCAL = Dist()
@@ -89,6 +109,26 @@ class StencilCtx:
             return _pad_axis(x, halo, axis, mode)
         return _halo_exchange(x, halo, axis, self.axis_name, mode)
 
+    def halo_rows(
+        self, x: jax.Array, halo: int, axis: int = -2, pad_mode: str | None = None
+    ) -> tuple[jax.Array, jax.Array]:
+        """The two halo slabs alone: ``(top, bot)``, each ``halo`` rows.
+
+        This is ``pad_rows`` for consumers that need the halos as SEPARATE
+        arrays — e.g. a shard-local Pallas grid whose boundary strips bind
+        externally supplied halo blocks instead of clamped neighbour strips
+        (see ``kernels/common.py:strip_specs``). Same bit-exactness contract
+        as ``pad_rows``: neighbour rows under ``shard_map``, the pad rule at
+        the global boundary / in local mode.
+        """
+        ext = self.pad_rows(x, max(halo, 1), axis, pad_mode)
+        h = max(halo, 1)
+        axis = axis % x.ndim
+        top = lax.slice_in_dim(ext, 0, h, axis=axis)
+        size = ext.shape[axis]
+        bot = lax.slice_in_dim(ext, size - h, size, axis=axis)
+        return top, bot
+
     # -- width halo (never sharded) ----------------------------------------
     def pad_cols(
         self, x: jax.Array, halo: int, axis: int = -1, pad_mode: str | None = None
@@ -98,16 +138,24 @@ class StencilCtx:
         return _pad_axis(x, halo, axis, pad_mode or self.pad_mode)
 
     # -- global consensus ---------------------------------------------------
+    def _live_sync_axes(self) -> tuple[str, ...]:
+        """sync_axes minus trivial (size-1) mesh axes — a psum over a
+        size-1 axis is an identity that still costs a collective, so
+        consensus no-ops cheaply on them (and on an all-trivial mesh)."""
+        return tuple(a for a in self.sync_axes if compat.axis_size(a) > 1)
+
     def any_global(self, flag: jax.Array) -> jax.Array:
         """OR-reduce a boolean across ALL sync axes (identity locally)."""
-        if not self.sync_axes:
+        axes = self._live_sync_axes()
+        if not axes:
             return flag
-        return lax.psum(flag.astype(jnp.int32), self.sync_axes) > 0
+        return lax.psum(flag.astype(jnp.int32), axes) > 0
 
     def sum_global(self, value: jax.Array) -> jax.Array:
-        if not self.sync_axes:
+        axes = self._live_sync_axes()
+        if not axes:
             return value
-        return lax.psum(value, self.sync_axes)
+        return lax.psum(value, axes)
 
 
 def _pad_axis(x: jax.Array, halo: int, axis: int, pad_mode: str) -> jax.Array:

@@ -5,9 +5,11 @@ backend="pallas" — per-stage kernels (paper-faithful stage structure,
 backend="fused"  — single-pass front-end + hysteresis kernel
                    (beyond-paper; ~5× less HBM traffic)
 
-Both are shard-local: the sharded path distributes with the jnp stages
-(halo exchange via ppermute); Pallas-inside-shard_map composition is
-tracked in DESIGN.md as TPU-hardware future work.
+The fused backend is mesh-aware through its SERVING entry: a non-local
+``Dist`` runs the same batch-grid kernels inside ``shard_map`` (batch
+over the data axes, rows over the space axis via ppermute halo exchange
+— see DESIGN.md §8). The per-stage "pallas" backend stays shard-local;
+row-sharded per-stage execution distributes with the jnp stages.
 """
 
 from __future__ import annotations
@@ -17,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.core.canny.params import CannyParams
 from repro.core.canny.pipeline import register_backend, register_serving_backend
-from repro.core.patterns.dist import StencilCtx
+from repro.core.patterns.dist import LOCAL, Dist, StencilCtx
 from repro.kernels.gaussian.ops import gaussian_blur
 from repro.kernels.sobel.ops import sobel
 from repro.kernels.nms.ops import nms
@@ -28,8 +30,9 @@ from repro.kernels.fused_canny.ops import fused_canny, fused_frontend
 def _require_local(ctx: StencilCtx, name: str) -> None:
     if ctx.axis_name is not None:
         raise NotImplementedError(
-            f"canny backend {name!r} is shard-local; use backend='jnp' for "
-            "row-sharded execution (see DESIGN.md §future-work)"
+            f"canny backend {name!r} is shard-local inside the stage plane; "
+            "mesh execution routes through the serving entry "
+            "(make_canny(dist=...) / CannyEngine(dist=...)) or backend='jnp'"
         )
 
 
@@ -60,9 +63,12 @@ def _fused_serving(
     true_hw: jax.Array,
     params: CannyParams,
     interpret: bool | None = None,
+    dist: Dist = LOCAL,
 ) -> jax.Array:
     """True-size-aware fused path for the bucketed serving layer: border
-    math anchors at per-image (h, w), so bucket padding is bit-exact."""
+    math anchors at per-image (h, w), so bucket padding is bit-exact.
+    ``dist`` places the bucket batch on a mesh — the same kernels run
+    inside shard_map, bit-identical to the local path."""
     return fused_canny(
         imgs.astype(jnp.float32),
         sigma=params.sigma,
@@ -72,6 +78,7 @@ def _fused_serving(
         l2_norm=params.l2_norm,
         interpret=interpret,
         true_hw=true_hw,
+        dist=dist,
     )
 
 

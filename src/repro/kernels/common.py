@@ -12,8 +12,12 @@ bound three times with strip-axis index maps ``i−1, i, i+1`` (clamped at
 the grid ends), so the kernel sees its strip plus both neighbours
 without dynamic DMA. Clamping is per-image by construction: blocks never
 straddle images on the batch axis, so a clamped neighbour always comes
-from the same image. Boundary strips patch their halo rows in-register
-(edge-replicate or zero) to match the oracle's border semantics exactly.
+from the same image. Boundary strips bind externally supplied halo slabs
+(``halo_spec``): the pad rule (edge-replicate or zero) in local mode, or
+— inside ``shard_map`` — the adjacent SHARD's rows exchanged by
+``StencilCtx.halo_rows``, which composes the shard-local grids into one
+global stencil bit-identically (DESIGN.md §8). ``offset_spec`` carries
+the shard's global row offset for true-size border logic.
 
 Strips are (8,128)-aligned for the VPU; BH defaults to 128 rows and
 shrinks for small images, and BT is chosen so the working set fits the
@@ -45,6 +49,25 @@ def pick_block_rows(h: int, target: int = 128, min_rows: int = 1) -> int:
     neighbour's halo). Non-divisible heights are edge-padded by ops.py.
     """
     return max(min(h, target), min_rows)
+
+
+def pick_block_rows_divisor(h: int, target: int = 128, min_rows: int = 1) -> int:
+    """Strip height that exactly divides ``h`` — the shard-local variant.
+
+    Inside ``shard_map`` a shard cannot pad its own rows (local pad rows
+    would land BETWEEN shards, breaking global row adjacency), so the
+    strip height must divide the shard-local height exactly. Returns the
+    largest divisor of ``h`` that is ≤ ``target`` and ≥ ``min_rows``.
+    """
+    if h < min_rows:
+        raise ValueError(
+            f"shard-local height {h} smaller than the stage halo {min_rows}; "
+            "use fewer row shards or a larger image"
+        )
+    for bh in range(min(h, target), min_rows - 1, -1):
+        if h % bh == 0:
+            return bh
+    return h  # h itself always divides (single strip per shard)
 
 
 def pick_batch_block(
@@ -91,21 +114,56 @@ def per_image_spec(cols: int, bt: int = 1):
     return pl.BlockSpec((bt, cols), lambda b, i: (b, 0))
 
 
+def halo_spec(halo: int, w: int, bt: int = 1):
+    """Spec for an externally supplied (B, halo, W) halo slab: every strip
+    of image-block b binds the same rows. The slab feeds the FIRST/LAST
+    local strips (where the clamped neighbour trick has no neighbour) —
+    under ``shard_map`` it carries the ppermute-exchanged rows of the
+    adjacent shard, so the shard-local grid composes into one global
+    stencil bit-identically (see ``assemble_rows``)."""
+    return pl.BlockSpec((bt, halo, w), lambda b, i: (b, 0, 0))
+
+
+def offset_spec(bt: int = 1):
+    """Spec for the (1, 1) int32 global-row-offset scalar: the first global
+    row this shard owns, added to ``i*bh`` so border logic anchored at
+    per-image TRUE sizes keeps working on a shard-local grid."""
+    del bt
+    return pl.BlockSpec((1, 1), lambda b, i: (0, 0))
+
+
 STRIP_AXIS = 1  # grid axis that walks row strips; axis 0 tiles the batch
 
 
-def assemble_rows(prev, cur, nxt, halo: int, mode: str, grid_axis: int = STRIP_AXIS):
+def assemble_rows(
+    prev,
+    cur,
+    nxt,
+    halo: int,
+    mode: str,
+    grid_axis: int = STRIP_AXIS,
+    top_ext=None,
+    bot_ext=None,
+):
     """Build the halo-extended tile (..., BH+2·halo, W) inside the kernel.
 
     ``prev``/``nxt`` are the clamped neighbour strips; at the grid ends
-    they alias ``cur``, so their contribution is replaced by the border
-    rule (edge-replicate or zeros).
+    they alias ``cur``, so their contribution is replaced either by the
+    border rule (edge-replicate or zeros) or — when ``top_ext``/``bot_ext``
+    are given — by the externally supplied halo slabs. External slabs are
+    how the shard-local grid composes under ``shard_map``: the first/last
+    local strips read the neighbour SHARD's rows (exchanged via ppermute,
+    boundary shards pre-patched with the pad rule), so the stitched global
+    stencil is bit-identical to the unsharded one.
     """
     i = pl.program_id(grid_axis)
     n = pl.num_programs(grid_axis)
     top = prev[..., -halo:, :]
     bot = nxt[..., :halo, :]
-    if mode == "edge":
+    if top_ext is not None:
+        top_fix = top_ext.astype(top.dtype)
+        bot_fix = bot_ext.astype(bot.dtype)
+    elif mode == "edge":
         top_fix = jnp.broadcast_to(cur[..., 0:1, :], top.shape)
         bot_fix = jnp.broadcast_to(cur[..., -1:, :], bot.shape)
     elif mode == "zero":

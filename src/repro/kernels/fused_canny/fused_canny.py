@@ -44,7 +44,10 @@ def _kernel(
     prev_ref,
     cur_ref,
     nxt_ref,
+    top_ref,
+    bot_ref,
     hw_ref,
+    off_ref,
     *out_refs,
     taps: tuple[float, ...],
     radius: int,
@@ -59,12 +62,26 @@ def _kernel(
     i = pl.program_id(common.STRIP_AXIS)
     ht = hw_ref[:, 0].reshape(bt, 1, 1)  # per-image true height
     wt = hw_ref[:, 1].reshape(bt, 1, 1)  # per-image true width
+    # First GLOBAL row this kernel's array owns: 0 locally; under shard_map
+    # the shard's row offset, so all border logic anchored at per-image
+    # true sizes keeps working on a shard-local grid.
+    row0 = off_ref[0, 0] + i * bh
 
     # ---- gaussian on the (bt, bh + 2*h2, w) extended tile ----------------
     # Rows >= ht and cols >= wt are edge clones added by ops.py/the engine,
     # so the blur of every real pixel already matches the oracle's
-    # edge-replicate semantics.
-    ext = common.assemble_rows(prev_ref[...], cur_ref[...], nxt_ref[...], h2, "edge")
+    # edge-replicate semantics. The first/last strips bind the externally
+    # supplied halo slabs (edge-replicated rows locally; the neighbour
+    # shard's rows under shard_map).
+    ext = common.assemble_rows(
+        prev_ref[...],
+        cur_ref[...],
+        nxt_ref[...],
+        h2,
+        "edge",
+        top_ext=top_ref[...],
+        bot_ext=bot_ref[...],
+    )
     xp = common.pad_cols(ext, r, "edge")
     tmp = jnp.zeros_like(ext)
     for t in range(2 * r + 1):
@@ -74,19 +91,19 @@ def _kernel(
     for t in range(2 * r + 1):
         blur = blur + taps[t] * jax.lax.slice_in_dim(tmp, t, t + nblur, axis=-2)
 
-    # Global row id of each blur row: g = i*bh + idx - 2 (idx = local row).
-    grow = jax.lax.broadcasted_iota(jnp.int32, (1, nblur, 1), 1) + i * bh - 2
+    # Global row id of each blur row: g = row0 + idx - 2 (idx = local row).
+    grow = jax.lax.broadcasted_iota(jnp.int32, (1, nblur, 1), 1) + row0 - 2
     gcol = jax.lax.broadcasted_iota(jnp.int32, (1, 1, w), 2)
 
     # Border fix 1: the oracle edge-replicates the *blurred* image for
     # sobel; virtual rows (g < 0 or g >= ht) and cols (>= wt) were instead
     # blurred from replicated/padded inputs. Overwrite with the first/last
     # TRUE blur row/col. The last true row may live in this strip at
-    # dynamic per-image local index (ht-1) - i*bh + 2 — fetched with one
+    # dynamic per-image local index (ht-1) - row0 + 2 — fetched with one
     # unrolled dynamic slice per in-block image. Rows first, cols second:
     # the bottom-right corner then lands on blur[ht-1, wt-1].
     top_fix = jnp.broadcast_to(blur[..., 2:3, :], blur.shape)
-    last_local = jnp.clip(ht - 1 - i * bh + 2, 0, nblur - 1)
+    last_local = jnp.clip(ht - 1 - row0 + 2, 0, nblur - 1)
     bot_row = common.select_row(blur, last_local)
     blur = jnp.where(grow < 0, top_fix, blur)
     blur = jnp.where(grow >= ht, jnp.broadcast_to(bot_row, blur.shape), blur)
@@ -100,7 +117,7 @@ def _kernel(
     # Border fix 2: NMS treats out-of-image neighbours as 0 — zero every
     # magnitude row/col outside [0, ht) × [0, wt). This also guarantees a
     # zero code map over the padded region (inert under hysteresis).
-    mgrow = jax.lax.broadcasted_iota(jnp.int32, (1, bh + 2, 1), 1) + i * bh - 1
+    mgrow = jax.lax.broadcasted_iota(jnp.int32, (1, bh + 2, 1), 1) + row0 - 1
     mag = jnp.where((mgrow < 0) | (mgrow >= ht) | (gcol >= wt), 0.0, mag)
 
     # ---- NMS → (bt, bh, w) -------------------------------------------------
@@ -131,6 +148,8 @@ def fused_canny_strips(
     interpret: bool | None = None,
     true_hw: jax.Array | None = None,
     batch_block: int | None = None,
+    halos: tuple[jax.Array, jax.Array] | None = None,
+    row_offset: jax.Array | None = None,
 ) -> jax.Array:
     """(B, H, W) f32 → NMS magnitudes (f32), threshold code map (uint8),
     or — emit="packed" — the (strong, weak) masks bit-packed 32 px/uint32
@@ -139,6 +158,15 @@ def fused_canny_strips(
     ``true_hw`` is a (B, 2) int32 table of pre-padding (height, width) per
     image: border fixes anchor there, not at the padded grid end. Defaults
     to the full (H, W) for every image.
+
+    ``halos`` is an optional ``(top, bot)`` pair of (B, radius+2, W) slabs
+    bound by the first/last strips in place of the clamped neighbour trick
+    — under ``shard_map`` they carry the adjacent shard's rows (exchanged
+    by ``StencilCtx.halo_rows``) so the shard-local grid stitches into one
+    global stencil bit-identically. ``row_offset`` is the matching (1, 1)
+    int32 first-global-row scalar (the shard's row offset; 0 locally).
+    Defaults reproduce the local path: edge-replicated halo slabs and
+    offset 0.
     """
     if emit not in ("nms", "code", "packed"):
         raise ValueError(emit)
@@ -153,6 +181,21 @@ def fused_canny_strips(
         raise ValueError(f"H={h} not a multiple of block_rows={bh}")
     if bh < h2:
         raise ValueError(f"block_rows={bh} must be >= radius+2={h2}")
+    if halos is None:
+        # edge-replicate = the oracle's border rule; identical to the old
+        # in-kernel i==0 / i==n-1 fix, now one uniform externally-fed path
+        halo_top = jnp.broadcast_to(imgs[:, :1, :], (b, h2, w))
+        halo_bot = jnp.broadcast_to(imgs[:, -1:, :], (b, h2, w))
+    else:
+        halo_top, halo_bot = halos
+        if halo_top.shape != (b, h2, w) or halo_bot.shape != (b, h2, w):
+            raise ValueError(
+                f"halo slabs must be {(b, h2, w)}, got "
+                f"{halo_top.shape} / {halo_bot.shape}"
+            )
+    if row_offset is None:
+        row_offset = jnp.zeros((1, 1), jnp.int32)
+    row_offset = jnp.asarray(row_offset, jnp.int32).reshape(1, 1)
     n = h // bh
     bt = batch_block or common.pick_batch_block(b, bh, w)
     taps = tuple(float(t) for t in gaussian_kernel1d(sigma, radius))
@@ -184,8 +227,24 @@ def fused_canny_strips(
             emit=emit,
         ),
         grid=(b // bt, n),
-        in_specs=[prev, cur, nxt, common.per_image_spec(2, bt)],
+        in_specs=[
+            prev,
+            cur,
+            nxt,
+            common.halo_spec(h2, w, bt),
+            common.halo_spec(h2, w, bt),
+            common.per_image_spec(2, bt),
+            common.offset_spec(bt),
+        ],
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
-    )(imgs, imgs, imgs, true_hw.astype(jnp.int32))
+    )(
+        imgs,
+        imgs,
+        imgs,
+        halo_top.astype(imgs.dtype),
+        halo_bot.astype(imgs.dtype),
+        true_hw.astype(jnp.int32),
+        row_offset,
+    )

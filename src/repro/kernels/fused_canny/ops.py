@@ -4,6 +4,14 @@ Batch-native: (b, h, w) inputs run in ONE pallas_call per stage (front-
 end, then one per hysteresis sweep). ``true_hw`` lets the serving engine
 run shape-bucketed batches — images padded to a common bucket are
 processed bit-identically to their unpadded selves.
+
+Mesh-native: pass a non-local ``Dist`` and the SAME kernels run inside
+``shard_map`` — the batch shards over ``dist.batch_axes``, rows over
+``dist.space_axis`` with ``StencilCtx`` ppermute halo exchange feeding
+the shard-local strip grids, and the hysteresis loop converges on the
+global changed-map consensus. One distribution plane, one code path;
+outputs are bit-identical to the local path (pinned by
+tests/subproc/sharded_canny.py).
 """
 
 from __future__ import annotations
@@ -12,8 +20,11 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
+from repro import compat
 from repro.core.canny.hysteresis import warm_seed
+from repro.core.patterns.dist import LOCAL, Dist, StencilCtx
 from repro.kernels import common
 from repro.kernels.fused_canny.fused_canny import fused_canny_strips
 from repro.kernels.hysteresis.ops import (
@@ -23,10 +34,139 @@ from repro.kernels.hysteresis.ops import (
 )
 
 
+def _shard_grid(h: int, dist: Dist, h2: int, block_rows: int | None):
+    """Shard-local strip geometry for a global height ``h``: → (padded
+    global height, shard-local height, block rows). Row padding must be
+    GLOBAL (local pads would land between shards), so the padded height
+    is a multiple of space_size * bh and each shard's rows divide bh."""
+    ms = dist.space_size()
+    if block_rows is not None:
+        bh = block_rows
+        hp = -(-h // (ms * bh)) * ms * bh
+        hl = hp // ms
+        if hl % bh:
+            raise ValueError(f"shard-local height {hl} not a multiple of {bh}")
+    else:
+        bh = common.pick_block_rows_divisor(-(-h // ms), min_rows=h2)
+        hp = -(-h // (ms * bh)) * ms * bh
+        hl = hp // ms
+        bh = common.pick_block_rows_divisor(hl, min_rows=h2)
+    return hp, hl, bh
+
+
+def _pad_rows_to(imgs: jax.Array, hp: int, mode: str = "edge"):
+    h = imgs.shape[-2]
+    if h == hp:
+        return imgs
+    pads = [(0, 0)] * (imgs.ndim - 2) + [(0, hp - h), (0, 0)]
+    if mode == "edge":
+        return jnp.pad(imgs, pads, mode="edge")
+    return jnp.pad(imgs, pads)
+
+
+def _check_dist_batch(b: int, dist: Dist) -> None:
+    dsz = dist.batch_size()
+    if b % dsz:
+        raise ValueError(
+            f"batch {b} not divisible by the {dist.batch_axes} axis size "
+            f"{dsz}; the serving engine pads bucket batches to a multiple"
+        )
+
+
+def _run_sharded(imgs, true_hw, radius, block_rows, dist, shard_fn):
+    """Shared shard_map scaffolding for the fused entry points.
+
+    Pads rows globally to the shard grid, wraps ``shard_fn`` in
+    ``shard_map`` over ``dist``, and hands it per-shard
+    ``(x, hw, halos, row_off, bh, ctx)`` — the halo slabs exchanged by
+    ``StencilCtx.halo_rows`` and the shard's first global row. Returns
+    the global result cropped back to the true height.
+    """
+    b, h, w = imgs.shape
+    _check_dist_batch(b, dist)
+    h2 = radius + 2
+    hp, hl, bh = _shard_grid(h, dist, h2, block_rows)
+    padded = _pad_rows_to(imgs, hp, "edge")
+    if true_hw is None:
+        true_hw = jnp.broadcast_to(jnp.asarray([h, w], jnp.int32), (b, 2))
+    fctx = StencilCtx(dist.space_axis, "edge", sync_axes=dist.sync_axes())
+    space = dist.space_axis
+
+    def local_fn(x, hw):
+        # x: (B/data, hl, W) shard-local rows; halos cross shards here
+        halos = fctx.halo_rows(x, h2) if space is not None else None
+        off = lax.axis_index(space) * hl if space is not None else 0
+        row_off = jnp.full((1, 1), off, jnp.int32)
+        return shard_fn(x, hw, halos, row_off, bh, fctx)
+
+    fn = compat.shard_map(
+        local_fn,
+        mesh=dist.mesh,
+        in_specs=(dist.batch_spec(), dist.table_spec()),
+        out_specs=dist.batch_spec(),
+        check_vma=False,
+    )
+    return common.crop_rows(fn(padded, true_hw.astype(jnp.int32)), h)
+
+
+def _sharded_fused_canny(
+    imgs: jax.Array,
+    sigma: float,
+    radius: int,
+    low: float,
+    high: float,
+    l2_norm: bool,
+    block_rows: int | None,
+    interpret: bool | None,
+    true_hw: jax.Array | None,
+    dist: Dist,
+) -> jax.Array:
+    """Fused front-end + packed hysteresis, all inside ONE shard_map."""
+    if imgs.shape[-1] % 32:
+        raise ValueError(
+            f"sharded fused canny needs W % 32 == 0 (packed hysteresis), "
+            f"got W={imgs.shape[-1]}; bucket widths to a multiple of 32"
+        )
+    hctx = StencilCtx(dist.space_axis, "zero", sync_axes=dist.sync_axes())
+
+    def shard_fn(x, hw, halos, row_off, bh, ctx):
+        strong_w, weak_w = fused_canny_strips(
+            x, sigma, radius, low, high, l2_norm, "packed", bh, interpret, hw,
+            halos=halos, row_offset=row_off,
+        )
+        packed = packed_fixpoint(strong_w, weak_w, bh, interpret, ctx=hctx)
+        return common.unpack_mask(packed)
+
+    return _run_sharded(imgs, true_hw, radius, block_rows, dist, shard_fn)
+
+
+def _sharded_fused_frontend(
+    imgs: jax.Array,
+    sigma: float,
+    radius: int,
+    low: float,
+    high: float,
+    l2_norm: bool,
+    emit: str,
+    block_rows: int | None,
+    interpret: bool | None,
+    true_hw: jax.Array | None,
+    dist: Dist,
+) -> jax.Array:
+    def shard_fn(x, hw, halos, row_off, bh, ctx):
+        return fused_canny_strips(
+            x, sigma, radius, low, high, l2_norm, emit, bh, interpret, hw,
+            halos=halos, row_offset=row_off,
+        )
+
+    return _run_sharded(imgs, true_hw, radius, block_rows, dist, shard_fn)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "sigma", "radius", "low", "high", "l2_norm", "emit", "block_rows", "interpret",
+        "sigma", "radius", "low", "high", "l2_norm", "emit", "block_rows",
+        "interpret", "dist",
     ),
 )
 def fused_frontend(
@@ -40,11 +180,18 @@ def fused_frontend(
     block_rows: int | None = None,
     interpret: bool | None = None,
     true_hw: jax.Array | None = None,
+    dist: Dist = LOCAL,
 ) -> jax.Array:
-    """Gauss+Sobel+NMS(+threshold) in one kernel pass."""
+    """Gauss+Sobel+NMS(+threshold) in one kernel pass (mesh-aware)."""
     if emit not in ("nms", "code"):  # "packed" flows through fused_canny only
         raise ValueError(emit)
     imgs, had_batch = common.as_batch(img.astype(jnp.float32))
+    if not dist.is_local:
+        out = _sharded_fused_frontend(
+            imgs, sigma, radius, low, high, l2_norm, emit, block_rows,
+            interpret, true_hw, dist,
+        )
+        return out if had_batch else out[0]
     h2 = radius + 2
     bh = block_rows or common.pick_block_rows(imgs.shape[-2], min_rows=h2)
     padded, h = common.pad_rows_to_multiple(imgs, bh)
@@ -63,6 +210,7 @@ def fused_frontend(
     jax.jit,
     static_argnames=(
         "sigma", "radius", "low", "high", "l2_norm", "block_rows", "interpret",
+        "dist",
     ),
 )
 def fused_canny(
@@ -75,14 +223,25 @@ def fused_canny(
     block_rows: int | None = None,
     interpret: bool | None = None,
     true_hw: jax.Array | None = None,
+    dist: Dist = LOCAL,
 ) -> jax.Array:
     """Full Canny: fused front-end + in-VMEM-fixpoint hysteresis. uint8 edges.
 
     When W divides 32 the front-end hands the hysteresis kernel bit-packed
     strong/weak words directly (2 bit/px between stages, no unpacked mask
     ever touches HBM); otherwise it falls back to the uint8 code map.
+
+    With a non-local ``dist`` the whole detector runs inside ``shard_map``
+    (batch over ``dist.batch_axes``, rows over ``dist.space_axis``) and
+    stays bit-identical to the local path; this path requires W % 32 == 0.
     """
     imgs, had_batch = common.as_batch(img.astype(jnp.float32))
+    if not dist.is_local:
+        edges = _sharded_fused_canny(
+            imgs, sigma, radius, low, high, l2_norm, block_rows, interpret,
+            true_hw, dist,
+        )
+        return edges if had_batch else edges[0]
     w = imgs.shape[-1]
     if w % 32:
         code = fused_frontend(

@@ -38,10 +38,16 @@ def _hshift(v):
     return v | (v << 1) | (pw >> 31) | (v >> 1) | (xw << 31)
 
 
-def _kernel(eprev_ref, ecur_ref, enxt_ref, weak_ref, out_ref, changed_ref):
+def _kernel(eprev_ref, ecur_ref, enxt_ref, weak_ref, top_ref, bot_ref, out_ref, changed_ref):
     bt, bh, nw = ecur_ref.shape
     ext = common.assemble_rows(
-        eprev_ref[...], ecur_ref[...], enxt_ref[...], 1, "zero"
+        eprev_ref[...],
+        ecur_ref[...],
+        enxt_ref[...],
+        1,
+        "zero",
+        top_ext=top_ref[...],
+        bot_ext=bot_ref[...],
     )  # (bt, bh+2, nw) uint32; halo rows stay FIXED during this launch
     top = ext[..., 0:1, :]
     bot = ext[..., -1:, :]
@@ -81,6 +87,7 @@ def hysteresis_sweep_strips(
     block_rows: int | None = None,
     interpret: bool | None = None,
     batch_block: int | None = None,
+    halos: tuple[jax.Array, jax.Array] | None = None,
 ):
     """One launch, whole batch: local fixpoint per (image, strip) tile.
 
@@ -89,6 +96,13 @@ def hysteresis_sweep_strips(
     entry is 0 for an already-converged tile, else the tile's productive
     in-VMEM dilation count (so the map is both the outer-loop convergence
     test and the sweep-work metric the streaming stats report).
+
+    ``halos`` is an optional ``(top, bot)`` pair of (B, 1, W//32) packed
+    halo ROWS bound by the first/last strips in place of the zero border
+    rule — under ``shard_map`` they carry the neighbour shard's boundary
+    edge words (exchanged per sweep by the driving fixpoint loop), which
+    is how edge chains propagate across row shards. The changed map stays
+    shard-local; the fixpoint loop joins it with the global consensus.
     """
     if interpret is None:
         interpret = common.default_interpret()
@@ -96,13 +110,29 @@ def hysteresis_sweep_strips(
     bh = block_rows or common.pick_block_rows(h)
     if h % bh != 0:
         raise ValueError(f"H={h} not a multiple of block_rows={bh}")
+    if halos is None:
+        top = jnp.zeros((b, 1, nw), jnp.uint32)  # zero rule: no edges outside
+        bot = top
+    else:
+        top, bot = halos
+        if top.shape != (b, 1, nw) or bot.shape != (b, 1, nw):
+            raise ValueError(
+                f"halo rows must be {(b, 1, nw)}, got {top.shape} / {bot.shape}"
+            )
     n = h // bh
     bt = batch_block or common.pick_batch_block(b, bh, nw)
     prev, cur, nxt = common.strip_specs(n, bh, nw, bt)
     return pl.pallas_call(
         _kernel,
         grid=(b // bt, n),
-        in_specs=[prev, cur, nxt, common.out_strip_spec(bh, nw, bt)],
+        in_specs=[
+            prev,
+            cur,
+            nxt,
+            common.out_strip_spec(bh, nw, bt),
+            common.halo_spec(1, nw, bt),
+            common.halo_spec(1, nw, bt),
+        ],
         out_specs=(
             common.out_strip_spec(bh, nw, bt),
             pl.BlockSpec((bt, 1), lambda bi, si: (bi, si)),
@@ -112,4 +142,4 @@ def hysteresis_sweep_strips(
             jax.ShapeDtypeStruct((b, n), jnp.int32),
         ),
         interpret=interpret,
-    )(edges, edges, edges, weak)
+    )(edges, edges, edges, weak, top.astype(jnp.uint32), bot.astype(jnp.uint32))

@@ -6,6 +6,13 @@ pallas_call over the (batch, strip) grid on the packed words, and the
 launch another. A batch therefore costs max-over-images sweeps of
 whole-batch launches — not b lockstep per-image loops each paying
 per-launch overhead — and each sweep moves 1 bit/px of HBM traffic.
+
+Under ``shard_map`` (pass a row-sharded ``StencilCtx``) the same loop
+runs per shard: each sweep first ppermute-exchanges one packed halo row
+with the neighbour shards (edge chains cross shards one sweep-hop at a
+time, exactly like they cross strips), and the loop condition is the
+changed-map consensus over EVERY mesh axis in use — all devices agree on
+the trip count, so the collectives inside the body can never deadlock.
 """
 
 from __future__ import annotations
@@ -16,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.patterns.dist import StencilCtx
 from repro.kernels import common
 from repro.kernels.hysteresis.hysteresis import hysteresis_sweep_strips
 
@@ -25,10 +33,13 @@ def packed_fixpoint(
     weak_words: jax.Array,
     block_rows: int,
     interpret: bool | None = None,
+    ctx: StencilCtx | None = None,
 ) -> jax.Array:
     """Drive packed (B, H, W//32) masks to the global fixpoint: one XLA
     while-loop of whole-batch sweep launches. H must divide block_rows."""
-    return packed_fixpoint_count(strong_words, weak_words, block_rows, interpret)[0]
+    return packed_fixpoint_count(
+        strong_words, weak_words, block_rows, interpret, ctx
+    )[0]
 
 
 def packed_fixpoint_count(
@@ -36,6 +47,7 @@ def packed_fixpoint_count(
     weak_words: jax.Array,
     block_rows: int,
     interpret: bool | None = None,
+    ctx: StencilCtx | None = None,
 ):
     """``packed_fixpoint`` + its cost: → (packed, launches, dilations).
 
@@ -48,13 +60,27 @@ def packed_fixpoint_count(
     no-change verification (a warm-started static frame reports 1);
     ``dilations`` sums the productive in-VMEM masked dilations over every
     (image, strip) tile and launch (a warm-started static frame reports
-    0) — the work a warm start saves.
+    0) — the work a warm start saves. Inside ``shard_map`` both counts are
+    the GLOBAL consensus values, identical on every device.
+
+    ``ctx`` threads the distribution plane through: when its row axis is
+    sharded, every sweep exchanges one packed halo row with the neighbour
+    shards before launching, and the loop condition joins the shard-local
+    changed maps over all of ``ctx.sync_axes`` — mandatory, because a
+    psum inside a ``lax.while_loop`` body requires every device to agree
+    on the trip count.
     """
+    ctx = ctx or StencilCtx(None, "zero")
+    sharded_rows = ctx.axis_name is not None
 
     def body(carry):
         e, _, n, work = carry
-        e2, changed = hysteresis_sweep_strips(e, weak_words, block_rows, interpret)
-        return e2, changed.sum(), n + 1, work + changed.sum()
+        halos = ctx.halo_rows(e, 1, pad_mode="zero") if sharded_rows else None
+        e2, changed = hysteresis_sweep_strips(
+            e, weak_words, block_rows, interpret, halos=halos
+        )
+        c = ctx.sum_global(changed.sum())
+        return e2, c, n + 1, work + c
 
     zero = jnp.asarray(0, jnp.int32)
     packed, _, n, work = lax.while_loop(

@@ -18,6 +18,7 @@ import numpy as np
 
 from repro.core.canny import CannyParams, canny_reference
 from repro.data.images import synthetic_image
+from repro.launch.mesh import dist_from_spec
 from repro.serve.engine import CannyEngine
 
 
@@ -42,19 +43,28 @@ def main():
     ap.add_argument("--high", type=float, default=0.2)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-verify", action="store_true")
+    ap.add_argument(
+        "--mesh",
+        default=None,
+        help="DATAxMODEL device mesh (e.g. 2x4): bucket batches shard over "
+        "data, rows over model; one queue drains across all devices",
+    )
     args = ap.parse_args()
 
     params = CannyParams(sigma=args.sigma, low=args.low, high=args.high)
     sizes = parse_sizes(args.sizes)
+    dist = dist_from_spec(args.mesh)
     engine = CannyEngine(
         params,
         backend=args.backend,
         bucket_multiple=args.bucket,
         max_batch=args.max_batch,
+        dist=dist,
     )
+    mesh_desc = "local" if dist.is_local else f"mesh={args.mesh}"
     print(
         f"engine: backend={args.backend} bucket_multiple={args.bucket} "
-        f"max_batch={args.max_batch} sizes={sizes}"
+        f"max_batch={args.max_batch} sizes={sizes} {mesh_desc}"
     )
 
     rng = np.random.default_rng(args.seed)

@@ -20,6 +20,7 @@ import time
 import numpy as np
 
 from repro.core.canny import CannyParams, canny_reference
+from repro.launch.mesh import dist_from_spec
 from repro.stream import FarmScheduler, Prefetcher, SyntheticStream
 
 
@@ -36,6 +37,18 @@ def main():
     ap.add_argument("--no-warm", action="store_true")
     ap.add_argument("--engine", action="store_true", help="micro-batch via CannyEngine")
     ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument(
+        "--fixed-batch",
+        action="store_true",
+        help="disable adaptive micro-batching (engine path): always wait "
+        "for max-batch frames per wave",
+    )
+    ap.add_argument(
+        "--mesh",
+        default=None,
+        help="DATAxMODEL device mesh (e.g. 2x4): all workers share one "
+        "mesh-aware detector; frames shard over data, rows over model",
+    )
     ap.add_argument("--backend", default=None, help="fused | jnp (default: auto)")
     ap.add_argument("--sigma", type=float, default=1.4)
     ap.add_argument("--low", type=float, default=0.08)
@@ -53,6 +66,7 @@ def main():
         hold=args.hold,
         noise=args.noise,
     )
+    dist = dist_from_spec(args.mesh)
     sched = FarmScheduler(
         params,
         n_workers=args.workers,
@@ -60,17 +74,25 @@ def main():
         queue_depth=args.queue_depth,
         backend=args.backend,
         block_rows=args.block_rows,
+        dist=dist,
     )
     mode = "engine" if args.engine else f"farm x{args.workers}"
+    mesh_desc = "" if dist.is_local else f" mesh={args.mesh}"
+    # mesh mode shares one stateless shard_map detector across workers, so
+    # temporal warm-start is off regardless of --no-warm — say so
+    warm_desc = "off" if (args.no_warm or not dist.is_local) else "on"
     print(
         f"stream: {args.frames} frames {args.height}x{args.width} hold={args.hold} "
-        f"| {mode} warm={'off' if args.no_warm else 'on'}",
+        f"| {mode} warm={warm_desc}{mesh_desc}",
         flush=True,
     )
 
     feed = Prefetcher(source, depth=args.queue_depth)
-    runner = sched.run_engine(feed, max_batch=args.max_batch) if args.engine \
+    runner = (
+        sched.run_engine(feed, max_batch=args.max_batch, adaptive=not args.fixed_batch)
+        if args.engine
         else sched.run(feed)
+    )
     t0 = time.perf_counter()
     edge_px = 0
     mismatches = 0

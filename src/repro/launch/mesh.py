@@ -16,3 +16,39 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(data: int = 2, model: int = 4):
     """Small mesh for multi-device CPU tests (8 virtual devices)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def dist_from_spec(spec: str | None):
+    """``--mesh DATAxMODEL`` CLI flag → a ``Dist`` (the one distribution
+    plane every serving/stream entry point accepts).
+
+    ``None``/empty → local. ``"2x4"`` → batch over a 2-way ``data`` axis,
+    rows over a 4-way ``model`` axis; ``"8x1"``/``"8"`` → data-only.
+    Size-1 axes are dropped from the Dist so consensus and halo exchange
+    no-op on them. Raises if the host has fewer devices than the mesh.
+    """
+    from repro.core.patterns.dist import LOCAL, Dist
+
+    if not spec:
+        return LOCAL
+    parts = [int(p) for p in spec.lower().split("x")]
+    if len(parts) == 1:
+        parts.append(1)
+    if len(parts) != 2 or any(p < 1 for p in parts):
+        raise ValueError(f"--mesh expects DATAxMODEL (e.g. 2x4), got {spec!r}")
+    data, model = parts
+    n = data * model
+    have = len(jax.devices())
+    if have < n:
+        raise ValueError(
+            f"--mesh {spec} needs {n} devices, host has {have} "
+            "(hint: XLA_FLAGS=--xla_force_host_platform_device_count=N)"
+        )
+    if n == 1:
+        return LOCAL
+    mesh = jax.make_mesh((data, model), ("data", "model"))
+    return Dist(
+        mesh=mesh,
+        batch_axes=("data",) if data > 1 else (),
+        space_axis="model" if model > 1 else None,
+    )

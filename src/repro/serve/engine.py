@@ -40,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.canny.params import CannyParams
+from repro.core.patterns.dist import LOCAL, Dist
 
 
 def round_up(x: int, m: int) -> int:
@@ -51,6 +52,17 @@ def next_pow2(x: int) -> int:
     while p < x:
         p *= 2
     return p
+
+
+def bucket_batch(n: int, lane: int = 1) -> int:
+    """Batch-dim bucket for ``n`` requests: the next power of two, then
+    rounded up to a multiple of ``lane`` (the mesh data-axis size), so a
+    bucket batch ALWAYS shards exactly over the data axes — a non-pow2
+    lane (e.g. 3-way data parallel) still gets a divisible batch."""
+    if n < 0:
+        raise ValueError(f"negative batch {n}")
+    lane = max(lane, 1)
+    return round_up(max(next_pow2(n), 1), lane)
 
 
 def percentile(samples, q: float) -> float:
@@ -73,6 +85,7 @@ class _BucketCache:
         params: CannyParams,
         interpret: bool | None = None,
         donate: bool | None = None,
+        dist: Dist = LOCAL,
     ):
         if donate is None:
             donate = jax.devices()[0].platform in ("tpu", "gpu")
@@ -82,7 +95,7 @@ class _BucketCache:
         self.compiles = 0
 
         def run(imgs, true_hw):
-            return serve_fn(imgs, true_hw, params, interpret)
+            return serve_fn(imgs, true_hw, params, interpret, dist)
 
         self._jit = jax.jit(run, donate_argnums=(0,) if donate else ())
 
@@ -100,6 +113,11 @@ class BucketedCanny:
     (h, w) or (b, h, w) in → uint8 edges of the same shape, bit-identical
     to the unbucketed detector. New exact shapes inside an existing
     (batch, height, width) bucket reuse its executable.
+
+    ``dist`` places every bucket batch on a mesh: the batch dim is padded
+    to a multiple of the data-axis size so it shards exactly, and the
+    serving backend runs its kernels inside shard_map (rows over the
+    space axis via halo exchange) — same outputs, whole-mesh throughput.
     """
 
     def __init__(
@@ -109,10 +127,22 @@ class BucketedCanny:
         bucket_multiple: int = 64,
         interpret: bool | None = None,
         donate: bool | None = None,
+        dist: Dist = LOCAL,
     ):
+        if not dist.is_local and bucket_multiple % 32:
+            raise ValueError(
+                f"mesh serving needs bucket_multiple % 32 == 0 (packed "
+                f"hysteresis words), got {bucket_multiple}"
+            )
         self.params = params
         self.bucket_multiple = bucket_multiple
-        self._cache = _BucketCache(serve_fn, params, interpret, donate)
+        self.dist = dist
+        self._cache = _BucketCache(serve_fn, params, interpret, donate, dist)
+        # one launch owns the WHOLE mesh at a time: concurrent threads
+        # racing the same shard_map program interleave its collective
+        # rendezvous across devices and deadlock (single-device launches
+        # need no lock — jax serializes per device)
+        self._mesh_lock = None if dist.is_local else threading.Lock()
 
     @property
     def compiles(self) -> int:
@@ -125,7 +155,8 @@ class BucketedCanny:
             raise ValueError(f"expected (h,w) or (b,h,w), got {img.shape}")
         b, h, w = imgs.shape
         m = self.bucket_multiple
-        bb, hb, wb = next_pow2(b), round_up(h, m), round_up(w, m)
+        bb = bucket_batch(b, self.dist.batch_size())
+        hb, wb = round_up(h, m), round_up(w, m)
         # edge-replicate on h/w (what the true-size border math expects),
         # zeros on the phantom batch slots — an all-zero image converges in
         # one hysteresis sweep instead of paying full propagation
@@ -134,7 +165,12 @@ class BucketedCanny:
         )
         padded = jnp.pad(padded, ((0, bb - b), (0, 0), (0, 0)))
         true_hw = jnp.broadcast_to(jnp.asarray([h, w], jnp.int32), (bb, 2))
-        out = self._cache.get(bb, hb, wb)(padded, true_hw)
+        fn = self._cache.get(bb, hb, wb)
+        if self._mesh_lock is not None:
+            with self._mesh_lock:
+                out = jax.block_until_ready(fn(padded, true_hw))
+        else:
+            out = fn(padded, true_hw)
         out = out[:b, :h, :w]
         return out[0] if squeeze else out
 
@@ -219,6 +255,10 @@ class CannyEngine:
     wave (so requests accumulated between drains share bucket batches).
     The farm scheduler's micro-batching path rides this API. Thread-safe:
     concurrent submits/drains serialize on an internal lock.
+
+    ``dist`` makes ONE engine queue drain across a whole mesh: bucket
+    batches pad to a multiple of the data-axis size and the kernels run
+    inside shard_map, so every device works on every wave.
     """
 
     def __init__(
@@ -229,20 +269,30 @@ class CannyEngine:
         max_batch: int = 8,
         interpret: bool | None = None,
         donate: bool | None = None,
+        dist: Dist = LOCAL,
     ):
         from repro.core.canny.pipeline import resolve_serving_backend
 
         serve_fn = resolve_serving_backend(backend)
         if serve_fn is None:
             raise ValueError(f"backend {backend!r} has no serving (true-size) entry")
+        if not dist.is_local and bucket_multiple % 32:
+            raise ValueError(
+                f"mesh serving needs bucket_multiple % 32 == 0 (packed "
+                f"hysteresis words), got {bucket_multiple}"
+            )
         self.params = params
         self.backend = backend
         self.bucket_multiple = bucket_multiple
         self.max_batch = max_batch
-        self._cache = _BucketCache(serve_fn, params, interpret, donate)
+        self.dist = dist
+        self._cache = _BucketCache(serve_fn, params, interpret, donate, dist)
         self.stats = EngineStats()
         self._lock = threading.Lock()
         self._drain_lock = threading.Lock()
+        # see BucketedCanny._mesh_lock: concurrent launches of one
+        # shard_map program deadlock its cross-device rendezvous
+        self._mesh_lock = None if dist.is_local else threading.Lock()
         self._pending: list[tuple[np.ndarray, Ticket]] = []
 
     # -- async request plane ------------------------------------------------
@@ -300,7 +350,9 @@ class CannyEngine:
         return results  # fully populated
 
     def _run_chunk(self, images, chunk, hb, wb, results) -> None:
-        bb = next_pow2(len(chunk))
+        # pow2 for bucket-cache reuse, then a multiple of the data-axis
+        # size so the batch ALWAYS shards exactly over the mesh
+        bb = bucket_batch(len(chunk), self.dist.batch_size())
         batch = np.zeros((bb, hb, wb), np.float32)
         true_hw = np.full((bb, 2), (hb, wb), np.int32)
         for slot, i in enumerate(chunk):
@@ -311,7 +363,11 @@ class CannyEngine:
             true_hw[slot] = (h, w)
         fn = self._cache.get(bb, hb, wb)
         t0 = time.perf_counter()
-        out = np.asarray(fn(jnp.asarray(batch), jnp.asarray(true_hw)))
+        if self._mesh_lock is not None:
+            with self._mesh_lock:  # np.asarray blocks before release
+                out = np.asarray(fn(jnp.asarray(batch), jnp.asarray(true_hw)))
+        else:
+            out = np.asarray(fn(jnp.asarray(batch), jnp.asarray(true_hw)))
         dt_ms = (time.perf_counter() - t0) * 1e3
         for slot, i in enumerate(chunk):
             h, w = images[i].shape

@@ -56,6 +56,11 @@ class StreamStats:
     queue_depth: collections.deque = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=4096)
     )
+    # adaptive micro-batching: chosen submit-wave size → count (the stat
+    # that shows what batch sizes the queue-depth policy actually picked)
+    batch_sizes: collections.Counter = dataclasses.field(
+        default_factory=collections.Counter
+    )
     _lock: threading.Lock = dataclasses.field(default_factory=threading.Lock)
 
     def record_prep(self, ms: float) -> None:
@@ -71,6 +76,16 @@ class StreamStats:
             self.launches += launches
             self.dilations += dilations
 
+    def record_batch_size(self, size: int) -> None:
+        with self._lock:
+            self.batch_sizes[size] += 1
+
+    def mean_batch_size(self) -> float:
+        n = sum(self.batch_sizes.values())
+        if not n:
+            return 0.0
+        return sum(s * c for s, c in self.batch_sizes.items()) / n
+
     def fps(self) -> float:
         return self.frames / self.wall_s if self.wall_s else 0.0
 
@@ -78,7 +93,7 @@ class StreamStats:
         depth = (
             sum(self.queue_depth) / len(self.queue_depth) if self.queue_depth else 0.0
         )
-        return (
+        line = (
             f"frames={self.frames} fps={self.fps():.2f} "
             f"prep_p50={percentile(self.prep_ms, 0.5):.1f}ms "
             f"compute_p50={percentile(self.compute_ms, 0.5):.1f}ms "
@@ -86,6 +101,9 @@ class StreamStats:
             f"queue_depth~{depth:.1f} "
             f"hysteresis: launches={self.launches} dilations={self.dilations}"
         )
+        if self.batch_sizes:
+            line += f" micro_batch~{self.mean_batch_size():.1f}"
+        return line
 
 
 class StreamWorker:
@@ -129,7 +147,15 @@ class StreamWorker:
 
 
 class FarmScheduler:
-    """Farm of warm-start Canny pipelines over any frame source."""
+    """Farm of warm-start Canny pipelines over any frame source.
+
+    ``dist`` routes every worker through ONE shared mesh-aware detector
+    (``make_canny(dist=...)``): frames still dispatch round-robin, but
+    each detector call runs the fused kernels inside shard_map across the
+    whole mesh — the "one queue drains across devices" configuration.
+    Temporal warm-start state stays per-worker-local, so the shared-
+    detector mesh path runs cold (exactness is unaffected).
+    """
 
     def __init__(
         self,
@@ -141,12 +167,22 @@ class FarmScheduler:
         block_rows: int | None = None,
         detector: Callable | None = None,
         devices=None,
+        dist=None,
     ):
         devices = list(devices) if devices is not None else jax.local_devices()
         if n_workers is None:
             n_workers = max(2, len(devices))
+        if detector is None and dist is not None and not dist.is_local:
+            from repro.core.canny.pipeline import make_canny
+
+            # device parallelism comes from the mesh (BucketedCanny
+            # serializes concurrent launches internally), thread overlap
+            # from per-worker host prep
+            detector = make_canny(params, dist, backend=backend or "fused")
+            devices = [None]  # shard_map owns placement; workers share it
         self.params = params
         self.warm = warm
+        self.dist = dist
         self.stats = StreamStats()
         self.detectors: list = []
         workers = []
@@ -176,21 +212,37 @@ class FarmScheduler:
         source: Iterable[np.ndarray],
         engine=None,
         max_batch: int = 8,
+        adaptive: bool = True,
     ) -> Iterator[np.ndarray]:
         """Micro-batching path: frames ride ``CannyEngine.submit``/``drain``.
 
-        Collects up to ``max_batch`` frames, drains them as one bucketed
-        batch-grid launch, and emits in order — higher throughput, wave
-        latency. Mixed frame sizes are fine (the engine buckets them).
+        Collects frames, drains them as one bucketed batch-grid launch,
+        and emits in order — higher throughput, wave latency. Mixed frame
+        sizes are fine (the engine buckets them).
+
+        ``adaptive`` picks each wave's submit batch size from the CURRENT
+        source backlog instead of always waiting for ``max_batch``: when
+        the source exposes ``qsize()`` (e.g. ``Prefetcher``), a wave
+        flushes once it holds every frame that was already buffered —
+        an idle stream drains single frames at minimum latency, a backed-
+        up stream grows waves toward ``max_batch`` for throughput. The
+        chosen sizes land in ``stats.batch_sizes``. Frame order and edge
+        bits are identical either way (wave boundaries only group work).
+        ``adaptive=False`` restores the fixed-size waves.
         """
         if engine is None:
+            from repro.core.patterns.dist import LOCAL
             from repro.serve.engine import CannyEngine
 
-            engine = CannyEngine(self.params, max_batch=max_batch)
+            engine = CannyEngine(
+                self.params, max_batch=max_batch, dist=self.dist or LOCAL
+            )
         t0 = time.perf_counter()
         pending = []
+        backlog = getattr(source, "qsize", None) if adaptive else None
 
         def flush():
+            self.stats.record_batch_size(len(pending))
             engine.drain()
             for ticket in pending:
                 self.stats.frames += 1
@@ -200,6 +252,13 @@ class FarmScheduler:
 
         for frame in source:
             pending.append(engine.submit(np.asarray(frame, np.float32)))
-            if len(pending) >= max_batch:
+            # target = frames already in hand + frames sitting in the
+            # source buffer, capped at max_batch; without a backlog
+            # signal, adaptive degrades to fixed max_batch waves
+            target = max_batch
+            if backlog is not None:
+                target = min(max_batch, max(1, len(pending) + backlog()))
+            if len(pending) >= target:
                 yield from flush()
-        yield from flush()
+        if pending:
+            yield from flush()

@@ -211,9 +211,26 @@ class Prefetcher:
             raise ValueError("depth must be >= 1")
         self.source = source
         self.depth = depth
+        self._q: queue.Queue | None = None
+        self._end_enqueued = False
+
+    def qsize(self) -> int:
+        """FRAMES currently buffered ahead of the consumer (0 before the
+        first ``iter``). The adaptive micro-batching scheduler reads this
+        as its backlog signal: a deep queue means the producer is ahead,
+        so batching more costs no extra latency. The end-of-stream /
+        error sentinel sharing the queue is excluded — at end of stream
+        the backlog must read 0, not 1, so the last wave flushes
+        immediately instead of waiting for a frame that never arrives."""
+        q = self._q
+        if q is None:
+            return 0
+        return max(0, q.qsize() - (1 if self._end_enqueued else 0))
 
     def __iter__(self) -> Iterator[np.ndarray]:
         q: queue.Queue = queue.Queue(maxsize=self.depth)
+        self._q = q
+        self._end_enqueued = False
         stop = threading.Event()
 
         def fill():
@@ -221,8 +238,10 @@ class Prefetcher:
                 for item in self.source:
                     if not put_cancellable(q, item, stop.is_set):
                         return
+                self._end_enqueued = True
                 put_cancellable(q, self._END, stop.is_set)
             except BaseException as exc:  # noqa: BLE001 — re-raised below
+                self._end_enqueued = True
                 put_cancellable(q, exc, stop.is_set)
 
         t = threading.Thread(target=fill, daemon=True)

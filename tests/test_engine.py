@@ -12,7 +12,13 @@ import pytest
 
 from repro.core.canny import CannyParams, canny_reference
 from repro.data.images import synthetic_image
-from repro.serve.engine import BucketedCanny, CannyEngine, next_pow2, round_up
+from repro.serve.engine import (
+    BucketedCanny,
+    CannyEngine,
+    bucket_batch,
+    next_pow2,
+    round_up,
+)
 
 PARAMS = CannyParams(sigma=1.4, radius=2, low=0.08, high=0.2)
 
@@ -31,6 +37,47 @@ def test_round_up(x, m, want):
 )
 def test_next_pow2(x, want):
     assert next_pow2(x) == want
+
+
+@pytest.mark.parametrize(
+    "n,lane,want",
+    [
+        (0, 1, 1), (1, 1, 1), (3, 1, 4),          # local: plain next_pow2
+        (1, 2, 2), (3, 2, 4), (5, 8, 8),          # pow2 lanes fold in
+        (1, 3, 3), (4, 3, 6), (9, 3, 18),         # non-pow2 lanes still divide
+        (6, 4, 8),
+    ],
+)
+def test_bucket_batch_always_divisible_by_lane(n, lane, want):
+    got = bucket_batch(n, lane)
+    assert got == want
+    assert got % lane == 0 and got >= max(n, 1)
+
+
+def test_bucket_batch_rejects_negative():
+    with pytest.raises(ValueError):
+        bucket_batch(-1)
+
+
+# ---------------- backend registry ------------------------------------------
+def test_register_serving_backend_rejects_duplicates():
+    from repro.core.canny.pipeline import (
+        register_backend,
+        register_serving_backend,
+        resolve_serving_backend,
+    )
+
+    fn = resolve_serving_backend("fused")  # forces kernel registration
+    assert fn is not None
+    with pytest.raises(ValueError, match="already registered"):
+        register_serving_backend("fused", lambda *a: None)
+    with pytest.raises(ValueError, match="already registered"):
+        register_backend("fused", lambda *a: None)
+    # the originals survive the rejected overwrite
+    assert resolve_serving_backend("fused") is fn
+    # deliberate replacement is allowed, then restored
+    register_serving_backend("fused", fn, override=True)
+    assert resolve_serving_backend("fused") is fn
 
 
 # ---------------- bucket cache accounting -----------------------------------

@@ -318,3 +318,76 @@ def test_run_engine_in_order_and_exact():
     assert len(got) == 5
     for f, e in zip(frames, got):
         assert (e == canny_reference(f, PARAMS)).all()
+
+
+class _DepthStub:
+    """Frame source with a scripted ``qsize`` backlog signal."""
+
+    def __init__(self, frames, depths):
+        self.frames = frames
+        self.depths = list(depths)
+        self._i = 0
+
+    def qsize(self):
+        d = self.depths[min(self._i, len(self.depths) - 1)]
+        return d
+
+    def __iter__(self):
+        for f in self.frames:
+            yield f
+            self._i += 1
+
+
+def test_run_engine_adaptive_batches_follow_queue_depth():
+    """Empty backlog → single-frame waves (latency); deep backlog → waves
+    grow toward max_batch (throughput). Order and bits never change."""
+    frames = list(SyntheticStream(6, 32, 32, seed=7))
+
+    # backlog always empty → every wave is a single frame
+    idle = _DepthStub(frames, [0] * 6)
+    sched = FarmScheduler(PARAMS)
+    got = list(sched.run_engine(idle, max_batch=4))
+    assert len(got) == 6
+    for f, e in zip(frames, got):
+        assert (e == canny_reference(f, PARAMS)).all()
+    assert sched.stats.batch_sizes == {1: 6}
+    assert sched.stats.mean_batch_size() == 1.0
+
+    # backlog always deep → waves fill to max_batch
+    busy = _DepthStub(frames, [10] * 6)
+    sched = FarmScheduler(PARAMS)
+    got = list(sched.run_engine(busy, max_batch=4))
+    assert len(got) == 6
+    for f, e in zip(frames, got):
+        assert (e == canny_reference(f, PARAMS)).all()
+    assert sched.stats.batch_sizes == {4: 1, 2: 1}
+
+
+def test_run_engine_adaptive_without_backlog_signal_fills_waves():
+    """A plain iterable has no qsize(): adaptive degrades to fixed waves."""
+    frames = list(SyntheticStream(5, 32, 32, seed=8))
+    sched = FarmScheduler(PARAMS)
+    got = list(sched.run_engine(frames, max_batch=2, adaptive=True))
+    assert len(got) == 5
+    for f, e in zip(frames, got):
+        assert (e == canny_reference(f, PARAMS)).all()
+    assert sched.stats.batch_sizes == {2: 2, 1: 1}
+
+
+def test_run_engine_fixed_mode_ignores_backlog():
+    frames = list(SyntheticStream(4, 32, 32, seed=9))
+    idle = _DepthStub(frames, [0] * 4)
+    sched = FarmScheduler(PARAMS)
+    got = list(sched.run_engine(idle, max_batch=4, adaptive=False))
+    assert len(got) == 4
+    assert sched.stats.batch_sizes == {4: 1}
+
+
+def test_prefetcher_exposes_backlog_depth():
+    from repro.stream import Prefetcher
+
+    src = Prefetcher(SyntheticStream(3, 16, 16, seed=10), depth=2)
+    assert src.qsize() == 0  # before iteration starts
+    out = list(src)
+    assert len(out) == 3
+    assert src.qsize() == 0  # fully drained
