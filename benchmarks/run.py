@@ -16,6 +16,10 @@ the LM table reads the dry-run artifacts.
                                  the forced device count can't leak)
   stream_fps                     farm/stream workload: temporal warm-start
                                  hysteresis on vs off (bit-identical edges)
+  pod_farm_fps                   the multi-host plane in miniature: 1 vs 2
+                                 pod ranks over the same stream, cold vs
+                                 warm+skip (static-strip front-end skip),
+                                 rank-tagged reassembly, bit-exact
   roofline_table                 §Roofline summary from experiments/dryrun
 
 Besides the CSV on stdout, results land in ``BENCH_<git rev>.json`` next
@@ -288,6 +292,73 @@ def stream_fps(frames=24, h=256, w=256, hold=4, block_rows=32):
     assert exact, "warm-start stream diverged from cold"
 
 
+def pod_farm_fps(frames=24, h=128, w=128, hold=6, block_rows=32):
+    """Pod-farm stream throughput: 1 vs 2 pod ranks, cold vs warm+skip.
+
+    Each rank is a ``PodWorker`` over its strided slice of the SAME
+    deterministic stream (ranks run in threads here; real deployments run
+    one process per host — the dispatch/merge math is identical), merged
+    back with the rank-tagged reassembly. Edges must be bit-identical
+    across every configuration — pods and skip may only move wall clock
+    and the front-end launch counters.
+    """
+    import threading
+
+    from repro.stream import PodCtx, PodWorker, SyntheticStream, reassemble
+
+    def run_pods(pods: int, warm: bool, skip: bool):
+        def make_workers():
+            return [
+                PodWorker(
+                    PodCtx(r, pods), PARAMS,
+                    warm=warm, skip=skip, block_rows=block_rows,
+                )
+                for r in range(pods)
+            ]
+
+        # compile outside the clock: the fused jit caches are module-level,
+        # so throwaway workers warm them without polluting cost counters
+        for wk in make_workers():
+            wk.step(jnp.asarray(synthetic_image(h, w, seed=99)))
+        workers = make_workers()
+        results: list = [None] * pods
+        t0 = time.perf_counter()
+
+        def drive(r):
+            src = SyntheticStream(frames, h, w, seed=0, hold=hold, n_moving=4)
+            results[r] = list(workers[r].run(src))
+
+        threads = [
+            threading.Thread(target=drive, args=(r,), daemon=True)
+            for r in range(pods)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        merged = list(reassemble(results))
+        dt = time.perf_counter() - t0
+        fe = sum(wk.cost_totals().get("frontend_launches", 0) for wk in workers)
+        return merged, dt, fe
+
+    outs = {}
+    for pods in (1, 2):
+        for warm, skip, tag in ((False, False, "cold"), (True, True, "warmskip")):
+            merged, dt, fe = run_pods(pods, warm, skip)
+            outs[(pods, tag)] = merged
+            row(
+                f"pod_farm_fps_p{pods}_{tag}",
+                dt / frames * 1e6,
+                f"{frames/dt:.2f} fps frontend_launches={fe}/{frames}",
+            )
+    base = outs[(1, "cold")]
+    exact = all(
+        all((a == b).all() for a, b in zip(base, out)) for out in outs.values()
+    )
+    row("pod_farm_bit_exact", 0.0, f"all_configs_vs_1pod_cold={exact}")
+    assert exact, "pod farm configurations diverged"
+
+
 def roofline_table():
     """LM cells summary from the dry-run artifacts (see EXPERIMENTS.md)."""
     d = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
@@ -338,6 +409,7 @@ def main() -> None:
     batched_throughput()
     sharded_throughput()
     stream_fps()
+    pod_farm_fps()
     roofline_table()
     path = write_artifact()
     print(f"# wrote {path}", file=sys.stderr)

@@ -113,6 +113,12 @@ def make_canny(
     while the jnp stage path wraps the stages in shard_map as before —
     either way, one queue of work drains across the whole mesh.
     """
+    if dist.pod_axis is not None:
+        raise ValueError(
+            "make_canny builds ONE detector; a pod-axis Dist describes a "
+            "farm of them — use FarmScheduler(dist=...) or stream/pod.py "
+            "with per-rank Dist.pod_slice"
+        )
     stage_fn = _resolve_stage_fn(backend)
 
     serve_fn = resolve_serving_backend(backend) if bucket_multiple else None

@@ -16,6 +16,7 @@ from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
@@ -31,11 +32,17 @@ class Dist:
       batch_axes: mesh axes the leading batch dim is sharded over.
       space_axis: mesh axis the spatial row axis is sharded over (stencil
         halos cross this axis). None → rows unsharded.
+      pod_axis: mesh axis the streaming farm dispatches FRAMES over — the
+        host-level axis. Unlike batch/space it is never seen by
+        ``shard_map``: each pod rank owns its slice of the devices
+        (``pod_slice``) and runs an independent detector over its slice
+        of the frame stream (see ``stream/pod.py``).
     """
 
     mesh: Mesh | None = None
     batch_axes: tuple[str, ...] = ()
     space_axis: str | None = None
+    pod_axis: str | None = None
 
     @property
     def is_local(self) -> bool:
@@ -52,8 +59,46 @@ class Dist:
             return 1
         return math.prod(self.mesh.shape[a] for a in self.batch_axes)
 
+    def pod_size(self) -> int:
+        """Pod ranks in the streaming farm (1 when there is no pod axis)."""
+        if self.mesh is None or self.pod_axis is None:
+            return 1
+        return self.mesh.shape[self.pod_axis]
+
+    def pod_slice(self, rank: int) -> "Dist":
+        """The per-pod sub-``Dist``: pod ``rank``'s devices, pod axis gone.
+
+        The sub-mesh keeps the batch/space axes over the rank's device
+        slice; axes that collapse to size 1 are dropped, and a fully
+        trivial sub-mesh degrades to LOCAL — so a ``PODx1x1`` farm runs
+        one plain single-device detector per rank while ``2x2x4`` gives
+        every rank its own data×model shard_map detector.
+        """
+        if self.mesh is None or self.pod_axis is None:
+            raise ValueError("pod_slice needs a Dist with a mesh and a pod axis")
+        n = self.pod_size()
+        if not 0 <= rank < n:
+            raise ValueError(f"pod rank {rank} out of range for {n} pods")
+        names = list(self.mesh.axis_names)
+        devs = np.take(self.mesh.devices, rank, axis=names.index(self.pod_axis))
+        rest = tuple(a for a in names if a != self.pod_axis)
+        if devs.size == 1:
+            return Dist()
+        sub = Mesh(devs, rest)
+        batch = tuple(a for a in self.batch_axes if sub.shape.get(a, 1) > 1)
+        space = self.space_axis
+        if space is not None and sub.shape.get(space, 1) == 1:
+            space = None
+        if not batch and space is None:
+            return Dist()
+        return Dist(mesh=sub, batch_axes=batch, space_axis=space)
+
     def sync_axes(self) -> tuple[str, ...]:
-        """Every mesh axis a convergence decision must be agreed over."""
+        """Every mesh axis a convergence decision must be agreed over.
+
+        The pod axis is deliberately absent: pods never rendezvous — each
+        rank's detector converges on its own frames.
+        """
         space = (self.space_axis,) if self.space_axis is not None else ()
         return tuple(self.batch_axes) + space
 

@@ -144,6 +144,7 @@ def assemble_rows(
     grid_axis: int = STRIP_AXIS,
     top_ext=None,
     bot_ext=None,
+    grid_pos: tuple | None = None,
 ):
     """Build the halo-extended tile (..., BH+2·halo, W) inside the kernel.
 
@@ -155,9 +156,17 @@ def assemble_rows(
     local strips read the neighbour SHARD's rows (exchanged via ppermute,
     boundary shards pre-patched with the pad rule), so the stitched global
     stencil is bit-identical to the unsharded one.
+
+    ``grid_pos`` supplies a precomputed ``(i, n_strips)`` pair. Required
+    when the caller sits inside a ``pl.when`` branch: ``pl.program_id``
+    may only be bound at the kernel's top level (inside the branch it
+    would be staged into the cond jaxpr, which has no lowering).
     """
-    i = pl.program_id(grid_axis)
-    n = pl.num_programs(grid_axis)
+    if grid_pos is not None:
+        i, n = grid_pos
+    else:
+        i = pl.program_id(grid_axis)
+        n = pl.num_programs(grid_axis)
     top = prev[..., -halo:, :]
     bot = nxt[..., :halo, :]
     if top_ext is not None:

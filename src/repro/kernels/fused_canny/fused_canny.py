@@ -48,18 +48,22 @@ def _kernel(
     bot_ref,
     hw_ref,
     off_ref,
-    *out_refs,
+    *refs,
     taps: tuple[float, ...],
     radius: int,
     l2_norm: bool,
     low: float,
     high: float,
     emit: str,
+    masked: bool = False,
 ):
     r = radius
     h2 = r + 2
     bt, bh, w = cur_ref.shape
+    # grid position binds at kernel top level only — frontend() may run
+    # inside a pl.when branch, where program_id cannot be staged
     i = pl.program_id(common.STRIP_AXIS)
+    n_strips = pl.num_programs(common.STRIP_AXIS)
     ht = hw_ref[:, 0].reshape(bt, 1, 1)  # per-image true height
     wt = hw_ref[:, 1].reshape(bt, 1, 1)  # per-image true width
     # First GLOBAL row this kernel's array owns: 0 locally; under shard_map
@@ -67,73 +71,111 @@ def _kernel(
     # true sizes keeps working on a shard-local grid.
     row0 = off_ref[0, 0] + i * bh
 
-    # ---- gaussian on the (bt, bh + 2*h2, w) extended tile ----------------
-    # Rows >= ht and cols >= wt are edge clones added by ops.py/the engine,
-    # so the blur of every real pixel already matches the oracle's
-    # edge-replicate semantics. The first/last strips bind the externally
-    # supplied halo slabs (edge-replicated rows locally; the neighbour
-    # shard's rows under shard_map).
-    ext = common.assemble_rows(
-        prev_ref[...],
-        cur_ref[...],
-        nxt_ref[...],
-        h2,
-        "edge",
-        top_ext=top_ref[...],
-        bot_ext=bot_ref[...],
-    )
-    xp = common.pad_cols(ext, r, "edge")
-    tmp = jnp.zeros_like(ext)
-    for t in range(2 * r + 1):
-        tmp = tmp + taps[t] * jax.lax.slice_in_dim(xp, t, t + w, axis=-1)
-    nblur = bh + 4
-    blur = jnp.zeros((bt, nblur, w), jnp.float32)
-    for t in range(2 * r + 1):
-        blur = blur + taps[t] * jax.lax.slice_in_dim(tmp, t, t + nblur, axis=-2)
+    n_out = 2 if emit == "packed" else 1
+    if masked:
+        skip_ref, *rest = refs
+        prev_out_refs, out_refs = rest[:n_out], rest[n_out:]
+    else:
+        out_refs = refs
 
-    # Global row id of each blur row: g = row0 + idx - 2 (idx = local row).
-    grow = jax.lax.broadcasted_iota(jnp.int32, (1, nblur, 1), 1) + row0 - 2
-    gcol = jax.lax.broadcasted_iota(jnp.int32, (1, 1, w), 2)
+    def frontend():
+        # ---- gaussian on the (bt, bh + 2*h2, w) extended tile -------------
+        # Rows >= ht and cols >= wt are edge clones added by ops.py/the
+        # engine, so the blur of every real pixel already matches the
+        # oracle's edge-replicate semantics. The first/last strips bind the
+        # externally supplied halo slabs (edge-replicated rows locally; the
+        # neighbour shard's rows under shard_map).
+        ext = common.assemble_rows(
+            prev_ref[...],
+            cur_ref[...],
+            nxt_ref[...],
+            h2,
+            "edge",
+            top_ext=top_ref[...],
+            bot_ext=bot_ref[...],
+            grid_pos=(i, n_strips),
+        )
+        xp = common.pad_cols(ext, r, "edge")
+        tmp = jnp.zeros_like(ext)
+        for t in range(2 * r + 1):
+            tmp = tmp + taps[t] * jax.lax.slice_in_dim(xp, t, t + w, axis=-1)
+        nblur = bh + 4
+        blur = jnp.zeros((bt, nblur, w), jnp.float32)
+        for t in range(2 * r + 1):
+            blur = blur + taps[t] * jax.lax.slice_in_dim(tmp, t, t + nblur, axis=-2)
 
-    # Border fix 1: the oracle edge-replicates the *blurred* image for
-    # sobel; virtual rows (g < 0 or g >= ht) and cols (>= wt) were instead
-    # blurred from replicated/padded inputs. Overwrite with the first/last
-    # TRUE blur row/col. The last true row may live in this strip at
-    # dynamic per-image local index (ht-1) - row0 + 2 — fetched with one
-    # unrolled dynamic slice per in-block image. Rows first, cols second:
-    # the bottom-right corner then lands on blur[ht-1, wt-1].
-    top_fix = jnp.broadcast_to(blur[..., 2:3, :], blur.shape)
-    last_local = jnp.clip(ht - 1 - row0 + 2, 0, nblur - 1)
-    bot_row = common.select_row(blur, last_local)
-    blur = jnp.where(grow < 0, top_fix, blur)
-    blur = jnp.where(grow >= ht, jnp.broadcast_to(bot_row, blur.shape), blur)
-    right_col = common.select_col(blur, jnp.clip(wt - 1, 0, w - 1))
-    blur = jnp.where(gcol >= wt, jnp.broadcast_to(right_col, blur.shape), blur)
+        # Global row id of each blur row: g = row0 + idx - 2 (idx = local row).
+        grow = jax.lax.broadcasted_iota(jnp.int32, (1, nblur, 1), 1) + row0 - 2
+        gcol = jax.lax.broadcasted_iota(jnp.int32, (1, 1, w), 2)
 
-    # ---- sobel on blur → (bt, bh+2, w) mag/dirs ---------------------------
-    sob_ext = common.pad_cols(blur, 1, "edge")
-    mag, dirs = sobel_math(sob_ext, bh + 2, w, l2_norm)
+        # Border fix 1: the oracle edge-replicates the *blurred* image for
+        # sobel; virtual rows (g < 0 or g >= ht) and cols (>= wt) were
+        # instead blurred from replicated/padded inputs. Overwrite with the
+        # first/last TRUE blur row/col. The last true row may live in this
+        # strip at dynamic per-image local index (ht-1) - row0 + 2 — fetched
+        # with one unrolled dynamic slice per in-block image. Rows first,
+        # cols second: the bottom-right corner then lands on
+        # blur[ht-1, wt-1].
+        top_fix = jnp.broadcast_to(blur[..., 2:3, :], blur.shape)
+        last_local = jnp.clip(ht - 1 - row0 + 2, 0, nblur - 1)
+        bot_row = common.select_row(blur, last_local)
+        blur2 = jnp.where(grow < 0, top_fix, blur)
+        blur2 = jnp.where(grow >= ht, jnp.broadcast_to(bot_row, blur2.shape), blur2)
+        right_col = common.select_col(blur2, jnp.clip(wt - 1, 0, w - 1))
+        blur2 = jnp.where(gcol >= wt, jnp.broadcast_to(right_col, blur2.shape), blur2)
 
-    # Border fix 2: NMS treats out-of-image neighbours as 0 — zero every
-    # magnitude row/col outside [0, ht) × [0, wt). This also guarantees a
-    # zero code map over the padded region (inert under hysteresis).
-    mgrow = jax.lax.broadcasted_iota(jnp.int32, (1, bh + 2, 1), 1) + row0 - 1
-    mag = jnp.where((mgrow < 0) | (mgrow >= ht) | (gcol >= wt), 0.0, mag)
+        # ---- sobel on blur → (bt, bh+2, w) mag/dirs ------------------------
+        sob_ext = common.pad_cols(blur2, 1, "edge")
+        mag, dirs = sobel_math(sob_ext, bh + 2, w, l2_norm)
 
-    # ---- NMS → (bt, bh, w) -------------------------------------------------
-    nms_ext = common.pad_cols(mag, 1, "zero")
-    suppressed = nms_math(nms_ext, dirs[..., 1 : bh + 1, :], bh, w)
+        # Border fix 2: NMS treats out-of-image neighbours as 0 — zero every
+        # magnitude row/col outside [0, ht) × [0, wt). This also guarantees
+        # a zero code map over the padded region (inert under hysteresis).
+        mgrow = jax.lax.broadcasted_iota(jnp.int32, (1, bh + 2, 1), 1) + row0 - 1
+        mag = jnp.where((mgrow < 0) | (mgrow >= ht) | (gcol >= wt), 0.0, mag)
 
-    if emit == "nms":
-        out_refs[0][...] = suppressed
-    elif emit == "code":  # fused double threshold, 1 B/px
-        code = (suppressed >= low).astype(jnp.uint8) + (
-            suppressed >= high
-        ).astype(jnp.uint8)
-        out_refs[0][...] = code
-    else:  # "packed": strong/weak masks bit-packed for hysteresis, 2 bit/px
-        out_refs[0][...] = common.pack_mask(suppressed >= high)
-        out_refs[1][...] = common.pack_mask(suppressed >= low)
+        # ---- NMS → (bt, bh, w) ---------------------------------------------
+        nms_ext = common.pad_cols(mag, 1, "zero")
+        suppressed = nms_math(nms_ext, dirs[..., 1 : bh + 1, :], bh, w)
+
+        if emit == "nms":
+            return (suppressed,)
+        if emit == "code":  # fused double threshold, 1 B/px
+            return (
+                (suppressed >= low).astype(jnp.uint8)
+                + (suppressed >= high).astype(jnp.uint8),
+            )
+        # "packed": strong/weak masks bit-packed for hysteresis, 2 bit/px
+        return (
+            common.pack_mask(suppressed >= high),
+            common.pack_mask(suppressed >= low),
+        )
+
+    if not masked:
+        for ref, val in zip(out_refs, frontend()):
+            ref[...] = val
+        return
+
+    # Strip-mask path: ``skip_ref`` flags per-image STATIC strips — every
+    # input row this strip's stencil reads is bitwise identical to the
+    # previous frame, so the stored previous output IS this frame's output
+    # (the front-end is a pure function of those rows; DESIGN.md §9).
+    # A fully static (image-block, strip) tile skips the stencil math
+    # entirely (`pl.when` predication); a mixed tile computes once and
+    # selects per image.
+    skip = skip_ref[...] != 0  # (bt, 1)
+    all_skip = jnp.all(skip)
+
+    @pl.when(all_skip)
+    def _reuse():
+        for ref, prev in zip(out_refs, prev_out_refs):
+            ref[...] = prev[...]
+
+    @pl.when(~all_skip)
+    def _compute():
+        sk = skip.reshape(bt, 1, 1)
+        for ref, prev, val in zip(out_refs, prev_out_refs, frontend()):
+            ref[...] = jnp.where(sk, prev[...], val)
 
 
 def fused_canny_strips(
@@ -150,6 +192,8 @@ def fused_canny_strips(
     batch_block: int | None = None,
     halos: tuple[jax.Array, jax.Array] | None = None,
     row_offset: jax.Array | None = None,
+    skip_mask: jax.Array | None = None,
+    prev_out: tuple[jax.Array, ...] | None = None,
 ) -> jax.Array:
     """(B, H, W) f32 → NMS magnitudes (f32), threshold code map (uint8),
     or — emit="packed" — the (strong, weak) masks bit-packed 32 px/uint32
@@ -167,9 +211,24 @@ def fused_canny_strips(
     int32 first-global-row scalar (the shard's row offset; 0 locally).
     Defaults reproduce the local path: edge-replicated halo slabs and
     offset 0.
+
+    ``skip_mask`` + ``prev_out`` select the temporal STRIP-MASK path:
+    ``skip_mask`` is (B, n_strips) nonzero where the strip is provably
+    static — every input row its stencil reads (the strip ± the
+    radius+2 halo) is bitwise identical to the previous frame's — and
+    ``prev_out`` carries the previous frame's outputs (same structure as
+    this emit's outputs). Static strips copy ``prev_out`` instead of
+    recomputing (fully-static tiles skip the stencil math via ``pl.when``)
+    — bit-identical by purity of the front-end. Only valid on the local
+    path (``halos``/``row_offset`` unset): the streaming layer keeps
+    temporal state per worker, never per shard.
     """
     if emit not in ("nms", "code", "packed"):
         raise ValueError(emit)
+    if (skip_mask is None) != (prev_out is None):
+        raise ValueError("skip_mask and prev_out come together")
+    if skip_mask is not None and halos is not None:
+        raise ValueError("the strip-mask path is local-only (no halo slabs)")
     if interpret is None:
         interpret = common.default_interpret()
     b, h, w = imgs.shape
@@ -216,6 +275,42 @@ def fused_canny_strips(
         out_specs = common.out_strip_spec(bh, w, bt)
         out_dtype = jnp.float32 if emit == "nms" else jnp.uint8
         out_shape = jax.ShapeDtypeStruct((b, h, w), out_dtype)
+    in_specs = [
+        prev,
+        cur,
+        nxt,
+        common.halo_spec(h2, w, bt),
+        common.halo_spec(h2, w, bt),
+        common.per_image_spec(2, bt),
+        common.offset_spec(bt),
+    ]
+    operands = [
+        imgs,
+        imgs,
+        imgs,
+        halo_top.astype(imgs.dtype),
+        halo_bot.astype(imgs.dtype),
+        true_hw.astype(jnp.int32),
+        row_offset,
+    ]
+    if skip_mask is not None:
+        if skip_mask.shape != (b, n):
+            raise ValueError(f"skip_mask must be {(b, n)}, got {skip_mask.shape}")
+        prev_out = tuple(prev_out) if isinstance(prev_out, (tuple, list)) else (prev_out,)
+        shapes = out_shape if isinstance(out_shape, tuple) else (out_shape,)
+        if len(prev_out) != len(shapes) or any(
+            p.shape != s.shape or p.dtype != s.dtype
+            for p, s in zip(prev_out, shapes)
+        ):
+            raise ValueError(
+                f"prev_out must mirror the {emit!r} outputs "
+                f"{[(s.shape, s.dtype) for s in shapes]}"
+            )
+        in_specs.append(pl.BlockSpec((bt, 1), lambda b_, i_: (b_, i_)))
+        operands.append(skip_mask.astype(jnp.int32))
+        for p, s in zip(prev_out, shapes):
+            in_specs.append(common.out_strip_spec(bh, s.shape[-1], bt))
+            operands.append(p)
     return pl.pallas_call(
         functools.partial(
             _kernel,
@@ -225,26 +320,11 @@ def fused_canny_strips(
             low=low,
             high=high,
             emit=emit,
+            masked=skip_mask is not None,
         ),
         grid=(b // bt, n),
-        in_specs=[
-            prev,
-            cur,
-            nxt,
-            common.halo_spec(h2, w, bt),
-            common.halo_spec(h2, w, bt),
-            common.per_image_spec(2, bt),
-            common.offset_spec(bt),
-        ],
+        in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
-    )(
-        imgs,
-        imgs,
-        imgs,
-        halo_top.astype(imgs.dtype),
-        halo_bot.astype(imgs.dtype),
-        true_hw.astype(jnp.int32),
-        row_offset,
-    )
+    )(*operands)

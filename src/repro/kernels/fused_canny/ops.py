@@ -20,6 +20,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro import compat
@@ -82,6 +83,12 @@ def _run_sharded(imgs, true_hw, radius, block_rows, dist, shard_fn):
     ``StencilCtx.halo_rows`` and the shard's first global row. Returns
     the global result cropped back to the true height.
     """
+    if dist.pod_axis is not None:
+        raise ValueError(
+            "kernels never see the pod axis — frames dispatch over pods in "
+            "the stream layer; build per-rank detectors via Dist.pod_slice "
+            "(stream/pod.py)"
+        )
     b, h, w = imgs.shape
     _check_dist_batch(b, dist)
     h2 = radius + 2
@@ -266,6 +273,113 @@ def fused_canny(
     packed = packed_fixpoint(strong_w, weak_w, bh, interpret)
     edges = common.crop_rows(common.unpack_mask(packed), h)
     return edges if had_batch else edges[0]
+
+
+def static_strip_mask(
+    cur: jax.Array, prev: jax.Array, block_rows: int, halo: int
+) -> jax.Array:
+    """Per-(image, strip) frame-diff mask: (B, Hp, W) current + previous
+    frames → (B, n_strips) bool, True iff EVERY input row the strip's
+    front-end stencil reads — rows [i·bh − halo, (i+1)·bh + halo), clamped
+    to the grid — is bitwise identical between the frames. Exactly those
+    strips may reuse the previous front-end output (purity; DESIGN.md §9).
+    Row ranges are resolved with one cumulative-sum pass, so the mask
+    costs one elementwise compare + O(H) adds per image.
+    """
+    if cur.shape != prev.shape:
+        raise ValueError(f"frame shapes differ: {cur.shape} vs {prev.shape}")
+    b, hp, _ = cur.shape
+    if hp % block_rows:
+        raise ValueError(f"H={hp} not a multiple of block_rows={block_rows}")
+    n = hp // block_rows
+    eq = jnp.all(cur == prev, axis=-1).astype(jnp.int32)  # (B, Hp) row match
+    csum = jnp.concatenate(
+        [jnp.zeros((b, 1), jnp.int32), jnp.cumsum(eq, axis=1)], axis=1
+    )
+    lo = np.maximum(np.arange(n) * block_rows - halo, 0)
+    hi = np.minimum((np.arange(n) + 1) * block_rows + halo, hp)
+    return (csum[:, hi] - csum[:, lo]) == jnp.asarray(hi - lo, jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "sigma", "radius", "low", "high", "l2_norm", "block_rows", "interpret",
+    ),
+)
+def fused_canny_warm_skip(
+    imgs: jax.Array,
+    prev_imgs: jax.Array,
+    prev_strong_w: jax.Array,
+    prev_weak_w: jax.Array,
+    prev_edges_w: jax.Array,
+    have_prev: jax.Array,
+    sigma: float = 1.4,
+    radius: int = 2,
+    low: float = 0.1,
+    high: float = 0.2,
+    l2_norm: bool = True,
+    block_rows: int | None = None,
+    interpret: bool | None = None,
+    true_hw: jax.Array | None = None,
+):
+    """``fused_canny_warm`` + the static-strip FRONT-END skip.
+
+    Carries the previous frame itself alongside the packed state: strips
+    whose stencil input rows are bitwise unchanged (``static_strip_mask``)
+    reuse the previous frame's packed strong/weak words instead of
+    re-running gaussian+sobel+NMS — bit-identical because the front-end
+    is a pure function of those rows. Two savings tiers, both visible in
+    the returned cost:
+
+      * an ALL-static frame skips the front-end pallas launch entirely
+        (``lax.cond`` — the branch never executes), and
+      * a partially-static frame runs one launch where static tiles skip
+        the stencil math (``pl.when``) and copy stored words.
+
+    ``have_prev`` is a device bool scalar gating the whole mechanism so
+    frame 0 (all-zero state) runs fresh through the same compiled program.
+
+    Returns ``(edges, state, cost)`` like ``fused_canny_warm`` but with
+    ``state = (strong_w, weak_w, edges_w, frame)`` (the frame to diff
+    against next step) and ``cost = (launches, dilations,
+    frontend_launches, frontend_strips)`` int32 scalars —
+    ``frontend_strips`` counts recomputed (image, strip) tiles.
+    """
+    imgs = imgs.astype(jnp.float32)
+    b, h, w = imgs.shape
+    if w % 32:
+        raise ValueError(f"fused_canny_warm_skip needs W % 32 == 0, got W={w}")
+    h2 = radius + 2
+    bh = block_rows or common.pick_block_rows(h, min_rows=h2)
+    padded, h = common.pad_rows_to_multiple(imgs, bh)
+    prev_padded, _ = common.pad_rows_to_multiple(prev_imgs.astype(jnp.float32), bh)
+    if true_hw is None:
+        true_hw = jnp.broadcast_to(jnp.asarray([h, w], jnp.int32), (b, 2))
+    static = static_strip_mask(padded, prev_padded, bh, h2) & have_prev
+    n_tiles = static.size
+    n_static = jnp.sum(static.astype(jnp.int32))
+
+    def reuse(_):
+        return prev_strong_w, prev_weak_w, jnp.int32(0)
+
+    def compute(_):
+        s_w, wk_w = fused_canny_strips(
+            padded, sigma, radius, low, high, l2_norm, "packed", bh, interpret,
+            true_hw, skip_mask=static.astype(jnp.int32),
+            prev_out=(prev_strong_w, prev_weak_w),
+        )
+        return s_w, wk_w, jnp.int32(1)
+
+    strong_w, weak_w, fe_launches = lax.cond(
+        n_static == n_tiles, reuse, compute, None
+    )
+    fe_strips = jnp.int32(n_tiles) - n_static
+    seed = warm_seed(strong_w, weak_w, prev_strong_w, prev_weak_w, prev_edges_w)
+    packed, launches, dilations = packed_fixpoint_count(seed, weak_w, bh, interpret)
+    edges = common.crop_rows(common.unpack_mask(packed), h)
+    state = (strong_w, weak_w, packed, padded)
+    return edges, state, (launches, dilations, fe_launches, fe_strips)
 
 
 @functools.partial(

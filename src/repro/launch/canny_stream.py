@@ -35,6 +35,13 @@ def main():
     ap.add_argument("--noise", type=float, default=0.0)
     ap.add_argument("--block-rows", type=int, default=None)
     ap.add_argument("--no-warm", action="store_true")
+    ap.add_argument(
+        "--skip",
+        action="store_true",
+        help="static-strip front-end skip: carry the previous frame and "
+        "reuse its front-end output on provably-static strips "
+        "(bit-exact; saves frontend launches on held/static streams)",
+    )
     ap.add_argument("--engine", action="store_true", help="micro-batch via CannyEngine")
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument(
@@ -47,7 +54,10 @@ def main():
         "--mesh",
         default=None,
         help="DATAxMODEL device mesh (e.g. 2x4): all workers share one "
-        "mesh-aware detector; frames shard over data, rows over model",
+        "mesh-aware detector; frames shard over data, rows over model. "
+        "PODxDATAxMODEL (e.g. 2x2x2) runs the pod farm instead: frames "
+        "dispatch over pod ranks, each with its OWN detector on its "
+        "DATAxMODEL device slice (2x1x1 = two plain warm workers)",
     )
     ap.add_argument("--backend", default=None, help="fused | jnp (default: auto)")
     ap.add_argument("--sigma", type=float, default=1.4)
@@ -67,20 +77,39 @@ def main():
         noise=args.noise,
     )
     dist = dist_from_spec(args.mesh)
+    pods = dist.pod_size() if not dist.is_local else 1
+    if args.skip and args.no_warm:
+        raise SystemExit("--skip needs warm-start (drop --no-warm)")
+    if args.engine and pods > 1:
+        raise SystemExit(
+            "--engine batches frames through one queue and cannot dispatch "
+            "over pods; drop --engine or use a DATAxMODEL mesh"
+        )
     sched = FarmScheduler(
         params,
         n_workers=args.workers,
         warm=not args.no_warm,
+        skip=args.skip,
         queue_depth=args.queue_depth,
         backend=args.backend,
         block_rows=args.block_rows,
         dist=dist,
     )
-    mode = "engine" if args.engine else f"farm x{args.workers}"
+    if args.engine:
+        mode = "engine"
+    elif pods > 1:
+        mode = f"pod-farm x{pods}"
+    else:
+        mode = f"farm x{args.workers}"
     mesh_desc = "" if dist.is_local else f" mesh={args.mesh}"
-    # mesh mode shares one stateless shard_map detector across workers, so
-    # temporal warm-start is off regardless of --no-warm — say so
-    warm_desc = "off" if (args.no_warm or not dist.is_local) else "on"
+    # non-pod mesh mode shares one stateless shard_map detector across
+    # workers, so temporal warm-start is off regardless of --no-warm; pod
+    # mode keeps warm/skip state POD-local (when the per-pod slice is a
+    # plain device) — say which applies
+    stateful = dist.is_local or bool(sched.detectors)
+    warm_desc = "off" if (args.no_warm or not stateful) else "on"
+    if args.skip and stateful:
+        warm_desc += "+skip"
     print(
         f"stream: {args.frames} frames {args.height}x{args.width} hold={args.hold} "
         f"| {mode} warm={warm_desc}{mesh_desc}",
@@ -114,7 +143,8 @@ def main():
         tot = det.cost_totals()
         print(
             f"worker {k}: frames={tot['frames']} sweep_launches={tot['launches']} "
-            f"dilations={tot['dilations']}"
+            f"dilations={tot['dilations']} "
+            f"frontend_launches={tot['frontend_launches']}"
         )
     density = edge_px / max(1, n * args.height * args.width)
     print(f"mean edge density {density:.4f}")

@@ -19,11 +19,15 @@ def make_host_mesh(data: int = 2, model: int = 4):
 
 
 def dist_from_spec(spec: str | None):
-    """``--mesh DATAxMODEL`` CLI flag → a ``Dist`` (the one distribution
-    plane every serving/stream entry point accepts).
+    """``--mesh [POD x] DATA x MODEL`` CLI flag → a ``Dist`` (the one
+    distribution plane every serving/stream entry point accepts).
 
     ``None``/empty → local. ``"2x4"`` → batch over a 2-way ``data`` axis,
     rows over a 4-way ``model`` axis; ``"8x1"``/``"8"`` → data-only.
+    Three components (``"2x2x2"`` = POD×DATA×MODEL) add the streaming
+    farm's pod axis: frames dispatch over ``pod`` ranks, each rank
+    driving its own detector over its DATA×MODEL device slice
+    (``Dist.pod_slice``; ``2x1x1`` = two plain per-host workers).
     Size-1 axes are dropped from the Dist so consensus and halo exchange
     no-op on them. Raises if the host has fewer devices than the mesh.
     """
@@ -34,10 +38,15 @@ def dist_from_spec(spec: str | None):
     parts = [int(p) for p in spec.lower().split("x")]
     if len(parts) == 1:
         parts.append(1)
-    if len(parts) != 2 or any(p < 1 for p in parts):
-        raise ValueError(f"--mesh expects DATAxMODEL (e.g. 2x4), got {spec!r}")
-    data, model = parts
-    n = data * model
+    if len(parts) == 2:
+        parts.insert(0, 1)
+    if len(parts) != 3 or any(p < 1 for p in parts):
+        raise ValueError(
+            f"--mesh expects DATAxMODEL or PODxDATAxMODEL (e.g. 2x4, "
+            f"2x2x2), got {spec!r}"
+        )
+    pod, data, model = parts
+    n = pod * data * model
     have = len(jax.devices())
     if have < n:
         raise ValueError(
@@ -46,6 +55,14 @@ def dist_from_spec(spec: str | None):
         )
     if n == 1:
         return LOCAL
+    if pod > 1:
+        mesh = jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+        return Dist(
+            mesh=mesh,
+            batch_axes=("data",) if data > 1 else (),
+            space_axis="model" if model > 1 else None,
+            pod_axis="pod",
+        )
     mesh = jax.make_mesh((data, model), ("data", "model"))
     return Dist(
         mesh=mesh,

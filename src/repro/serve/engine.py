@@ -129,6 +129,12 @@ class BucketedCanny:
         donate: bool | None = None,
         dist: Dist = LOCAL,
     ):
+        if dist.pod_axis is not None:
+            raise ValueError(
+                "serving drains ONE queue across a mesh; pod ranks own "
+                "separate queues — use the pod farm (stream/pod.py) with "
+                "per-rank Dist.pod_slice detectors"
+            )
         if not dist.is_local and bucket_multiple % 32:
             raise ValueError(
                 f"mesh serving needs bucket_multiple % 32 == 0 (packed "
@@ -276,6 +282,12 @@ class CannyEngine:
         serve_fn = resolve_serving_backend(backend)
         if serve_fn is None:
             raise ValueError(f"backend {backend!r} has no serving (true-size) entry")
+        if dist.pod_axis is not None:
+            raise ValueError(
+                "serving drains ONE queue across a mesh; pod ranks own "
+                "separate queues — use the pod farm (stream/pod.py) with "
+                "per-rank Dist.pod_slice detectors"
+            )
         if not dist.is_local and bucket_multiple % 32:
             raise ValueError(
                 f"mesh serving needs bucket_multiple % 32 == 0 (packed "

@@ -16,6 +16,7 @@ from repro.stream.sources import (
     SyntheticStream,
     write_npy_sequence,
 )
+from repro.stream.pod import PodCtx, PodWorker, pod_workers, reassemble, strided
 from repro.stream.temporal import TemporalCanny
 from repro.stream.scheduler import FarmScheduler, StreamStats, StreamWorker
 
@@ -25,6 +26,11 @@ __all__ = [
     "Prefetcher",
     "SyntheticStream",
     "write_npy_sequence",
+    "PodCtx",
+    "PodWorker",
+    "pod_workers",
+    "reassemble",
+    "strided",
     "TemporalCanny",
     "FarmScheduler",
     "StreamStats",

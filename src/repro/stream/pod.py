@@ -1,0 +1,188 @@
+"""Pod plane — the streaming farm dispatched across hosts.
+
+A *pod* is one detector-owning rank of the streaming farm: a whole host
+(its own JAX process, optionally driving its own data×model mesh) or —
+in-process — a thread owning a slice of the local device mesh via
+``Dist.pod_slice``. Frame→pod assignment is round-robin by GLOBAL
+sequence number, a pure function of ``seq`` (``PodCtx.owns``), so the
+plane needs no coordinator:
+
+  * every rank independently derives its slice of any deterministic
+    frame source (``strided``), and
+  * the merge back to global frame order is a rank-tagged reassembly
+    (``reassemble``): seq ``s`` can only come from rank ``s mod P``, so
+    the merged stream is deterministic and the buffer is O(1). The
+    in-process farm (``core.patterns.farm.Farm``) realizes the same
+    contract with its seq-keyed reorder dict; ``reassemble`` is the
+    multi-process half, merging per-rank result streams produced by
+    separate JAX processes (see ``tests/subproc/pod_farm.py``).
+
+Temporal warm-start/skip state is pod-local by construction: rank r sees
+frames r, r+P, … so its "previous frame" is P frames stale — staleness
+can only cost hysteresis sweeps or front-end recomputes, never bits
+(DESIGN.md §6/§9).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Iterator, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.canny.params import CannyParams
+from repro.core.patterns.dist import LOCAL, Dist
+
+
+@dataclasses.dataclass(frozen=True)
+class PodCtx:
+    """One pod rank's identity in a ``size``-pod farm."""
+
+    rank: int
+    size: int
+
+    def __post_init__(self):
+        if self.size < 1 or not 0 <= self.rank < self.size:
+            raise ValueError(f"bad pod rank/size: {self.rank}/{self.size}")
+
+    def owns(self, seq: int) -> bool:
+        """Round-robin frame→pod map — pure function of the sequence no."""
+        return seq % self.size == self.rank
+
+
+def strided(source: Iterable, pod: PodCtx) -> Iterator[tuple[int, np.ndarray]]:
+    """Pod ``rank``'s slice of a frame stream, tagged with the global seq.
+
+    Every rank runs this over the SAME (deterministic) source and keeps
+    only its frames — no inter-host hand-off of the stream is needed.
+    """
+    for seq, frame in enumerate(source):
+        if pod.owns(seq):
+            yield seq, frame
+
+
+def reassemble(streams: Sequence[Iterable[tuple[int, object]]]) -> Iterator:
+    """Merge P rank-tagged ``(seq, item)`` streams into global seq order.
+
+    ``streams[r]`` must yield pod rank r's results with increasing seq —
+    exactly what ``PodWorker.run`` emits. Because seq ``s`` belongs to
+    rank ``s mod P``, the merge pulls from exactly one stream per step:
+    deterministic emission, O(1) buffering. Raises if any stream carries
+    an unexpected seq or holds items past the global end — the ordering
+    violations the pod-farm harness exists to catch.
+    """
+    its = [iter(s) for s in streams]
+    p = len(its)
+    if p == 0:
+        return
+    seq = 0
+    while True:
+        try:
+            got_seq, item = next(its[seq % p])
+        except StopIteration:
+            break
+        if got_seq != seq:
+            raise RuntimeError(
+                f"pod reassembly: rank {seq % p} produced seq {got_seq}, "
+                f"expected {seq} (out-of-order or missing frame)"
+            )
+        yield item
+        seq += 1
+    # the stream ended at `seq`: every OTHER rank must be exhausted too
+    for r, it in enumerate(its):
+        leftover = next(it, None)
+        if leftover is not None:
+            raise RuntimeError(
+                f"pod reassembly: rank {r} still holds seq {leftover[0]} "
+                f"after global end {seq}"
+            )
+
+
+class PodWorker:
+    """One pod rank's end of the farm: a detector over the rank's slice.
+
+    ``dist`` is the rank's OWN distribution (usually ``Dist.pod_slice``):
+
+      * LOCAL → a stateful ``TemporalCanny`` — temporal warm-start (and
+        the static-strip front-end skip, ``skip=True``) with pod-local
+        state;
+      * non-local → one mesh detector (``make_canny(dist=...)``) running
+        the fused kernels inside shard_map over the rank's sub-mesh —
+        stateless, so it runs cold (exactness is unaffected).
+
+    ``run`` yields rank-tagged ``(seq, edges)`` pairs ready for
+    ``reassemble``; ``step`` is the bare frame→(edges, cost) callable the
+    in-process farm wraps in a ``StreamWorker`` thread.
+    """
+
+    def __init__(
+        self,
+        pod: PodCtx,
+        params: CannyParams = CannyParams(),
+        dist: Dist = LOCAL,
+        warm: bool = True,
+        skip: bool = False,
+        backend: str | None = None,
+        block_rows: int | None = None,
+    ):
+        if dist.pod_axis is not None:
+            raise ValueError(
+                "PodWorker takes the rank's OWN dist (Dist.pod_slice), "
+                "not the pod-axis farm dist"
+            )
+        self.pod = pod
+        self.temporal = None
+        if dist.is_local:
+            from repro.stream.temporal import TemporalCanny
+
+            self.temporal = TemporalCanny(
+                params, warm=warm, skip=skip, backend=backend, block_rows=block_rows
+            )
+            self.step = self.temporal.step
+        else:
+            from repro.core.canny.pipeline import make_canny
+
+            det = make_canny(params, dist, backend=backend or "fused")
+            self.step = lambda x: (det(x), None)
+
+    def run(self, source: Iterable[np.ndarray]) -> Iterator[tuple[int, np.ndarray]]:
+        """Process this rank's strided slice; yield ``(seq, uint8 edges)``."""
+        for seq, frame in strided(source, self.pod):
+            edges, _ = self.step(jnp.asarray(frame, jnp.float32))
+            yield seq, np.asarray(edges)
+
+    def cost_totals(self) -> dict[str, int]:
+        """Pod-local cumulative detector cost (zeros for mesh detectors)."""
+        if self.temporal is None:
+            return {}
+        return self.temporal.cost_totals()
+
+
+def pod_workers(
+    dist: Dist,
+    params: CannyParams = CannyParams(),
+    warm: bool = True,
+    skip: bool = False,
+    backend: str | None = None,
+    block_rows: int | None = None,
+) -> list[PodWorker]:
+    """One ``PodWorker`` per rank of a pod-axis ``Dist`` — each over its
+    own ``pod_slice`` sub-mesh. The in-process pod farm hands these to
+    ``Farm`` (threads stand in for hosts); the subprocess harness runs
+    ONE of them per real process."""
+    p = dist.pod_size()
+    if p < 2:
+        raise ValueError("pod_workers needs a Dist with a pod axis of size >= 2")
+    return [
+        PodWorker(
+            PodCtx(r, p),
+            params,
+            dist.pod_slice(r),
+            warm=warm,
+            skip=skip,
+            backend=backend,
+            block_rows=block_rows,
+        )
+        for r in range(p)
+    ]

@@ -47,6 +47,11 @@ class StreamStats:
     wall_s: float = 0.0
     launches: int = 0  # hysteresis sweep launches (see packed_fixpoint_count)
     dilations: int = 0  # productive in-VMEM dilation sweeps
+    # front-end (gauss+sobel+NMS) cost: launches skipped entirely on
+    # all-static frames, strips recomputed otherwise (skip mode only;
+    # without skip every frame is 1 launch and strips go unreported)
+    frontend_launches: int = 0
+    frontend_strips: int = 0
     prep_ms: collections.deque = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=4096)
     )
@@ -71,10 +76,18 @@ class StreamStats:
         with self._lock:
             self.compute_ms.append(ms)
 
-    def record_cost(self, launches: int, dilations: int) -> None:
+    def record_cost(
+        self,
+        launches: int,
+        dilations: int,
+        frontend_launches: int = 1,
+        frontend_strips: int = 0,
+    ) -> None:
         with self._lock:
             self.launches += launches
             self.dilations += dilations
+            self.frontend_launches += frontend_launches
+            self.frontend_strips += frontend_strips
 
     def record_batch_size(self, size: int) -> None:
         with self._lock:
@@ -99,7 +112,8 @@ class StreamStats:
             f"compute_p50={percentile(self.compute_ms, 0.5):.1f}ms "
             f"compute_p95={percentile(self.compute_ms, 0.95):.1f}ms "
             f"queue_depth~{depth:.1f} "
-            f"hysteresis: launches={self.launches} dilations={self.dilations}"
+            f"hysteresis: launches={self.launches} dilations={self.dilations} "
+            f"frontend: launches={self.frontend_launches}"
         )
         if self.batch_sizes:
             line += f" micro_batch~{self.mean_batch_size():.1f}"
@@ -142,7 +156,7 @@ class StreamWorker:
             out = np.asarray(edges)  # blocks until the device result lands
             self.stats.record_compute((time.perf_counter() - t1) * 1e3)
             if cost is not None:
-                self.stats.record_cost(int(cost[0]), int(cost[1]))
+                self.stats.record_cost(*(int(c) for c in cost))
             yield out
 
 
@@ -155,6 +169,15 @@ class FarmScheduler:
     whole mesh — the "one queue drains across devices" configuration.
     Temporal warm-start state stays per-worker-local, so the shared-
     detector mesh path runs cold (exactness is unaffected).
+
+    A ``dist`` with a POD axis selects the pod-farm mode instead: one
+    worker per pod rank, each owning its OWN detector over its
+    ``Dist.pod_slice`` sub-mesh (a stateful warm/skip ``TemporalCanny``
+    when the slice is trivial). Frames dispatch round-robin over the
+    ranks — the same seq→rank map the multi-host harness uses — and the
+    farm's seq-keyed reorder buffer IS the rank-tagged reassembly, so
+    emission stays globally in order and bit-identical to one host
+    (``stream/pod.py``, pinned by ``tests/subproc/pod_farm.py``).
     """
 
     def __init__(
@@ -162,6 +185,7 @@ class FarmScheduler:
         params: CannyParams = CannyParams(),
         n_workers: int | None = None,
         warm: bool = True,
+        skip: bool = False,
         queue_depth: int = 2,
         backend: str | None = None,
         block_rows: int | None = None,
@@ -172,6 +196,29 @@ class FarmScheduler:
         devices = list(devices) if devices is not None else jax.local_devices()
         if n_workers is None:
             n_workers = max(2, len(devices))
+        self.params = params
+        self.warm = warm
+        self.dist = dist
+        self.stats = StreamStats()
+        self.detectors: list = []
+        self.pods: list = []
+        if detector is None and dist is not None and dist.pod_size() > 1:
+            # pod farm: worker k IS pod rank k (Farm's round-robin gives
+            # it frames k, k+P, … — exactly PodCtx(k, P).owns). The worker
+            # count is therefore the POD count and placement comes from
+            # each rank's mesh slice: n_workers/devices do not apply here
+            # (callers see the real count via the `pod-farm xP` banner and
+            # `farm.workers`).
+            from repro.stream.pod import pod_workers
+
+            self.pods = pod_workers(
+                dist, params, warm=warm, skip=skip,
+                backend=backend, block_rows=block_rows,
+            )
+            self.detectors = [w.temporal for w in self.pods if w.temporal]
+            workers = [StreamWorker(w.step, self.stats) for w in self.pods]
+            self.farm = Farm(workers, queue_depth=queue_depth)
+            return
         if detector is None and dist is not None and not dist.is_local:
             from repro.core.canny.pipeline import make_canny
 
@@ -180,18 +227,14 @@ class FarmScheduler:
             # from per-worker host prep
             detector = make_canny(params, dist, backend=backend or "fused")
             devices = [None]  # shard_map owns placement; workers share it
-        self.params = params
-        self.warm = warm
-        self.dist = dist
-        self.stats = StreamStats()
-        self.detectors: list = []
         workers = []
         for k in range(n_workers):
             if detector is not None:
                 step: Callable = detector  # shared: e.g. one BucketedCanny
             else:
                 t = TemporalCanny(
-                    params, warm=warm, backend=backend, block_rows=block_rows
+                    params, warm=warm, skip=skip,
+                    backend=backend, block_rows=block_rows,
                 )
                 self.detectors.append(t)
                 step = t.step
@@ -230,6 +273,11 @@ class FarmScheduler:
         bits are identical either way (wave boundaries only group work).
         ``adaptive=False`` restores the fixed-size waves.
         """
+        if self.dist is not None and self.dist.pod_size() > 1:
+            raise ValueError(
+                "run_engine batches frames through one engine queue — it "
+                "does not dispatch over pods; use run() with a pod dist"
+            )
         if engine is None:
             from repro.core.patterns.dist import LOCAL
             from repro.serve.engine import CannyEngine

@@ -10,6 +10,17 @@ sweeps the fixpoint needs (~1 on static/grow-only frames). ``warm=False``
 turns the threading off for correctness comparisons; the answer must not
 change, only the sweep counts.
 
+``skip=True`` additionally carries the previous FRAME and the previous
+front-end outputs, so provably-static row strips skip the
+gaussian/sobel/NMS front-end entirely (DESIGN.md §9): the fused backend
+runs the strip-mask kernel path (``fused_canny_warm_skip`` — an
+all-static frame skips the front-end launch, a partially-static one
+skips per-strip stencil math), and the jnp backend carries the previous
+frame's NMS magnitudes, reusing them when the whole frame is unchanged.
+Both are exact by purity — identical input rows ⇒ identical front-end
+output — so edges stay bit-identical to cold on every frame; only the
+``frontend_launches``/``frontend_strips`` cost counters move.
+
 Two execution paths behind one API:
 
   * ``backend="fused"`` — the Pallas fused front-end + bit-parallel
@@ -27,6 +38,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from repro.core.canny.hysteresis import (
     double_threshold,
@@ -56,8 +68,10 @@ class TemporalCanny:
     ``step`` maps an (h, w) or (b, h, w) frame to (edges, cost) where
     ``cost = (launches, dilations)`` int32 device scalars (see
     ``packed_fixpoint_count``; the jnp path reports its sweep count as
-    both launches and productive dilations-1). State resets whenever the
-    input shape changes; ``reset()`` forces the next frame cold.
+    both launches and productive dilations-1), extended by
+    ``(frontend_launches, frontend_strips)`` in skip mode. State resets
+    whenever the input shape changes; ``reset()`` forces the next frame
+    cold.
     """
 
     def __init__(
@@ -67,22 +81,35 @@ class TemporalCanny:
         backend: str | None = None,
         block_rows: int | None = None,
         interpret: bool | None = None,
+        skip: bool = False,
     ):
+        if skip and not warm:
+            raise ValueError(
+                "skip=True needs warm=True: the front-end skip reuses the "
+                "threaded per-frame state"
+            )
         self.params = params
         self.warm = warm
+        self.skip = skip
         self.backend = _resolve_backend(backend)
         self.block_rows = block_rows
         self.interpret = interpret
         self._shape: tuple[int, int, int] | None = None
         self._state = None
+        self._prev_frame = None  # skip mode: previous (padded) frame
+        self._prev_nms = None  # jnp skip mode: previous NMS magnitudes
+        self._have_prev = False
         self._cost_log: list = []  # device scalars; folded lazily so the
-        self._cost_done = [0, 0, 0]  # hot loop never blocks on a sync
+        self._cost_done = [0, 0, 0, 0, 0]  # hot loop never blocks on a sync
         if self.backend == "jnp":
             self._jnp_step = self._make_jnp_step()
 
     # -- state plane ---------------------------------------------------------
     def reset(self) -> None:
         self._state = None
+        self._prev_frame = None
+        self._prev_nms = None
+        self._have_prev = False
 
     def _zero_state(self, b: int, h: int, wp: int, bh: int):
         hp = -(-h // bh) * bh
@@ -97,17 +124,44 @@ class TemporalCanny:
 
         params, ctx = self.params, StencilCtx(None, "edge")
 
-        @jax.jit
-        def step(imgs, prev_strong, prev_weak, prev_edges):
+        def frontend(imgs):
             blur = gaussian_stage(imgs, ctx, params)
             mag, dirs = sobel_stage(blur, ctx, params)
-            sup = nms_stage(mag, dirs, ctx)
-            strong, weak = double_threshold(sup, params)
-            seed = warm_seed(strong, weak, prev_strong, prev_weak, prev_edges)
-            edges, n = hysteresis_fixpoint_count(strong, weak, ctx, seed=seed)
-            return edges, (strong, weak, edges.astype(bool)), (n, n - 1)
+            return nms_stage(mag, dirs, ctx)
 
-        return step
+        if not self.skip:
+
+            @jax.jit
+            def step(imgs, prev_strong, prev_weak, prev_edges):
+                sup = frontend(imgs)
+                strong, weak = double_threshold(sup, params)
+                seed = warm_seed(strong, weak, prev_strong, prev_weak, prev_edges)
+                edges, n = hysteresis_fixpoint_count(strong, weak, ctx, seed=seed)
+                return edges, (strong, weak, edges.astype(bool)), (n, n - 1)
+
+            return step
+
+        # Skip mode: the previous frame's NMS magnitudes ride along. The
+        # jnp stages have no strip structure, so the skip decision is
+        # whole-frame: an unchanged frame reuses prev_nms inside lax.cond
+        # (the front-end never executes — 0 launches) and everything
+        # downstream is bit-identical by purity.
+        @jax.jit
+        def step_skip(imgs, prev_frame, prev_nms, prev_s, prev_w, prev_e, have):
+            same = have & jnp.all(imgs == prev_frame)
+            sup, fe = lax.cond(
+                same,
+                lambda _: (prev_nms, jnp.int32(0)),
+                lambda _: (frontend(imgs), jnp.int32(1)),
+                None,
+            )
+            strong, weak = double_threshold(sup, params)
+            seed = warm_seed(strong, weak, prev_s, prev_w, prev_e)
+            edges, n = hysteresis_fixpoint_count(strong, weak, ctx, seed=seed)
+            state = (strong, weak, edges.astype(bool))
+            return edges, sup, state, (n, n - 1, fe, fe)
+
+        return step_skip
 
     # -- frame plane ---------------------------------------------------------
     def step(self, frame: jax.Array):
@@ -126,10 +180,24 @@ class TemporalCanny:
             if self._state is None:
                 z = jnp.zeros((b, h, w), bool)
                 self._state = (z, z, z)
-            edges, state, cost = self._jnp_step(x, *self._state)
+                self._prev_frame = jnp.zeros((b, h, w), jnp.float32)
+                self._prev_nms = jnp.zeros((b, h, w), jnp.float32)
+            if self.skip:
+                edges, nms, state, cost = self._jnp_step(
+                    x, self._prev_frame, self._prev_nms, *self._state,
+                    jnp.asarray(self._have_prev),
+                )
+                if self.warm:
+                    self._prev_frame, self._prev_nms = x, nms
+                    self._have_prev = True
+            else:
+                edges, state, cost = self._jnp_step(x, *self._state)
         else:
             from repro.kernels import common
-            from repro.kernels.fused_canny.ops import fused_canny_warm
+            from repro.kernels.fused_canny.ops import (
+                fused_canny_warm,
+                fused_canny_warm_skip,
+            )
 
             p = self.params
             bh = self.block_rows or common.pick_block_rows(h, min_rows=p.radius + 2)
@@ -139,9 +207,9 @@ class TemporalCanny:
             true_hw = jnp.broadcast_to(jnp.asarray([h, w], jnp.int32), (b, 2))
             if self._state is None:
                 self._state = self._zero_state(b, h, wp, bh)
-            edges, state, cost = fused_canny_warm(
-                x,
-                *self._state,
+                hp = self._state[0].shape[1]
+                self._prev_frame = jnp.zeros((b, hp, wp), jnp.float32)
+            kw = dict(
                 sigma=p.sigma,
                 radius=p.radius,
                 low=p.low,
@@ -151,9 +219,20 @@ class TemporalCanny:
                 interpret=self.interpret,
                 true_hw=true_hw,
             )
+            if self.skip:
+                edges, state, cost = fused_canny_warm_skip(
+                    x, self._prev_frame, *self._state,
+                    jnp.asarray(self._have_prev), **kw,
+                )
+                *state, frame_state = state
+                if self.warm:
+                    self._prev_frame = frame_state
+                    self._have_prev = True
+            else:
+                edges, state, cost = fused_canny_warm(x, *self._state, **kw)
             edges = edges[..., :w]
         if self.warm:
-            self._state = state
+            self._state = tuple(state)
         # warm=False keeps the zero state: every frame runs the cold seed
         self._cost_log.append(cost)
         if len(self._cost_log) >= 1024:  # bound the pending-scalar window
@@ -167,11 +246,25 @@ class TemporalCanny:
     def _fold_costs(self) -> None:
         log, self._cost_log = self._cost_log, []
         self._cost_done[0] += len(log)
-        self._cost_done[1] += sum(int(n) for n, _ in log)
-        self._cost_done[2] += sum(int(d) for _, d in log)
+        for c in log:
+            self._cost_done[1] += int(c[0])
+            self._cost_done[2] += int(c[1])
+            # without skip, every frame is exactly one front-end launch
+            self._cost_done[3] += int(c[2]) if len(c) > 2 else 1
+            self._cost_done[4] += int(c[3]) if len(c) > 3 else 0
 
     def cost_totals(self) -> dict[str, int]:
-        """Cumulative (synced) fixpoint cost over all frames stepped."""
+        """Cumulative (synced) fixpoint + front-end cost over all frames.
+
+        ``frontend_strips`` counts recomputed (image, strip) tiles and is
+        reported by the skip mode only (0 otherwise).
+        """
         self._fold_costs()
-        frames, launches, dilations = self._cost_done
-        return {"frames": frames, "launches": launches, "dilations": dilations}
+        frames, launches, dilations, fe_launches, fe_strips = self._cost_done
+        return {
+            "frames": frames,
+            "launches": launches,
+            "dilations": dilations,
+            "frontend_launches": fe_launches,
+            "frontend_strips": fe_strips,
+        }

@@ -1,0 +1,47 @@
+"""Multi-host pod farm, subprocess-isolated (see tests/subproc/pod_farm.py).
+
+The orchestrator runs under 4 forced virtual devices and itself forks one
+JAX process per pod rank — the closest a single-machine test gets to a
+real multi-host deployment. One run, several pinned markers.
+"""
+
+import functools
+
+from tests.subproc_utils import run_with_devices
+
+
+@functools.lru_cache(maxsize=1)
+def _pod_farm_out() -> str:
+    return run_with_devices("pod_farm.py", n_devices=4, timeout=900)
+
+
+def test_pod_farm_forked_ranks_bit_identical_in_order():
+    """The tentpole property: 2 forked single-host JAX processes, each
+    owning its strided slice with pod-local warm+skip state, reassemble
+    to the exact single-host stream — bits and order."""
+    out = _pod_farm_out()
+    assert "ALL-OK" in out
+    assert "forked 2-rank farm: bit-identical + in-order OK" in out
+
+
+def test_pod_farm_forked_mesh_ranks():
+    """Each forked rank driving its own data x model shard_map detector
+    still reassembles bit-identically."""
+    out = _pod_farm_out()
+    assert "forked 2-rank data x model farm: bit-identical + in-order OK" in out
+
+
+def test_pod_farm_in_process_pod_axis_meshes():
+    """FarmScheduler over pod-axis Dists (pod x data, pod x model, and
+    local per-pod slices) matches the single-host stream."""
+    out = _pod_farm_out()
+    assert "in-process pod farm (pod x data, pod x model): OK" in out
+
+
+def test_pod_farm_warm_skip_saves_frontend_launches():
+    """On a held (static) stream the warm+skip path must launch the
+    front-end on strictly fewer than all frames — per forked rank and in
+    the in-process farm — while every frame stays bit-exact."""
+    out = _pod_farm_out()
+    assert "forked warm+skip savings: OK" in out
+    assert "in-process pod farm warm+skip: OK" in out

@@ -391,3 +391,154 @@ def test_prefetcher_exposes_backlog_depth():
     out = list(src)
     assert len(out) == 3
     assert src.qsize() == 0  # fully drained
+
+
+# ---------------- stream failure paths ---------------------------------------
+def test_farm_worker_error_while_feeder_backpressure_blocked():
+    """A worker dying MID-STREAM, with the feeder parked on a full queue
+    (infinite source), must cancel cleanly: the consumer sees the error
+    promptly and the feeder's put_cancellable unblocks — no deadlock."""
+    import time
+
+    def endless():
+        i = 0
+        while True:
+            yield i
+            i += 1
+
+    def boom(x):
+        if x >= 2:
+            raise RuntimeError("worker died mid-stream")
+        return x
+
+    farm = Farm([boom, boom], queue_depth=1)
+    t0 = time.perf_counter()
+    with pytest.raises(RuntimeError, match="worker died mid-stream"):
+        list(farm.run(endless()))
+    assert time.perf_counter() - t0 < 30.0  # cancelled, not deadlocked
+
+
+def test_farm_consumer_abandons_iteration_cleanly():
+    """Closing the result iterator early (consumer bails) must cancel the
+    feeder and join the workers — the infinite source proves it."""
+
+    def endless():
+        i = 0
+        while True:
+            yield np.float32(i)
+            i += 1
+
+    farm = Farm([lambda x: x, lambda x: x], queue_depth=1)
+    it = farm.run(endless())
+    assert next(it) == 0.0
+    it.close()  # Farm.run's finally: cancel + sentinel + join
+
+
+def test_prefetcher_empty_and_exhausted_sources():
+    from repro.stream import Prefetcher
+
+    assert list(Prefetcher([], depth=2)) == []  # empty source
+
+    one_shot = iter([np.zeros((2, 2), np.float32)])
+    pf = Prefetcher(one_shot, depth=2)
+    assert len(list(pf)) == 1
+    assert list(pf) == []  # exhausted iterator: clean empty replay
+
+    replayable = SyntheticStream(2, 8, 8, seed=1)
+    pf = Prefetcher(replayable, depth=1)
+    assert len(list(pf)) == 2
+    assert len(list(pf)) == 2  # re-iterable sources replay through it
+
+
+def test_run_engine_flush_on_early_consumer_exit():
+    """The consumer breaking out of run_engine mid-stream must unwind the
+    generator (and the Prefetcher feeding it) without deadlock, and a
+    fresh run must still be exact."""
+    from repro.stream import Prefetcher
+
+    frames = SyntheticStream(6, 32, 32, seed=11)
+    sched = FarmScheduler(PARAMS)
+    it = sched.run_engine(Prefetcher(frames, depth=2), max_batch=2)
+    first = next(it)
+    it.close()  # GeneratorExit at the yield point; pending work abandoned
+    assert (first == canny_reference(frames.frame(0), PARAMS)).all()
+
+    got = list(sched.run_engine(Prefetcher(frames, depth=2), max_batch=2))
+    assert len(got) == 6
+    for i, e in enumerate(got):
+        assert (e == canny_reference(frames.frame(i), PARAMS)).all()
+
+
+# ---------------- pod plane (unit level; processes in test_pod_farm) --------
+def test_pod_ctx_round_robin_partition():
+    from repro.stream import PodCtx
+
+    with pytest.raises(ValueError):
+        PodCtx(2, 2)
+    with pytest.raises(ValueError):
+        PodCtx(0, 0)
+    pods = [PodCtx(r, 3) for r in range(3)]
+    for seq in range(12):
+        owners = [p.owns(seq) for p in pods]
+        assert sum(owners) == 1 and owners[seq % 3]
+
+
+def test_strided_slices_partition_the_stream():
+    from repro.stream import PodCtx, strided
+
+    frames = [np.full((2, 2), i, np.float32) for i in range(7)]
+    a = list(strided(frames, PodCtx(0, 2)))
+    b = list(strided(frames, PodCtx(1, 2)))
+    assert [s for s, _ in a] == [0, 2, 4, 6]
+    assert [s for s, _ in b] == [1, 3, 5]
+    assert all((f == frames[s]).all() for s, f in a + b)
+
+
+def test_reassemble_merges_in_global_order():
+    from repro.stream import reassemble
+
+    a = [(0, "f0"), (2, "f2"), (4, "f4")]
+    b = [(1, "f1"), (3, "f3")]
+    assert list(reassemble([a, b])) == ["f0", "f1", "f2", "f3", "f4"]
+    assert list(reassemble([])) == []
+
+
+def test_reassemble_rejects_gaps_and_leftovers():
+    from repro.stream import reassemble
+
+    # rank 1 produced the wrong seq (a dropped frame shifts everything)
+    with pytest.raises(RuntimeError, match="out-of-order or missing"):
+        list(reassemble([[(0, "a")], [(3, "x")]]))
+    # rank 1 holds frames past the global end (rank 0 under-produced)
+    with pytest.raises(RuntimeError, match="still holds"):
+        list(reassemble([[(0, "a")], [(1, "b"), (3, "x")]]))
+
+
+def test_pod_dist_rejected_by_single_detector_layers():
+    """A pod-axis Dist describes a FARM of detectors; every layer that
+    builds exactly one detector/queue must reject it loudly rather than
+    silently replicate work over the pod axis."""
+    import jax as _jax
+
+    from repro.core.canny import make_canny
+    from repro.core.patterns.dist import Dist
+    from repro.serve.engine import CannyEngine
+
+    mesh = _jax.make_mesh((1, 1), ("pod", "data"))
+    pod_dist = Dist(mesh=mesh, batch_axes=("data",), pod_axis="pod")
+    with pytest.raises(ValueError, match="pod"):
+        make_canny(PARAMS, pod_dist, backend="fused")
+    with pytest.raises(ValueError, match="pod"):
+        CannyEngine(PARAMS, bucket_multiple=32, dist=pod_dist)
+
+
+def test_farm_scheduler_skip_matches_cold():
+    frames = list(SyntheticStream(6, 48, 48, seed=13, hold=3))
+    cold = FarmScheduler(PARAMS, n_workers=2, warm=False, block_rows=16)
+    want = list(cold.run(frames))
+    skip = FarmScheduler(PARAMS, n_workers=2, warm=True, skip=True, block_rows=16)
+    got = list(skip.run(frames))
+    assert all((a == b).all() for a, b in zip(want, got))
+    # hold=3 with 2 workers: each worker sees held repeats → must skip
+    assert skip.stats.frontend_launches < len(frames)
+    assert cold.stats.frontend_launches == len(frames)
