@@ -20,6 +20,9 @@ the LM table reads the dry-run artifacts.
                                  pod ranks over the same stream, cold vs
                                  warm+skip (static-strip front-end skip),
                                  rank-tagged reassembly, bit-exact
+  per_stage_parity               backend parity plane: per-stage vs fused
+                                 on identical serving + stream workloads,
+                                 cold vs warm+skip, bit-exact asserted
   roofline_table                 §Roofline summary from experiments/dryrun
 
 Besides the CSV on stdout, results land in ``BENCH_<git rev>.json`` next
@@ -359,6 +362,77 @@ def pod_farm_fps(frames=24, h=128, w=128, hold=6, block_rows=32):
     assert exact, "pod farm configurations diverged"
 
 
+def per_stage_parity(h=256, w=256, b=4, frames=24, hold=6, block_rows=32):
+    """Backend parity plane (PR 5): per-stage vs fused on the SAME
+    serving and streaming workloads, bit-exactness asserted.
+
+    Cold: one bucketed batch-grid launch per backend (per-stage pays 3
+    front-end HBM round-trips to fused's 1 — the paper-faithful vs
+    beyond-paper traffic gap, now measured on identical plumbing).
+    Stream: cold vs warm+skip fps on a held synthetic video per backend —
+    the headline is that the per-stage skip path reports the SAME
+    savings counters as fused (0 front-end launches on held frames).
+    """
+    from repro.stream import SyntheticStream, TemporalCanny
+
+    imgs = synthetic_batch(b, h, w, seed=21)
+    jimgs = jnp.asarray(imgs)
+    outs = {}
+    for backend in ("pallas", "fused"):
+        det = make_canny(PARAMS, backend=backend, bucket_multiple=64)
+        outs[backend] = np.asarray(det(jimgs))  # doubles as the warmup
+        us = _timeit(lambda: np.asarray(det(jimgs)), warmup=0)
+        row(
+            f"per_stage_cold_{backend}_b{b}_{h}px",
+            us,
+            f"{b*h*w/us:.2f} MPx/s",
+        )
+    exact = bool((outs["pallas"] == outs["fused"]).all())
+    exact &= all(
+        (outs["fused"][i] == canny_reference(imgs[i], PARAMS)).all()
+        for i in range(b)
+    )
+    row("per_stage_cold_bit_exact", 0.0, f"pallas_vs_fused_vs_oracle={exact}")
+    assert exact, "per-stage serving diverged from fused/oracle"
+
+    stream_outs = {}
+    fe_counts = {}
+    for backend in ("pallas", "fused"):
+        for warm, skip, tag in ((False, False, "cold"), (True, True, "warmskip")):
+            TemporalCanny(
+                PARAMS, warm=warm, skip=skip, backend=backend,
+                block_rows=block_rows,
+            ).step(jnp.asarray(synthetic_image(h, w, seed=97)))  # compile
+            det = TemporalCanny(
+                PARAMS, warm=warm, skip=skip, backend=backend,
+                block_rows=block_rows,
+            )
+            source = SyntheticStream(frames, h, w, seed=0, hold=hold, n_moving=4)
+            t0 = time.perf_counter()
+            stream_outs[(backend, tag)] = [
+                np.asarray(det(jnp.asarray(f))) for f in source
+            ]
+            dt = time.perf_counter() - t0
+            tot = det.cost_totals()
+            fe_counts[(backend, tag)] = tot["frontend_launches"]
+            row(
+                f"per_stage_stream_{backend}_{tag}",
+                dt / frames * 1e6,
+                f"{frames/dt:.2f} fps frontend_launches={tot['frontend_launches']} "
+                f"hysteresis_launches={tot['launches']}",
+            )
+    base = stream_outs[("fused", "cold")]
+    exact = all(
+        all((a == c).all() for a, c in zip(base, out))
+        for out in stream_outs.values()
+    )
+    row("per_stage_stream_bit_exact", 0.0, f"all_configs={exact}")
+    assert exact, "per-stage stream configurations diverged"
+    # held stream: skip must save front-end launches on BOTH backends
+    assert fe_counts[("fused", "warmskip")] < frames
+    assert fe_counts[("pallas", "warmskip")] < 3 * frames
+
+
 def roofline_table():
     """LM cells summary from the dry-run artifacts (see EXPERIMENTS.md)."""
     d = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
@@ -410,6 +484,7 @@ def main() -> None:
     sharded_throughput()
     stream_fps()
     pod_farm_fps()
+    per_stage_parity()
     roofline_table()
     path = write_artifact()
     print(f"# wrote {path}", file=sys.stderr)

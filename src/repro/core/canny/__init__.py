@@ -8,6 +8,14 @@ Public API:
 """
 
 from repro.core.canny.params import CannyParams
+from repro.core.canny.backends import (
+    BackendSpec,
+    UnsupportedFeature,
+    backend_spec,
+    backend_specs,
+    conformance_cells,
+    register_backend_spec,
+)
 from repro.core.canny.reference import (
     canny_reference,
     gaussian_reference,
@@ -28,6 +36,12 @@ from repro.core.canny.hysteresis import (
 
 __all__ = [
     "CannyParams",
+    "BackendSpec",
+    "UnsupportedFeature",
+    "backend_spec",
+    "backend_specs",
+    "conformance_cells",
+    "register_backend_spec",
     "canny",
     "make_canny",
     "canny_local_stages",

@@ -8,7 +8,12 @@
   backend="fused"  — single fused Pallas kernel for gauss+sobel+nms
                      (beyond-paper: one HBM round-trip instead of three)
 
-Sharded mode wraps the *whole* pipeline in one ``shard_map`` — images are
+Backends resolve through the ``BackendSpec`` registry
+(``core/canny/backends.py``): capabilities are validated at construction
+time, so an unsupported backend × feature combination raises
+``UnsupportedFeature`` before any work is queued. Sharded mode either
+wraps the jnp stages in one ``shard_map`` (``stage_dist`` backends) or
+routes through the backend's mesh-aware serving entry — images are
 batch-sharded over ``dist.batch_axes`` and row-sharded over
 ``dist.space_axis``; halos cross shards via ppermute inside the stages.
 """
@@ -22,50 +27,19 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import compat
+from repro.core.canny.backends import (
+    BackendSpec,
+    UnsupportedFeature,
+    backend_spec,
+    register_backend_spec,
+    _SPECS,
+)
 from repro.core.canny.params import CannyParams
 from repro.core.canny.gaussian import gaussian_stage
 from repro.core.canny.sobel import sobel_stage
 from repro.core.canny.nms import nms_stage
 from repro.core.canny.hysteresis import hysteresis_stage
 from repro.core.patterns.dist import Dist, StencilCtx
-
-# kernels/ registers callables here at import time (avoids a hard dep)
-_BACKENDS: dict[str, Callable] = {}
-
-# serving-capable backends: fn(imgs (b,h,w) f32, true_hw (b,2) i32, params,
-# interpret, dist) → uint8 edges. True-size-aware, so the serving layer can
-# pad requests to shape buckets and stay bit-exact (see serve/engine.py);
-# mesh-aware through ``dist`` (a non-local Dist runs the same kernels
-# inside shard_map — one distribution plane for every entry point).
-_SERVING_BACKENDS: dict[str, Callable] = {}
-
-
-def register_backend(name: str, fn: Callable, override: bool = False) -> None:
-    if name in _BACKENDS and not override:
-        raise ValueError(
-            f"canny backend {name!r} is already registered; pass "
-            "override=True to replace it deliberately"
-        )
-    _BACKENDS[name] = fn
-
-
-def register_serving_backend(name: str, fn: Callable, override: bool = False) -> None:
-    if name in _SERVING_BACKENDS and not override:
-        raise ValueError(
-            f"serving backend {name!r} is already registered; pass "
-            "override=True to replace it deliberately"
-        )
-    _SERVING_BACKENDS[name] = fn
-
-
-def resolve_serving_backend(name: str) -> Callable | None:
-    """The true-size-aware entry for ``name``, or None if it has none."""
-    if name not in _SERVING_BACKENDS:
-        try:
-            import repro.kernels.canny_backends  # noqa: F401  (registers)
-        except ImportError:  # pragma: no cover
-            return None
-    return _SERVING_BACKENDS.get(name)
 
 
 def canny_local_stages(
@@ -78,19 +52,83 @@ def canny_local_stages(
     return hysteresis_stage(nms, params, ctx, local_sweeps=local_sweeps)
 
 
-def _resolve_stage_fn(backend: str) -> Callable:
-    if backend == "jnp":
-        return canny_local_stages
-    if backend in _BACKENDS:
-        return _BACKENDS[backend]
-    # lazily import kernels so the core has no hard Pallas dependency
+def _jnp_temporal(params, **kw):
+    # stream/ imports core at module level; core reaches back lazily
+    from repro.stream.temporal import JnpTemporal
+
+    return JnpTemporal(params, **kw)
+
+
+def _jnp_serving(*args, **kw):
+    from repro.core.canny.serving import jnp_serving
+
+    return jnp_serving(*args, **kw)
+
+
+# The portable backend registers here, capabilities complete: its stage
+# plane composes under shard_map directly (mesh-divisible shapes), its
+# serving entry handles arbitrary bucketed shapes on any mesh
+# (core/canny/serving.py), and its temporal plane carries warm state +
+# the whole-frame NMS-carry skip (stream/temporal.py).
+register_backend_spec(
+    BackendSpec(
+        name="jnp",
+        stage_fn=canny_local_stages,
+        serving_fn=_jnp_serving,
+        temporal_fn=_jnp_temporal,
+        dist=True,
+        warm=True,
+        skip=True,
+        stage_dist=True,
+        skip_granularity="frame",
+    )
+)
+
+
+# -- legacy plane-function registration (kept: kernels + tests use it) -------
+def register_backend(name: str, fn: Callable, override: bool = False) -> None:
+    """Attach a stage-plane function. Creates a capability-less spec when
+    ``name`` is new (kernels/canny_backends.py upgrades its own specs)."""
+    spec = _SPECS.get(name)
+    if spec is None:
+        register_backend_spec(BackendSpec(name=name, stage_fn=fn))
+        return
+    if spec.stage_fn is not None and not override:
+        raise ValueError(
+            f"canny backend {name!r} is already registered; pass "
+            "override=True to replace it deliberately"
+        )
+    spec.stage_fn = fn
+
+
+def register_serving_backend(name: str, fn: Callable, override: bool = False) -> None:
+    spec = _SPECS.get(name)
+    if spec is None:
+        register_backend_spec(BackendSpec(name=name, serving_fn=fn))
+        return
+    if spec.serving_fn is not None and not override:
+        raise ValueError(
+            f"serving backend {name!r} is already registered; pass "
+            "override=True to replace it deliberately"
+        )
+    spec.serving_fn = fn
+
+
+def resolve_serving_backend(name: str) -> Callable | None:
+    """The true-size-aware entry for ``name``, or None if it has none."""
     try:
-        import repro.kernels.canny_backends  # noqa: F401  (registers)
-    except ImportError as exc:  # pragma: no cover
-        raise ValueError(f"backend {backend!r} unavailable: {exc}") from exc
-    if backend not in _BACKENDS:
-        raise ValueError(f"unknown canny backend: {backend!r}")
-    return _BACKENDS[backend]
+        return backend_spec(name).serving_fn
+    except ValueError:
+        return None
+
+
+def _resolve_stage_fn(backend: str) -> Callable:
+    spec = backend_spec(backend)
+    if spec.stage_fn is None:
+        raise UnsupportedFeature(
+            f"backend {backend!r} has no stage-plane entry"
+        )
+    return spec.stage_fn
 
 
 def make_canny(
@@ -102,16 +140,19 @@ def make_canny(
 ) -> Callable[[jax.Array], jax.Array]:
     """Build a jitted canny detector for images shaped (h, w) or (b, h, w).
 
-    Serving-capable backends (``fused``) return a shape-bucketed runner:
-    any (b, h, w) is padded to a bucket and cropped back (bit-exact via
-    per-image true sizes), so new shapes inside a bucket never recompile.
-    Pass ``bucket_multiple=None`` to force exact-shape compilation.
+    Serving-capable backends (``fused``, ``pallas``) return a shape-
+    bucketed runner: any (b, h, w) is padded to a bucket and cropped back
+    (bit-exact via per-image true sizes), so new shapes inside a bucket
+    never recompile. Pass ``bucket_multiple=None`` to force exact-shape
+    compilation.
 
     ``dist`` is the one distribution plane: a non-local Dist makes a
     serving-capable backend run its batch-grid kernels inside shard_map
     (bucket batches shard over the data axes, rows over the space axis),
     while the jnp stage path wraps the stages in shard_map as before —
-    either way, one queue of work drains across the whole mesh.
+    either way, one queue of work drains across the whole mesh. A backend
+    whose spec does not claim ``dist`` raises ``UnsupportedFeature`` here,
+    at construction.
     """
     if dist.pod_axis is not None:
         raise ValueError(
@@ -119,14 +160,22 @@ def make_canny(
             "farm of them — use FarmScheduler(dist=...) or stream/pod.py "
             "with per-rank Dist.pod_slice"
         )
-    stage_fn = _resolve_stage_fn(backend)
+    spec = backend_spec(backend)
+    if not dist.is_local:
+        spec.require(dist=True)
 
-    serve_fn = resolve_serving_backend(backend) if bucket_multiple else None
+    serve_fn = spec.serving_fn if bucket_multiple else None
+    if serve_fn is None and not dist.is_local and not spec.stage_dist:
+        raise UnsupportedFeature(
+            f"backend {backend!r} distributes through its serving entry "
+            "only; pass a bucket_multiple (its stage plane is shard-local)"
+        )
     if serve_fn is not None:
         from repro.serve.engine import BucketedCanny
 
         return BucketedCanny(serve_fn, params, bucket_multiple, dist=dist)
 
+    stage_fn = _resolve_stage_fn(backend)
     if dist.is_local:
         ctx = StencilCtx(None, "edge")
 
@@ -142,10 +191,10 @@ def make_canny(
 
     def build(ndim: int) -> Callable:
         if ndim == 2:
-            spec = P(dist.space_axis, None)
+            spec_ = P(dist.space_axis, None)
         elif ndim == 3:
             batch = dist.batch_axes if dist.batch_axes else None
-            spec = P(batch, dist.space_axis, None)
+            spec_ = P(batch, dist.space_axis, None)
         else:
             raise ValueError(f"expected (h,w) or (b,h,w); got ndim={ndim}")
 
@@ -154,11 +203,11 @@ def make_canny(
             if stage_fn is canny_local_stages
             else stage_fn(x, params, ctx),
             mesh=mesh,
-            in_specs=spec,
-            out_specs=spec,
+            in_specs=spec_,
+            out_specs=spec_,
             check_vma=False,
         )
-        sharding = NamedSharding(mesh, spec)
+        sharding = NamedSharding(mesh, spec_)
         return jax.jit(
             lambda x: local(x.astype(jnp.float32)),
             in_shardings=sharding,

@@ -23,24 +23,64 @@ _SX = ((-1.0, 0.0, 1.0), (-2.0, 0.0, 2.0), (-1.0, 0.0, 1.0))
 _SY = ((-1.0, -2.0, -1.0), (0.0, 0.0, 0.0), (1.0, 2.0, 1.0))
 
 
-def sobel_stage(x: jax.Array, ctx: StencilCtx, params: CannyParams):
-    """x: (..., h, w) f32 → (magnitude f32, direction-bin uint8)."""
+def fold_true_border(win: dict, clamp) -> dict:
+    """Anchor a 3×3 window dict ``{(dy, dx): array}`` at per-image TRUE
+    sizes: reads past the true height/width fold to the centre row/col —
+    the oracle's one-step edge clamp on the blurred image, which for a
+    3×3 stencil never reaches further than the centre. Row fixes apply
+    before column fixes so the bottom-right corner folds to the
+    centre-centre window. ``clamp = (grow, ht, gcol, wt)``: global
+    row/col ids of the output rows/cols (broadcastable iotas) + the
+    per-image true heights/widths. Shared by the jnp serving stage and
+    the Pallas sobel kernel (one clamp rule, two executors)."""
+    grow, ht, gcol, wt = clamp
+    below = grow + 1 >= ht  # the dy=+1 read would cross the true bottom
+    for dx in range(3):
+        win[(2, dx)] = jnp.where(below, win[(1, dx)], win[(2, dx)])
+    right = gcol + 1 >= wt  # the dx=+1 read would cross the true right
+    for dy in range(3):
+        win[(dy, 2)] = jnp.where(right, win[(dy, 1)], win[(dy, 2)])
+    return win
+
+
+def zero_outside_true(mag: jax.Array, clamp) -> jax.Array:
+    """Zero magnitudes outside the true region: NMS's zero-neighbour rule
+    at the true border, and an inert padded code map downstream."""
+    grow, ht, gcol, wt = clamp
+    return jnp.where((grow >= ht) | (gcol >= wt), 0.0, mag)
+
+
+def sobel_stage(x: jax.Array, ctx: StencilCtx, params: CannyParams, clamp=None):
+    """x: (..., h, w) f32 → (magnitude f32, direction-bin uint8).
+
+    ``clamp = (grow, ht, gcol, wt)`` anchors the stencil at per-image
+    TRUE sizes for the bucketed serving path (``fold_true_border`` +
+    ``zero_outside_true`` — the same construction the Pallas sobel kernel
+    runs). ``clamp=None`` is the plain whole-array stage, bit-identical
+    to before (the accumulation order of the non-zero taps is unchanged).
+    """
     x = x.astype(jnp.float32)
     h, w = x.shape[-2], x.shape[-1]
     p = ctx.pad_rows(x, 1, pad_mode="edge")
     p = ctx.pad_cols(p, 1, pad_mode="edge")
 
+    win = {}
+    for dy in range(3):
+        for dx in range(3):
+            win[(dy, dx)] = jax.lax.slice_in_dim(
+                jax.lax.slice_in_dim(p, dy, dy + h, axis=-2), dx, dx + w, axis=-1
+            )
+    if clamp is not None:
+        win = fold_true_border(win, clamp)
+
     gx = jnp.zeros_like(x)
     gy = jnp.zeros_like(x)
     for dy in range(3):
         for dx in range(3):
-            win = jax.lax.slice_in_dim(
-                jax.lax.slice_in_dim(p, dy, dy + h, axis=-2), dx, dx + w, axis=-1
-            )
             if _SX[dy][dx] != 0.0:
-                gx = gx + _SX[dy][dx] * win
+                gx = gx + _SX[dy][dx] * win[(dy, dx)]
             if _SY[dy][dx] != 0.0:
-                gy = gy + _SY[dy][dx] * win
+                gy = gy + _SY[dy][dx] * win[(dy, dx)]
 
     if params.l2_norm:
         mag = jnp.sqrt(gx * gx + gy * gy)
@@ -52,4 +92,6 @@ def sobel_stage(x: jax.Array, ctx: StencilCtx, params: CannyParams):
     vert = ay >= _T2 * ax
     same_sign = (gx * gy) > 0
     dirs = jnp.where(horiz, 0, jnp.where(vert, 2, jnp.where(same_sign, 1, 3)))
+    if clamp is not None:
+        mag = zero_outside_true(mag, clamp)
     return mag.astype(jnp.float32), dirs.astype(jnp.uint8)

@@ -1,15 +1,19 @@
 """Register the Pallas execution backends with the core Canny pipeline.
 
 backend="pallas" — per-stage kernels (paper-faithful stage structure,
-                   each stage one HBM round-trip)
+                   each stage one HBM round-trip; kernels/staged.py)
 backend="fused"  — single-pass front-end + hysteresis kernel
                    (beyond-paper; ~5× less HBM traffic)
 
-The fused backend is mesh-aware through its SERVING entry: a non-local
-``Dist`` runs the same batch-grid kernels inside ``shard_map`` (batch
-over the data axes, rows over the space axis via ppermute halo exchange
-— see DESIGN.md §8). The per-stage "pallas" backend stays shard-local;
-row-sharded per-stage execution distributes with the jnp stages.
+Both register complete ``BackendSpec``s — dist, warm, and skip on every
+stage path: a non-local ``Dist`` runs the same batch-grid kernels inside
+``shard_map`` (batch over the data axes, rows over the space axis via
+ppermute halo exchange — per-stage halos exchanged BETWEEN launches on
+the staged path; DESIGN.md §8/§10), and the temporal plane threads the
+packed warm-seed fixpoint plus the static-strip front-end skip through
+one shared ``PackedTemporal`` state machine. The two backends differ
+only in their front-end step functions; everything else — capabilities
+included — is declared, not special-cased.
 """
 
 from __future__ import annotations
@@ -17,14 +21,25 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.canny.backends import BackendSpec, register_backend_spec
 from repro.core.canny.params import CannyParams
-from repro.core.canny.pipeline import register_backend, register_serving_backend
 from repro.core.patterns.dist import LOCAL, Dist, StencilCtx
+from repro.kernels import common
 from repro.kernels.gaussian.ops import gaussian_blur
 from repro.kernels.sobel.ops import sobel
 from repro.kernels.nms.ops import nms
 from repro.kernels.hysteresis.ops import hysteresis_from_masks
-from repro.kernels.fused_canny.ops import fused_canny, fused_frontend
+from repro.kernels.fused_canny.ops import (
+    fused_canny,
+    fused_canny_warm,
+    fused_canny_warm_skip,
+    fused_frontend,
+)
+from repro.kernels.staged import (
+    staged_canny,
+    staged_canny_warm,
+    staged_canny_warm_skip,
+)
 
 
 def _require_local(ctx: StencilCtx, name: str) -> None:
@@ -58,6 +73,16 @@ def _fused(img: jax.Array, params: CannyParams, ctx: StencilCtx, **_):
     return hysteresis_from_masks(code >= 2, code >= 1)
 
 
+def _params_kw(params: CannyParams) -> dict:
+    return dict(
+        sigma=params.sigma,
+        radius=params.radius,
+        low=params.low,
+        high=params.high,
+        l2_norm=params.l2_norm,
+    )
+
+
 def _fused_serving(
     imgs: jax.Array,
     true_hw: jax.Array,
@@ -71,17 +96,177 @@ def _fused_serving(
     inside shard_map, bit-identical to the local path."""
     return fused_canny(
         imgs.astype(jnp.float32),
-        sigma=params.sigma,
-        radius=params.radius,
-        low=params.low,
-        high=params.high,
-        l2_norm=params.l2_norm,
         interpret=interpret,
         true_hw=true_hw,
         dist=dist,
+        **_params_kw(params),
     )
 
 
-register_backend("pallas", _staged)
-register_backend("fused", _fused)
-register_serving_backend("fused", _fused_serving)
+def _staged_serving(
+    imgs: jax.Array,
+    true_hw: jax.Array,
+    params: CannyParams,
+    interpret: bool | None = None,
+    dist: Dist = LOCAL,
+) -> jax.Array:
+    """The SAME serving contract on the per-stage path: true-size border
+    anchoring lives in the sobel kernel, so bucket padding stays
+    bit-exact; a non-local ``dist`` runs all four stages inside one
+    shard_map with per-stage halo exchanges."""
+    return staged_canny(
+        imgs.astype(jnp.float32),
+        interpret=interpret,
+        true_hw=true_hw,
+        dist=dist,
+        **_params_kw(params),
+    )
+
+
+# -- temporal plane: one state machine, per-backend step fns -----------------
+def _fused_warm_step(x, strong_w, weak_w, edges_w, **kw):
+    return fused_canny_warm(x, strong_w, weak_w, edges_w, **kw)
+
+
+def _fused_warm_skip_step(x, prev_frame, fe, strong_w, weak_w, edges_w, have, **kw):
+    # the fused front-end's reusable output IS the packed word state, so
+    # its extra front-end state tuple is empty
+    del fe
+    edges, (s_w, wk_w, packed, frame), cost = fused_canny_warm_skip(
+        x, prev_frame, strong_w, weak_w, edges_w, have, **kw
+    )
+    return edges, (), (s_w, wk_w, packed), frame, cost
+
+
+def _staged_warm_skip_step(x, prev_frame, fe, strong_w, weak_w, edges_w, have, **kw):
+    return staged_canny_warm_skip(
+        x, prev_frame, *fe, strong_w, weak_w, edges_w, have, **kw
+    )
+
+
+def _staged_zero_fe(b: int, hp: int, wp: int):
+    return (
+        jnp.zeros((b, hp, wp), jnp.float32),  # blur
+        jnp.zeros((b, hp, wp), jnp.float32),  # sobel magnitude
+        jnp.zeros((b, hp, wp), jnp.uint8),  # sobel direction bins
+        jnp.zeros((b, hp, wp), jnp.float32),  # NMS suppressed magnitude
+    )
+
+
+class PackedTemporal:
+    """Temporal state machine shared by every packed-words backend.
+
+    Owns the per-stream device state — the packed (strong, weak, edges)
+    words, and in skip mode the previous (padded) frame plus whatever
+    front-end outputs the backend reuses (``zero_fe``) — and drives the
+    backend's jitted step functions. Inputs are (b, h, w) f32; widths pad
+    to a multiple of 32 with edge cols (bit-exact: the kernels anchor at
+    ``true_hw``). ``warm=False`` keeps the zero state so every frame runs
+    the cold seed — the answer must not change, only the cost counters.
+    """
+
+    def __init__(
+        self,
+        params: CannyParams,
+        warm: bool,
+        skip: bool,
+        block_rows: int | None,
+        interpret: bool | None,
+        warm_step,
+        warm_skip_step,
+        zero_fe,
+    ):
+        self.params = params
+        self.warm = warm
+        self.skip = skip
+        self.block_rows = block_rows
+        self.interpret = interpret
+        self._warm_step = warm_step
+        self._warm_skip_step = warm_skip_step
+        self._zero_fe = zero_fe
+        self.reset()
+
+    def reset(self) -> None:
+        self._state = None
+        self._fe = None
+        self._prev_frame = None
+        self._have_prev = False
+
+    def step(self, x: jax.Array):
+        b, h, w = x.shape
+        p = self.params
+        bh = self.block_rows or common.pick_block_rows(h, min_rows=p.radius + 2)
+        wp = -(-w // 32) * 32
+        if wp != w:  # edge cols + the true-size table keep this bit-exact
+            x = jnp.pad(x, ((0, 0), (0, 0), (0, wp - w)), mode="edge")
+        true_hw = jnp.broadcast_to(jnp.asarray([h, w], jnp.int32), (b, 2))
+        hp = -(-h // bh) * bh
+        if self._state is None:
+            z = jnp.zeros((b, hp, wp // 32), jnp.uint32)
+            self._state = (z, z, z)
+            self._prev_frame = jnp.zeros((b, hp, wp), jnp.float32)
+            self._fe = self._zero_fe(b, hp, wp)
+        kw = dict(
+            sigma=p.sigma,
+            radius=p.radius,
+            low=p.low,
+            high=p.high,
+            l2_norm=p.l2_norm,
+            block_rows=bh,
+            interpret=self.interpret,
+            true_hw=true_hw,
+        )
+        if self.skip:
+            edges, fe, state, frame, cost = self._warm_skip_step(
+                x, self._prev_frame, self._fe, *self._state,
+                jnp.asarray(self._have_prev), **kw,
+            )
+            if self.warm:
+                self._fe = fe
+                self._prev_frame = frame
+                self._have_prev = True
+        else:
+            edges, state, cost = self._warm_step(x, *self._state, **kw)
+        if self.warm:
+            self._state = tuple(state)
+        return edges[..., :w], cost
+
+
+def _fused_temporal(params, *, warm=True, skip=False, block_rows=None,
+                    interpret=None):
+    return PackedTemporal(
+        params, warm, skip, block_rows, interpret,
+        _fused_warm_step, _fused_warm_skip_step, lambda b, hp, wp: (),
+    )
+
+
+def _staged_temporal(params, *, warm=True, skip=False, block_rows=None,
+                     interpret=None):
+    return PackedTemporal(
+        params, warm, skip, block_rows, interpret,
+        staged_canny_warm, _staged_warm_skip_step, _staged_zero_fe,
+    )
+
+
+register_backend_spec(
+    BackendSpec(
+        name="pallas",
+        stage_fn=_staged,
+        serving_fn=_staged_serving,
+        temporal_fn=_staged_temporal,
+        dist=True,
+        warm=True,
+        skip=True,
+    )
+)
+register_backend_spec(
+    BackendSpec(
+        name="fused",
+        stage_fn=_fused,
+        serving_fn=_fused_serving,
+        temporal_fn=_fused_temporal,
+        dist=True,
+        warm=True,
+        skip=True,
+    )
+)

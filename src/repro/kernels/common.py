@@ -185,6 +185,94 @@ def assemble_rows(
     return jnp.concatenate([top, cur, bot], axis=-2)
 
 
+def default_halos(imgs, halo: int, mode: str):
+    """The local-mode (top, bot) halo slabs for a (B, H, W)-like array:
+    edge-replicated boundary rows or zeros — the same pad rule the old
+    in-kernel i==0 / i==n-1 fix applied, now one uniform externally-fed
+    path shared by every strip kernel. Under ``shard_map`` callers pass
+    ``StencilCtx.halo_rows`` slabs instead."""
+    b, _, w = imgs.shape
+    if mode == "edge":
+        top = jnp.broadcast_to(imgs[:, :1, :], (b, halo, w))
+        bot = jnp.broadcast_to(imgs[:, -1:, :], (b, halo, w))
+    elif mode == "zero":
+        top = jnp.zeros((b, halo, w), imgs.dtype)
+        bot = top
+    else:
+        raise ValueError(mode)
+    return top, bot
+
+
+def check_halos(halos, b: int, halo: int, w: int):
+    top, bot = halos
+    if top.shape != (b, halo, w) or bot.shape != (b, halo, w):
+        raise ValueError(
+            f"halo slabs must be {(b, halo, w)}, got {top.shape} / {bot.shape}"
+        )
+    return top, bot
+
+
+def skip_specs_operands(skip_mask, prev_out, out_shape, bh: int, bt: int):
+    """Wrapper-side plumbing for the temporal strip-mask path, shared by
+    every masked stencil kernel: validates the (B, n_strips) mask + the
+    stored previous outputs (must mirror the kernel's outputs exactly),
+    and returns the extra (in_specs, operands) to append.
+    """
+    shapes = out_shape if isinstance(out_shape, tuple) else (out_shape,)
+    b = shapes[0].shape[0]
+    n = shapes[0].shape[1] // bh
+    if skip_mask.shape != (b, n):
+        raise ValueError(f"skip_mask must be {(b, n)}, got {skip_mask.shape}")
+    prev_out = tuple(prev_out) if isinstance(prev_out, (tuple, list)) else (prev_out,)
+    if len(prev_out) != len(shapes) or any(
+        p.shape != s.shape or p.dtype != s.dtype
+        for p, s in zip(prev_out, shapes)
+    ):
+        raise ValueError(
+            f"prev_out must mirror the outputs "
+            f"{[(s.shape, s.dtype) for s in shapes]}"
+        )
+    specs = [pl.BlockSpec((bt, 1), lambda b_, i_: (b_, i_))]
+    operands = [skip_mask.astype(jnp.int32)]
+    for p, s in zip(prev_out, shapes):
+        specs.append(out_strip_spec(bh, s.shape[-1], bt))
+        operands.append(p)
+    return specs, operands
+
+
+def write_outputs(out_refs, compute, skip_ref=None, prev_refs=None):
+    """Kernel-side output write, masked or plain.
+
+    Without a mask every output ref takes its computed value. With
+    ``skip_ref`` (the (BT, 1) per-image static flags) the temporal
+    strip-mask contract applies: a fully static (image-block, strip)
+    tile never runs ``compute`` (``pl.when`` predication — the stencil
+    math is skipped outright) and copies the stored previous outputs; a
+    mixed tile computes once and selects per image. ``compute`` must be
+    safe to stage inside ``pl.when`` (hoist ``pl.program_id`` via
+    ``assemble_rows(grid_pos=...)``).
+    """
+    out_refs = tuple(out_refs)
+    if skip_ref is None:
+        for ref, val in zip(out_refs, compute()):
+            ref[...] = val
+        return
+    prev_refs = tuple(prev_refs)
+    skip = skip_ref[...] != 0  # (bt, 1)
+    all_skip = jnp.all(skip)
+
+    @pl.when(all_skip)
+    def _reuse():
+        for ref, prev in zip(out_refs, prev_refs):
+            ref[...] = prev[...]
+
+    @pl.when(~all_skip)
+    def _compute():
+        sk = skip.reshape(skip.shape[0], 1, 1)
+        for ref, prev, val in zip(out_refs, prev_refs, compute()):
+            ref[...] = jnp.where(sk, prev[...], val)
+
+
 def pad_cols(x, halo: int, mode: str):
     """In-register horizontal halo (width is never sharded across strips)."""
     if halo == 0:

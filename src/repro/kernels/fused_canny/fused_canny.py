@@ -77,6 +77,7 @@ def _kernel(
         prev_out_refs, out_refs = rest[:n_out], rest[n_out:]
     else:
         out_refs = refs
+        skip_ref = prev_out_refs = None
 
     def frontend():
         # ---- gaussian on the (bt, bh + 2*h2, w) extended tile -------------
@@ -151,31 +152,12 @@ def _kernel(
             common.pack_mask(suppressed >= low),
         )
 
-    if not masked:
-        for ref, val in zip(out_refs, frontend()):
-            ref[...] = val
-        return
-
-    # Strip-mask path: ``skip_ref`` flags per-image STATIC strips — every
-    # input row this strip's stencil reads is bitwise identical to the
-    # previous frame, so the stored previous output IS this frame's output
-    # (the front-end is a pure function of those rows; DESIGN.md §9).
-    # A fully static (image-block, strip) tile skips the stencil math
-    # entirely (`pl.when` predication); a mixed tile computes once and
-    # selects per image.
-    skip = skip_ref[...] != 0  # (bt, 1)
-    all_skip = jnp.all(skip)
-
-    @pl.when(all_skip)
-    def _reuse():
-        for ref, prev in zip(out_refs, prev_out_refs):
-            ref[...] = prev[...]
-
-    @pl.when(~all_skip)
-    def _compute():
-        sk = skip.reshape(bt, 1, 1)
-        for ref, prev, val in zip(out_refs, prev_out_refs, frontend()):
-            ref[...] = jnp.where(sk, prev[...], val)
+    # Strip-mask path (masked): ``skip_ref`` flags per-image STATIC strips
+    # — every input row this strip's stencil reads is bitwise identical to
+    # the previous frame, so the stored previous output IS this frame's
+    # output (purity; DESIGN.md §9). ``common.write_outputs`` skips the
+    # stencil math for fully static tiles via ``pl.when``.
+    common.write_outputs(out_refs, frontend, skip_ref, prev_out_refs)
 
 
 def fused_canny_strips(
@@ -243,15 +225,9 @@ def fused_canny_strips(
     if halos is None:
         # edge-replicate = the oracle's border rule; identical to the old
         # in-kernel i==0 / i==n-1 fix, now one uniform externally-fed path
-        halo_top = jnp.broadcast_to(imgs[:, :1, :], (b, h2, w))
-        halo_bot = jnp.broadcast_to(imgs[:, -1:, :], (b, h2, w))
+        halo_top, halo_bot = common.default_halos(imgs, h2, "edge")
     else:
-        halo_top, halo_bot = halos
-        if halo_top.shape != (b, h2, w) or halo_bot.shape != (b, h2, w):
-            raise ValueError(
-                f"halo slabs must be {(b, h2, w)}, got "
-                f"{halo_top.shape} / {halo_bot.shape}"
-            )
+        halo_top, halo_bot = common.check_halos(halos, b, h2, w)
     if row_offset is None:
         row_offset = jnp.zeros((1, 1), jnp.int32)
     row_offset = jnp.asarray(row_offset, jnp.int32).reshape(1, 1)
@@ -294,23 +270,9 @@ def fused_canny_strips(
         row_offset,
     ]
     if skip_mask is not None:
-        if skip_mask.shape != (b, n):
-            raise ValueError(f"skip_mask must be {(b, n)}, got {skip_mask.shape}")
-        prev_out = tuple(prev_out) if isinstance(prev_out, (tuple, list)) else (prev_out,)
-        shapes = out_shape if isinstance(out_shape, tuple) else (out_shape,)
-        if len(prev_out) != len(shapes) or any(
-            p.shape != s.shape or p.dtype != s.dtype
-            for p, s in zip(prev_out, shapes)
-        ):
-            raise ValueError(
-                f"prev_out must mirror the {emit!r} outputs "
-                f"{[(s.shape, s.dtype) for s in shapes]}"
-            )
-        in_specs.append(pl.BlockSpec((bt, 1), lambda b_, i_: (b_, i_)))
-        operands.append(skip_mask.astype(jnp.int32))
-        for p, s in zip(prev_out, shapes):
-            in_specs.append(common.out_strip_spec(bh, s.shape[-1], bt))
-            operands.append(p)
+        specs, ops = common.skip_specs_operands(skip_mask, prev_out, out_shape, bh, bt)
+        in_specs += specs
+        operands += ops
     return pl.pallas_call(
         functools.partial(
             _kernel,

@@ -74,13 +74,15 @@ def _check_dist_batch(b: int, dist: Dist) -> None:
         )
 
 
-def _run_sharded(imgs, true_hw, radius, block_rows, dist, shard_fn):
-    """Shared shard_map scaffolding for the fused entry points.
+def _run_sharded(imgs, true_hw, min_rows, block_rows, dist, shard_fn):
+    """Shared shard_map scaffolding for the Pallas serving entry points
+    (fused AND per-stage — see ``kernels/staged.py``).
 
-    Pads rows globally to the shard grid, wraps ``shard_fn`` in
-    ``shard_map`` over ``dist``, and hands it per-shard
-    ``(x, hw, halos, row_off, bh, ctx)`` — the halo slabs exchanged by
-    ``StencilCtx.halo_rows`` and the shard's first global row. Returns
+    Pads rows globally to the shard grid (strip heights ≥ ``min_rows``,
+    the widest stage halo), wraps ``shard_fn`` in ``shard_map`` over
+    ``dist``, and hands it per-shard ``(x, hw, row_off, bh, ctx)`` — the
+    shard's first global row and the stencil context whose
+    ``halo_rows`` the stages call to exchange their own halos. Returns
     the global result cropped back to the true height.
     """
     if dist.pod_axis is not None:
@@ -91,8 +93,7 @@ def _run_sharded(imgs, true_hw, radius, block_rows, dist, shard_fn):
         )
     b, h, w = imgs.shape
     _check_dist_batch(b, dist)
-    h2 = radius + 2
-    hp, hl, bh = _shard_grid(h, dist, h2, block_rows)
+    hp, hl, bh = _shard_grid(h, dist, min_rows, block_rows)
     padded = _pad_rows_to(imgs, hp, "edge")
     if true_hw is None:
         true_hw = jnp.broadcast_to(jnp.asarray([h, w], jnp.int32), (b, 2))
@@ -100,11 +101,10 @@ def _run_sharded(imgs, true_hw, radius, block_rows, dist, shard_fn):
     space = dist.space_axis
 
     def local_fn(x, hw):
-        # x: (B/data, hl, W) shard-local rows; halos cross shards here
-        halos = fctx.halo_rows(x, h2) if space is not None else None
+        # x: (B/data, hl, W) shard-local rows
         off = lax.axis_index(space) * hl if space is not None else 0
         row_off = jnp.full((1, 1), off, jnp.int32)
-        return shard_fn(x, hw, halos, row_off, bh, fctx)
+        return shard_fn(x, hw, row_off, bh, fctx)
 
     fn = compat.shard_map(
         local_fn,
@@ -135,8 +135,10 @@ def _sharded_fused_canny(
             f"got W={imgs.shape[-1]}; bucket widths to a multiple of 32"
         )
     hctx = StencilCtx(dist.space_axis, "zero", sync_axes=dist.sync_axes())
+    h2 = radius + 2
 
-    def shard_fn(x, hw, halos, row_off, bh, ctx):
+    def shard_fn(x, hw, row_off, bh, ctx):
+        halos = ctx.halo_rows(x, h2) if ctx.axis_name is not None else None
         strong_w, weak_w = fused_canny_strips(
             x, sigma, radius, low, high, l2_norm, "packed", bh, interpret, hw,
             halos=halos, row_offset=row_off,
@@ -144,7 +146,7 @@ def _sharded_fused_canny(
         packed = packed_fixpoint(strong_w, weak_w, bh, interpret, ctx=hctx)
         return common.unpack_mask(packed)
 
-    return _run_sharded(imgs, true_hw, radius, block_rows, dist, shard_fn)
+    return _run_sharded(imgs, true_hw, h2, block_rows, dist, shard_fn)
 
 
 def _sharded_fused_frontend(
@@ -160,13 +162,16 @@ def _sharded_fused_frontend(
     true_hw: jax.Array | None,
     dist: Dist,
 ) -> jax.Array:
-    def shard_fn(x, hw, halos, row_off, bh, ctx):
+    h2 = radius + 2
+
+    def shard_fn(x, hw, row_off, bh, ctx):
+        halos = ctx.halo_rows(x, h2) if ctx.axis_name is not None else None
         return fused_canny_strips(
             x, sigma, radius, low, high, l2_norm, emit, bh, interpret, hw,
             halos=halos, row_offset=row_off,
         )
 
-    return _run_sharded(imgs, true_hw, radius, block_rows, dist, shard_fn)
+    return _run_sharded(imgs, true_hw, h2, block_rows, dist, shard_fn)
 
 
 @functools.partial(

@@ -7,6 +7,22 @@ HBM) and replace arctan with branch-free slope comparisons (no
 transcendentals on the VPU hot path). Direction bins are emitted as
 uint8 — ¼ the HBM traffic of an int32 map. Batch-native: one launch
 covers the whole (B, H, W) batch on a (batch, strip) grid.
+
+Backend parity plane: boundary strips bind external halo slabs (the
+neighbour shard's blurred rows under ``shard_map``), and a per-image
+(B, 2) true-size table + global row offset anchor the border semantics
+when the serving layer pads images to shape buckets:
+
+  * the oracle edge-replicates the BLURRED image, and for a 3×3 stencil
+    a one-step clamp lands exactly on the centre row/col — so neighbour
+    reads that fall past the true height/width fold back to the centre
+    window, entirely in-tile (no cross-strip fetch of the true last row);
+  * magnitudes outside the true region are zeroed, which both feeds NMS
+    its exact zero-neighbour rule at the true border and keeps the padded
+    region's code map inert under hysteresis.
+
+``skip_mask``/``prev_out`` is the temporal strip-mask path: strips whose
+±(radius+1) input rows are unchanged copy the stored (mag, dirs).
 """
 
 from __future__ import annotations
@@ -17,18 +33,27 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.canny.sobel import fold_true_border, zero_outside_true
 from repro.kernels import common
 
 _T1 = 0.41421356237309503  # tan(22.5°)
 _T2 = 2.414213562373095  # tan(67.5°)
 
 
-def sobel_math(ext: jax.Array, bh: int, w: int, l2_norm: bool):
+def sobel_math(ext: jax.Array, bh: int, w: int, l2_norm: bool, clamp=None):
     """Shared gx/gy/mag/dirs math on a halo-extended (..., bh+2, w+2) tile.
 
     ``ext`` must already have 1 halo row AND 1 halo col on each side;
     leading dims (the in-block batch) broadcast through. Returns
     (mag, dirs) of shape (..., bh, w).
+
+    ``clamp = (grow, ht, gcol, wt)`` anchors the stencil at per-image
+    TRUE sizes via the shared ``core.canny.sobel`` clamp rule
+    (``fold_true_border``/``zero_outside_true`` — one rule, the jnp
+    serving stage and this kernel both execute it): window reads past the
+    true extent fold to the centre row/col (the oracle's one-step
+    edge-replicate clamp on the blurred image), magnitudes outside the
+    true region are zeroed.
     """
     win = {}
     for dy in range(3):
@@ -36,6 +61,8 @@ def sobel_math(ext: jax.Array, bh: int, w: int, l2_norm: bool):
             win[(dy, dx)] = jax.lax.slice_in_dim(
                 jax.lax.slice_in_dim(ext, dy, dy + bh, axis=-2), dx, dx + w, axis=-1
             )
+    if clamp is not None:
+        win = fold_true_border(win, clamp)
     gx = (
         -win[(0, 0)]
         + win[(0, 2)]
@@ -61,16 +88,59 @@ def sobel_math(ext: jax.Array, bh: int, w: int, l2_norm: bool):
     vert = ay >= _T2 * ax
     same = (gx * gy) > 0
     dirs = jnp.where(horiz, 0, jnp.where(vert, 2, jnp.where(same, 1, 3)))
+    if clamp is not None:
+        mag = zero_outside_true(mag, clamp)
     return mag.astype(jnp.float32), dirs.astype(jnp.uint8)
 
 
-def _kernel(prev_ref, cur_ref, nxt_ref, mag_ref, dir_ref, *, l2_norm: bool):
-    _, bh, w = cur_ref.shape
-    ext = common.assemble_rows(prev_ref[...], cur_ref[...], nxt_ref[...], 1, "edge")
-    ext = common.pad_cols(ext, 1, "edge")
-    mag, dirs = sobel_math(ext, bh, w, l2_norm)
-    mag_ref[...] = mag
-    dir_ref[...] = dirs
+def _kernel(
+    prev_ref,
+    cur_ref,
+    nxt_ref,
+    top_ref,
+    bot_ref,
+    hw_ref,
+    off_ref,
+    *refs,
+    l2_norm: bool,
+    masked: bool = False,
+):
+    bt, bh, w = cur_ref.shape
+    grid_pos = (
+        pl.program_id(common.STRIP_AXIS),
+        pl.num_programs(common.STRIP_AXIS),
+    )
+    ht = hw_ref[:, 0].reshape(bt, 1, 1)
+    wt = hw_ref[:, 1].reshape(bt, 1, 1)
+    row0 = off_ref[0, 0] + grid_pos[0] * bh  # first GLOBAL row of this strip
+    if masked:
+        skip_ref, prev_mag_ref, prev_dir_ref, mag_ref, dir_ref = refs
+    else:
+        mag_ref, dir_ref = refs
+        skip_ref = None
+
+    def compute():
+        ext = common.assemble_rows(
+            prev_ref[...],
+            cur_ref[...],
+            nxt_ref[...],
+            1,
+            "edge",
+            top_ext=top_ref[...],
+            bot_ext=bot_ref[...],
+            grid_pos=grid_pos,
+        )
+        ext = common.pad_cols(ext, 1, "edge")
+        grow = jax.lax.broadcasted_iota(jnp.int32, (1, bh, 1), 1) + row0
+        gcol = jax.lax.broadcasted_iota(jnp.int32, (1, 1, w), 2)
+        return sobel_math(ext, bh, w, l2_norm, clamp=(grow, ht, gcol, wt))
+
+    common.write_outputs(
+        (mag_ref, dir_ref),
+        compute,
+        skip_ref,
+        (prev_mag_ref, prev_dir_ref) if masked else None,
+    )
 
 
 def sobel_strips(
@@ -79,28 +149,76 @@ def sobel_strips(
     block_rows: int | None = None,
     interpret: bool | None = None,
     batch_block: int | None = None,
+    true_hw: jax.Array | None = None,
+    halos: tuple[jax.Array, jax.Array] | None = None,
+    row_offset: jax.Array | None = None,
+    skip_mask: jax.Array | None = None,
+    prev_out: tuple[jax.Array, jax.Array] | None = None,
 ):
-    """(B, H, W) f32 → (magnitude f32, direction uint8) in ONE pallas_call."""
+    """(B, H, W) f32 → (magnitude f32, direction uint8) in ONE pallas_call.
+
+    ``true_hw`` is the (B, 2) pre-padding size table (defaults to the
+    full grid); ``halos``/``row_offset`` are the shard-composition inputs
+    (see ``fused_canny_strips``); ``skip_mask``/``prev_out`` the temporal
+    strip-mask path (local only, ``prev_out = (mag, dirs)``).
+    """
     if interpret is None:
         interpret = common.default_interpret()
+    if (skip_mask is None) != (prev_out is None):
+        raise ValueError("skip_mask and prev_out come together")
+    if skip_mask is not None and halos is not None:
+        raise ValueError("the strip-mask path is local-only (no halo slabs)")
     b, h, w = imgs.shape
     bh = block_rows or common.pick_block_rows(h)
     if h % bh != 0:
         raise ValueError(f"H={h} not a multiple of block_rows={bh}")
     n = h // bh
     bt = batch_block or common.pick_batch_block(b, bh, w)
+    if true_hw is None:
+        true_hw = jnp.broadcast_to(jnp.asarray([h, w], jnp.int32), (b, 2))
+    if halos is None:
+        halo_top, halo_bot = common.default_halos(imgs, 1, "edge")
+    else:
+        halo_top, halo_bot = common.check_halos(halos, b, 1, w)
+    if row_offset is None:
+        row_offset = jnp.zeros((1, 1), jnp.int32)
+    row_offset = jnp.asarray(row_offset, jnp.int32).reshape(1, 1)
+
     prev, cur, nxt = common.strip_specs(n, bh, w, bt)
+    out_shape = (
+        jax.ShapeDtypeStruct((b, h, w), jnp.float32),
+        jax.ShapeDtypeStruct((b, h, w), jnp.uint8),
+    )
+    in_specs = [
+        prev,
+        cur,
+        nxt,
+        common.halo_spec(1, w, bt),
+        common.halo_spec(1, w, bt),
+        common.per_image_spec(2, bt),
+        common.offset_spec(bt),
+    ]
+    operands = [
+        imgs,
+        imgs,
+        imgs,
+        halo_top.astype(imgs.dtype),
+        halo_bot.astype(imgs.dtype),
+        true_hw.astype(jnp.int32),
+        row_offset,
+    ]
+    if skip_mask is not None:
+        specs, ops = common.skip_specs_operands(skip_mask, prev_out, out_shape, bh, bt)
+        in_specs += specs
+        operands += ops
     return pl.pallas_call(
-        functools.partial(_kernel, l2_norm=l2_norm),
+        functools.partial(_kernel, l2_norm=l2_norm, masked=skip_mask is not None),
         grid=(b // bt, n),
-        in_specs=[prev, cur, nxt],
+        in_specs=in_specs,
         out_specs=(
             common.out_strip_spec(bh, w, bt),
             common.out_strip_spec(bh, w, bt),
         ),
-        out_shape=(
-            jax.ShapeDtypeStruct((b, h, w), jnp.float32),
-            jax.ShapeDtypeStruct((b, h, w), jnp.uint8),
-        ),
+        out_shape=out_shape,
         interpret=interpret,
-    )(imgs, imgs, imgs)
+    )(*operands)

@@ -16,7 +16,7 @@ import argparse
 
 import numpy as np
 
-from repro.core.canny import CannyParams, canny_reference
+from repro.core.canny import CannyParams, backend_specs, canny_reference
 from repro.data.images import synthetic_image
 from repro.launch.mesh import dist_from_spec
 from repro.serve.engine import CannyEngine
@@ -37,7 +37,16 @@ def main():
     ap.add_argument("--per-wave", type=int, default=12)
     ap.add_argument("--bucket", type=int, default=64)
     ap.add_argument("--max-batch", type=int, default=8)
-    ap.add_argument("--backend", default="fused")
+    # serving-capable backends straight from the BackendSpec registry;
+    # the engine validates dist capability at construction (fail fast).
+    # The default must come from the registry too — argparse never
+    # validates defaults, and on a no-Pallas host "fused" is not there.
+    serving = [s.name for s in backend_specs() if s.serving_fn]
+    ap.add_argument(
+        "--backend",
+        default="fused" if "fused" in serving else serving[0],
+        choices=serving,
+    )
     ap.add_argument("--sigma", type=float, default=1.4)
     ap.add_argument("--low", type=float, default=0.08)
     ap.add_argument("--high", type=float, default=0.2)

@@ -19,7 +19,7 @@ import time
 
 import numpy as np
 
-from repro.core.canny import CannyParams, canny_reference
+from repro.core.canny import CannyParams, backend_specs, canny_reference
 from repro.launch.mesh import dist_from_spec
 from repro.stream import FarmScheduler, Prefetcher, SyntheticStream
 
@@ -59,7 +59,14 @@ def main():
         "dispatch over pod ranks, each with its OWN detector on its "
         "DATAxMODEL device slice (2x1x1 = two plain warm workers)",
     )
-    ap.add_argument("--backend", default=None, help="fused | jnp (default: auto)")
+    # choices come from the BackendSpec registry — a new backend shows up
+    # here (and is capability-validated downstream) with zero CLI edits
+    ap.add_argument(
+        "--backend",
+        default=None,
+        choices=[s.name for s in backend_specs() if s.temporal_fn],
+        help="any registered temporal-capable backend (default: auto)",
+    )
     ap.add_argument("--sigma", type=float, default=1.4)
     ap.add_argument("--low", type=float, default=0.08)
     ap.add_argument("--high", type=float, default=0.2)

@@ -277,11 +277,14 @@ class CannyEngine:
         donate: bool | None = None,
         dist: Dist = LOCAL,
     ):
-        from repro.core.canny.pipeline import resolve_serving_backend
+        from repro.core.canny.backends import backend_spec
 
-        serve_fn = resolve_serving_backend(backend)
-        if serve_fn is None:
-            raise ValueError(f"backend {backend!r} has no serving (true-size) entry")
+        # fail fast, feature named: a backend that cannot serve (or cannot
+        # serve under THIS dist) is rejected before any request is queued
+        spec = backend_spec(backend).require(
+            serving=True, dist=not dist.is_local
+        )
+        serve_fn = spec.serving_fn
         if dist.pod_axis is not None:
             raise ValueError(
                 "serving drains ONE queue across a mesh; pod ranks own "

@@ -141,8 +141,19 @@ class PodWorker:
             )
             self.step = self.temporal.step
         else:
+            from repro.core.canny.backends import UnsupportedFeature
             from repro.core.canny.pipeline import make_canny
 
+            # a mesh rank's detector is stateless and runs cold no matter
+            # what the backend claims; a skip request would be silently
+            # dropped — fail fast, unconditionally
+            if skip:
+                raise UnsupportedFeature(
+                    "skip=True on a mesh pod rank: non-trivial "
+                    "Dist.pod_slice ranks share one stateless "
+                    "make_canny(dist=...) detector, which runs cold — "
+                    "warm/skip state needs a LOCAL per-rank slice"
+                )
             det = make_canny(params, dist, backend=backend or "fused")
             self.step = lambda x: (det(x), None)
 

@@ -220,11 +220,26 @@ class FarmScheduler:
             self.farm = Farm(workers, queue_depth=queue_depth)
             return
         if detector is None and dist is not None and not dist.is_local:
+            from repro.core.canny.backends import UnsupportedFeature
             from repro.core.canny.pipeline import make_canny
 
+            # THIS path is a stateless shared detector and runs cold no
+            # matter what the backend claims; a skip request would be
+            # silently dropped — fail fast, unconditionally (warm alone
+            # keeps the documented degrade-to-cold behaviour for CLI
+            # defaults)
+            if skip:
+                raise UnsupportedFeature(
+                    "skip=True under a shared mesh detector: the "
+                    "non-pod mesh farm shares one stateless "
+                    "make_canny(dist=...) detector, which runs cold — "
+                    "use a pod-axis Dist with local per-rank slices for "
+                    "warm/skip state"
+                )
             # device parallelism comes from the mesh (BucketedCanny
             # serializes concurrent launches internally), thread overlap
-            # from per-worker host prep
+            # from per-worker host prep; make_canny validates the
+            # backend's dist capability at construction
             detector = make_canny(params, dist, backend=backend or "fused")
             devices = [None]  # shard_map owns placement; workers share it
         workers = []

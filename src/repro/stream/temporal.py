@@ -2,8 +2,8 @@
 
 ``TemporalCanny`` is the stateful frame detector the streaming subsystem
 schedules: each call runs one frame (or frame batch) and threads the
-packed strong/weak/edge words into the next frame's hysteresis fixpoint
-as a warm seed. The seed is gated by the grow-only monotonicity check
+previous frame's state into the next frame's hysteresis fixpoint as a
+warm seed. The seed is gated by the grow-only monotonicity check
 (``core.canny.hysteresis.warm_seed``), so the output is bit-identical to
 the cold detector on EVERY frame — warm-start changes only how many
 sweeps the fixpoint needs (~1 on static/grow-only frames). ``warm=False``
@@ -11,25 +11,22 @@ turns the threading off for correctness comparisons; the answer must not
 change, only the sweep counts.
 
 ``skip=True`` additionally carries the previous FRAME and the previous
-front-end outputs, so provably-static row strips skip the
-gaussian/sobel/NMS front-end entirely (DESIGN.md §9): the fused backend
-runs the strip-mask kernel path (``fused_canny_warm_skip`` — an
-all-static frame skips the front-end launch, a partially-static one
-skips per-strip stencil math), and the jnp backend carries the previous
-frame's NMS magnitudes, reusing them when the whole frame is unchanged.
-Both are exact by purity — identical input rows ⇒ identical front-end
-output — so edges stay bit-identical to cold on every frame; only the
-``frontend_launches``/``frontend_strips`` cost counters move.
+front-end outputs, so provably-static input is never recomputed
+(DESIGN.md §9): the fused backend runs the strip-mask kernel path, the
+per-stage "pallas" backend runs it PER STAGE (each stage its own static
+mask and launch skip — ``kernels/staged.py``), and the jnp backend
+carries the previous frame's NMS magnitudes, reusing them when the whole
+frame is unchanged. All are exact by purity — identical input rows ⇒
+identical front-end output — so edges stay bit-identical to cold on
+every frame; only the ``frontend_launches``/``frontend_strips`` cost
+counters move.
 
-Two execution paths behind one API:
-
-  * ``backend="fused"`` — the Pallas fused front-end + bit-parallel
-    packed hysteresis (``kernels.fused_canny.ops.fused_canny_warm``);
-    state lives as (b, Hp, W//32) uint32 words.
-  * ``backend="jnp"``   — plain-JAX stages + seeded bool fixpoint; the
-    portable fallback when the Pallas kernels are unavailable.
-
-``backend=None`` picks fused when the kernel package imports, else jnp.
+Backends resolve through the ``BackendSpec`` registry: the spec's
+``temporal_fn`` builds the state machine (``PackedTemporal`` for the
+Pallas backends, ``JnpTemporal`` below for the portable fallback), and
+capability validation happens at CONSTRUCTION — asking a backend for
+warm/skip (or a non-local ``dist``) it does not declare raises
+``UnsupportedFeature`` before any frame runs.
 """
 
 from __future__ import annotations
@@ -40,20 +37,19 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.canny.backends import backend_spec
 from repro.core.canny.hysteresis import (
     double_threshold,
     hysteresis_fixpoint_count,
     warm_seed,
 )
 from repro.core.canny.params import CannyParams
-from repro.core.patterns.dist import StencilCtx
+from repro.core.patterns.dist import LOCAL, Dist, StencilCtx
 
 
 def _resolve_backend(backend: str | None) -> str:
-    if backend in ("fused", "jnp"):
-        return backend
     if backend is not None:
-        raise ValueError(f"unknown temporal backend {backend!r}")
+        return backend
     try:
         import repro.kernels.fused_canny  # noqa: F401
 
@@ -62,62 +58,30 @@ def _resolve_backend(backend: str | None) -> str:
         return "jnp"
 
 
-class TemporalCanny:
-    """Stateful streaming detector: cold-exact edges + warm sweep counts.
+class JnpTemporal:
+    """The portable temporal plane: plain-JAX stages + seeded bool
+    fixpoint. Skip mode carries the previous frame's NMS magnitudes; the
+    jnp stages have no strip structure, so the skip decision is
+    whole-frame — an unchanged frame reuses them inside ``lax.cond`` (the
+    front-end never executes: 0 launches) and everything downstream is
+    bit-identical by purity."""
 
-    ``step`` maps an (h, w) or (b, h, w) frame to (edges, cost) where
-    ``cost = (launches, dilations)`` int32 device scalars (see
-    ``packed_fixpoint_count``; the jnp path reports its sweep count as
-    both launches and productive dilations-1), extended by
-    ``(frontend_launches, frontend_strips)`` in skip mode. State resets
-    whenever the input shape changes; ``reset()`` forces the next frame
-    cold.
-    """
-
-    def __init__(
-        self,
-        params: CannyParams = CannyParams(),
-        warm: bool = True,
-        backend: str | None = None,
-        block_rows: int | None = None,
-        interpret: bool | None = None,
-        skip: bool = False,
-    ):
-        if skip and not warm:
-            raise ValueError(
-                "skip=True needs warm=True: the front-end skip reuses the "
-                "threaded per-frame state"
-            )
+    def __init__(self, params: CannyParams, *, warm=True, skip=False,
+                 block_rows=None, interpret=None):
+        del block_rows, interpret  # no strip grid / Pallas on this path
         self.params = params
         self.warm = warm
         self.skip = skip
-        self.backend = _resolve_backend(backend)
-        self.block_rows = block_rows
-        self.interpret = interpret
-        self._shape: tuple[int, int, int] | None = None
-        self._state = None
-        self._prev_frame = None  # skip mode: previous (padded) frame
-        self._prev_nms = None  # jnp skip mode: previous NMS magnitudes
-        self._have_prev = False
-        self._cost_log: list = []  # device scalars; folded lazily so the
-        self._cost_done = [0, 0, 0, 0, 0]  # hot loop never blocks on a sync
-        if self.backend == "jnp":
-            self._jnp_step = self._make_jnp_step()
+        self._step = self._make_step()
+        self.reset()
 
-    # -- state plane ---------------------------------------------------------
     def reset(self) -> None:
         self._state = None
         self._prev_frame = None
         self._prev_nms = None
         self._have_prev = False
 
-    def _zero_state(self, b: int, h: int, wp: int, bh: int):
-        hp = -(-h // bh) * bh
-        z = jnp.zeros((b, hp, wp // 32), jnp.uint32)
-        return z, z, z
-
-    # -- jnp fallback --------------------------------------------------------
-    def _make_jnp_step(self) -> Callable:
+    def _make_step(self) -> Callable:
         from repro.core.canny.gaussian import gaussian_stage
         from repro.core.canny.nms import nms_stage
         from repro.core.canny.sobel import sobel_stage
@@ -141,11 +105,6 @@ class TemporalCanny:
 
             return step
 
-        # Skip mode: the previous frame's NMS magnitudes ride along. The
-        # jnp stages have no strip structure, so the skip decision is
-        # whole-frame: an unchanged frame reuses prev_nms inside lax.cond
-        # (the front-end never executes — 0 launches) and everything
-        # downstream is bit-identical by purity.
         @jax.jit
         def step_skip(imgs, prev_frame, prev_nms, prev_s, prev_w, prev_e, have):
             same = have & jnp.all(imgs == prev_frame)
@@ -163,6 +122,95 @@ class TemporalCanny:
 
         return step_skip
 
+    def step(self, x: jax.Array):
+        b, h, w = x.shape
+        if self._state is None:
+            z = jnp.zeros((b, h, w), bool)
+            self._state = (z, z, z)
+            self._prev_frame = jnp.zeros((b, h, w), jnp.float32)
+            self._prev_nms = jnp.zeros((b, h, w), jnp.float32)
+        if self.skip:
+            edges, nms, state, cost = self._step(
+                x, self._prev_frame, self._prev_nms, *self._state,
+                jnp.asarray(self._have_prev),
+            )
+            if self.warm:
+                self._prev_frame, self._prev_nms = x, nms
+                self._have_prev = True
+        else:
+            edges, state, cost = self._step(x, *self._state)
+        if self.warm:
+            self._state = tuple(state)
+        return edges, cost
+
+
+class TemporalCanny:
+    """Stateful streaming detector: cold-exact edges + warm sweep counts.
+
+    ``step`` maps an (h, w) or (b, h, w) frame to (edges, cost) where
+    ``cost = (launches, dilations)`` int32 device scalars (see
+    ``packed_fixpoint_count``; the jnp path reports its sweep count as
+    both launches and productive dilations-1), extended by
+    ``(frontend_launches, frontend_strips)`` in skip mode (and on the
+    per-stage backend, whose front-end is 3 launches/frame). State resets
+    whenever the input shape changes; ``reset()`` forces the next frame
+    cold.
+
+    The backend resolves through the ``BackendSpec`` registry and its
+    warm/skip (and ``dist``) capabilities are validated here, at
+    construction — no backend-name ``if`` chains, no silent fallbacks.
+    """
+
+    def __init__(
+        self,
+        params: CannyParams = CannyParams(),
+        warm: bool = True,
+        backend: str | None = None,
+        block_rows: int | None = None,
+        interpret: bool | None = None,
+        skip: bool = False,
+        dist: Dist = LOCAL,
+    ):
+        if skip and not warm:
+            raise ValueError(
+                "skip=True needs warm=True: the front-end skip reuses the "
+                "threaded per-frame state"
+            )
+        self.backend = _resolve_backend(backend)
+        spec = backend_spec(self.backend).require(
+            temporal=True, warm=warm, skip=skip
+        )
+        if not dist.is_local:
+            # TemporalCanny IS the per-worker temporal state plane; mesh
+            # detectors come from make_canny(dist=...) and run cold — so
+            # any non-local dist here is the (unsupported) warm+dist cell
+            spec.require(dist=True, warm=True)
+            # dist is not yet threaded into temporal_fn: the moment a
+            # spec claims warm_dist, the plumbing must be built, not
+            # silently skipped (the failure class this registry exists
+            # to eliminate)
+            raise NotImplementedError(
+                f"backend {self.backend!r} claims warm_dist but "
+                "TemporalCanny does not thread dist into its temporal "
+                "impl yet — wire spec.temporal_fn(dist=...) first"
+            )
+        self.params = params
+        self.warm = warm
+        self.skip = skip
+        self.block_rows = block_rows
+        self.interpret = interpret
+        self._impl = spec.temporal_fn(
+            params, warm=warm, skip=skip, block_rows=block_rows,
+            interpret=interpret,
+        )
+        self._shape: tuple[int, int, int] | None = None
+        self._cost_log: list = []  # device scalars; folded lazily so the
+        self._cost_done = [0, 0, 0, 0, 0]  # hot loop never blocks on a sync
+
+    # -- state plane ---------------------------------------------------------
+    def reset(self) -> None:
+        self._impl.reset()
+
     # -- frame plane ---------------------------------------------------------
     def step(self, frame: jax.Array):
         x = jnp.asarray(frame, jnp.float32)
@@ -171,69 +219,10 @@ class TemporalCanny:
             x = x[None]
         if x.ndim != 3:
             raise ValueError(f"expected (h,w) or (b,h,w), got {frame.shape}")
-        b, h, w = x.shape
-        if self._shape != (b, h, w):
+        if self._shape != x.shape:
             self.reset()
-            self._shape = (b, h, w)
-
-        if self.backend == "jnp":
-            if self._state is None:
-                z = jnp.zeros((b, h, w), bool)
-                self._state = (z, z, z)
-                self._prev_frame = jnp.zeros((b, h, w), jnp.float32)
-                self._prev_nms = jnp.zeros((b, h, w), jnp.float32)
-            if self.skip:
-                edges, nms, state, cost = self._jnp_step(
-                    x, self._prev_frame, self._prev_nms, *self._state,
-                    jnp.asarray(self._have_prev),
-                )
-                if self.warm:
-                    self._prev_frame, self._prev_nms = x, nms
-                    self._have_prev = True
-            else:
-                edges, state, cost = self._jnp_step(x, *self._state)
-        else:
-            from repro.kernels import common
-            from repro.kernels.fused_canny.ops import (
-                fused_canny_warm,
-                fused_canny_warm_skip,
-            )
-
-            p = self.params
-            bh = self.block_rows or common.pick_block_rows(h, min_rows=p.radius + 2)
-            wp = -(-w // 32) * 32
-            if wp != w:  # edge cols + the true-size table keep this bit-exact
-                x = jnp.pad(x, ((0, 0), (0, 0), (0, wp - w)), mode="edge")
-            true_hw = jnp.broadcast_to(jnp.asarray([h, w], jnp.int32), (b, 2))
-            if self._state is None:
-                self._state = self._zero_state(b, h, wp, bh)
-                hp = self._state[0].shape[1]
-                self._prev_frame = jnp.zeros((b, hp, wp), jnp.float32)
-            kw = dict(
-                sigma=p.sigma,
-                radius=p.radius,
-                low=p.low,
-                high=p.high,
-                l2_norm=p.l2_norm,
-                block_rows=bh,
-                interpret=self.interpret,
-                true_hw=true_hw,
-            )
-            if self.skip:
-                edges, state, cost = fused_canny_warm_skip(
-                    x, self._prev_frame, *self._state,
-                    jnp.asarray(self._have_prev), **kw,
-                )
-                *state, frame_state = state
-                if self.warm:
-                    self._prev_frame = frame_state
-                    self._have_prev = True
-            else:
-                edges, state, cost = fused_canny_warm(x, *self._state, **kw)
-            edges = edges[..., :w]
-        if self.warm:
-            self._state = tuple(state)
-        # warm=False keeps the zero state: every frame runs the cold seed
+            self._shape = x.shape
+        edges, cost = self._impl.step(x)
         self._cost_log.append(cost)
         if len(self._cost_log) >= 1024:  # bound the pending-scalar window
             self._fold_costs()
@@ -249,7 +238,8 @@ class TemporalCanny:
         for c in log:
             self._cost_done[1] += int(c[0])
             self._cost_done[2] += int(c[1])
-            # without skip, every frame is exactly one front-end launch
+            # without an explicit counter, every frame is exactly one
+            # front-end launch (the fused cold/warm path)
             self._cost_done[3] += int(c[2]) if len(c) > 2 else 1
             self._cost_done[4] += int(c[3]) if len(c) > 3 else 0
 

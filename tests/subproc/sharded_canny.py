@@ -109,6 +109,15 @@ def main():
         assert (out[i] == want).all(), f"image {i} mismatch"
     print("sharded batched: OK")
 
+    # --- the RAW jnp stage plane under shard_map (bucket_multiple=None):
+    # mesh-divisible shapes wrap canny_local_stages directly — the
+    # serving entry must not be the only mesh path left standing
+    out_raw = np.asarray(
+        make_canny(PARAMS, dist, bucket_multiple=None)(jnp.asarray(imgs))
+    )
+    assert (out_raw == out).all(), "raw stage plane diverged from serving"
+    print("sharded stage plane: OK")
+
     # --- single image, rows sharded only ---------------------------------
     img = synthetic_batch(1, 64, 80, seed=5)[0]
     dist1 = Dist(mesh=mesh, batch_axes=(), space_axis="model")

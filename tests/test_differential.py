@@ -1,24 +1,36 @@
-"""Differential oracle harness — every backend vs the numpy reference.
+"""Conformance matrix — every backend × dist × warm/skip cell, generated.
 
-One table of detectors, one table of inputs, one invariant: EVERY
-backend produces bits identical to ``core/canny/reference.py`` on EVERY
-input. The detector axes:
+The parametrization is DERIVED from the ``BackendSpec`` registry
+(``core/canny/backends.py``), never hand-enumerated: for every
+registered backend and every (local | data×model mesh) × (cold | warm |
+warm+skip) cell,
 
-  * ``jnp``        — plain-JAX stages (``make_canny(backend="jnp")``)
-  * ``fused``      — fused Pallas kernels via the bucketed serving path
-  * ``fused+dist`` — the same kernels inside ``shard_map`` (a 1×1 mesh
-                     here — the sharded code path, halo plumbing and
-                     consensus included, on however few devices CI has;
-                     the true multi-device run is tests/test_sharded.py)
-  * ``warm``       — ``TemporalCanny`` threading warm hysteresis state
-  * ``warm+skip``  — warm + the static-strip front-end skip
-  * ``jnp warm+skip`` — the portable NMS-magnitude-carry fallback
+  * a cell the spec CLAIMS must run and produce bits identical to the
+    serial numpy reference (``core/canny/reference.py``) on the corpus
+    images AND on adversarial synthetic streams;
+  * a cell the spec does NOT claim must raise ``UnsupportedFeature`` at
+    construction — asserted too, so a silent fallback (e.g. warm state
+    quietly dropped under a mesh) cannot hide behind a passing bit-exact
+    check.
 
-and the stream axes are chosen adversarially for the temporal paths:
+A new backend therefore gets full conformance coverage the moment its
+spec registers; an over-claiming spec fails the matrix; an under-claiming
+one fails the unsupported-cell assertion.
+
+The mesh cells build a data×model mesh over however many devices the
+host exposes (1×1 in tier-1 CI — the shard_map composition, halo
+plumbing and consensus still execute; the CI conformance job forces 8
+virtual devices for a real 2×4 split; tests/test_sharded.py pins the
+multi-device bit-identity separately).
+
+The stream axes are chosen adversarially for the temporal paths:
 all-static (maximal skip), all-changing (skip must never fire wrongly),
 and single-pixel flicker (destructive edits every frame — the warm gate
 must fall back cold AND the strip mask must recompute exactly the
-touched strips).
+touched strips). The cost-counter tests at the bottom parametrize over
+every skip-capable backend and pin the acceptance property: the
+per-stage path shows the SAME launch/strip savings as fused on a static
+stream.
 """
 
 import jax
@@ -26,8 +38,15 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core.canny import CannyParams, canny_reference, make_canny
-from repro.core.patterns.dist import Dist
+from repro.core.canny import (
+    CannyParams,
+    UnsupportedFeature,
+    backend_specs,
+    canny_reference,
+    conformance_cells,
+    make_canny,
+)
+from repro.core.patterns.dist import LOCAL, Dist
 from repro.data.images import synthetic_image
 from repro.stream import TemporalCanny
 
@@ -35,35 +54,43 @@ PARAMS = CannyParams(sigma=1.4, radius=2, low=0.08, high=0.2)
 # odd sizes on purpose: below-halo heights, non-multiple-of-32 widths
 CORPUS_SIZES = [(37, 53), (64, 96), (21, 33), (48, 64)]
 
+CELLS = list(conformance_cells())
+SKIP_BACKENDS = [s.name for s in backend_specs() if s.skip and s.temporal_fn]
+STRIP_SKIP_BACKENDS = [
+    s.name for s in backend_specs()
+    if s.skip and s.temporal_fn and s.skip_granularity == "strip"
+]
 
-def _dist_1x1() -> Dist:
-    """A data×model mesh over whatever this host has (1 device in tier-1
-    CI): exercises the shard_map composition itself."""
-    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+def _cell_id(cell) -> str:
+    return f"{cell['backend']}-{'mesh' if cell['dist'] else 'local'}-{cell['mode']}"
+
+
+def _mesh_dist() -> Dist:
+    """A data×model mesh over whatever this host has: 1×1 in tier-1 CI
+    (the shard_map composition itself), 2×4 under the conformance job's
+    8 forced devices."""
+    n = len(jax.devices())
+    data = 2 if n >= 2 else 1
+    model = max(d for d in (1, 2, 4) if data * d <= n)
+    mesh = jax.make_mesh((data, model), ("data", "model"))
     return Dist(mesh=mesh, batch_axes=("data",), space_axis="model")
 
 
-def _detectors():
-    yield "jnp", make_canny(PARAMS, backend="jnp")
-    yield "fused", make_canny(PARAMS, backend="fused", bucket_multiple=32)
-    yield "fused+dist", make_canny(
-        PARAMS, _dist_1x1(), backend="fused", bucket_multiple=32
+def _make_detector(cell):
+    """Construct the cell's detector — the call that must either succeed
+    (supported) or raise UnsupportedFeature (unsupported)."""
+    dist = _mesh_dist() if cell["dist"] else LOCAL
+    if cell["mode"] == "cold":
+        return make_canny(PARAMS, dist, backend=cell["backend"], bucket_multiple=32)
+    return TemporalCanny(
+        PARAMS,
+        warm=True,
+        skip=cell["mode"] == "warm+skip",
+        backend=cell["backend"],
+        block_rows=16,
+        dist=dist,
     )
-    yield "warm", TemporalCanny(PARAMS, warm=True, block_rows=16)
-    yield "warm+skip", TemporalCanny(PARAMS, warm=True, skip=True, block_rows=16)
-    yield "jnp warm+skip", TemporalCanny(PARAMS, warm=True, skip=True, backend="jnp")
-
-
-# ---------------- corpus images --------------------------------------------
-@pytest.mark.parametrize("name", [n for n, _ in _detectors()])
-def test_corpus_images_bit_exact(name):
-    det = dict(_detectors())[name]
-    for i, (h, w) in enumerate(CORPUS_SIZES):
-        img = synthetic_image(h, w, seed=100 + i)
-        got = np.asarray(det(jnp.asarray(img)))
-        want = canny_reference(img, PARAMS)
-        assert got.shape == want.shape
-        assert (got == want).all(), f"{name} diverged on corpus image {h}x{w}"
 
 
 # ---------------- adversarial synthetic streams -----------------------------
@@ -97,57 +124,179 @@ STREAMS = {
 }
 
 
+# ---------------- the generated matrix --------------------------------------
+def test_matrix_is_generated_not_enumerated():
+    """Every registered backend contributes exactly the 6-cell lattice,
+    and at least the three shipped backends are present — the harness
+    cannot silently drop a backend or a feature axis."""
+    names = {c["backend"] for c in CELLS}
+    assert {"jnp", "pallas", "fused"} <= names
+    for name in names:
+        assert sum(c["backend"] == name for c in CELLS) == 6
+    # the shipped support surface: everything except warm-state-under-mesh
+    for c in CELLS:
+        want = not (c["dist"] and c["mode"] != "cold")
+        assert c["supported"] == want, c
+
+
+@pytest.mark.parametrize("cell", CELLS, ids=_cell_id)
+def test_conformance_corpus(cell):
+    if not cell["supported"]:
+        with pytest.raises(UnsupportedFeature):
+            _make_detector(cell)
+        return
+    det = _make_detector(cell)
+    for i, (h, w) in enumerate(CORPUS_SIZES):
+        img = synthetic_image(h, w, seed=100 + i)
+        got = np.asarray(det(jnp.asarray(img)))
+        want = canny_reference(img, PARAMS)
+        assert got.shape == want.shape
+        assert (got == want).all(), (
+            f"{_cell_id(cell)} diverged on corpus image {h}x{w}"
+        )
+
+
 @pytest.mark.parametrize("stream_name", list(STREAMS))
-@pytest.mark.parametrize("name", [n for n, _ in _detectors()])
-def test_streams_bit_exact(name, stream_name):
-    det = dict(_detectors())[name]
+@pytest.mark.parametrize(
+    "cell",
+    [c for c in CELLS if c["supported"]],
+    ids=_cell_id,
+)
+def test_conformance_streams(cell, stream_name):
+    det = _make_detector(cell)
     for i, frame in enumerate(STREAMS[stream_name]()):
         got = np.asarray(det(jnp.asarray(frame)))
         want = canny_reference(frame, PARAMS)
         assert (got == want).all(), (
-            f"{name} diverged on {stream_name} frame {i}"
+            f"{_cell_id(cell)} diverged on {stream_name} frame {i}"
         )
 
 
+# ---------------- fail-fast construction (no silent fallbacks) --------------
+def test_serving_requires_a_serving_entry():
+    """A stage-plane-only registration (the legacy register_backend path)
+    yields a capability-less spec: the engine must reject it at
+    construction with the missing feature named."""
+    from repro.core.canny.backends import _SPECS
+    from repro.core.canny.pipeline import register_backend
+    from repro.serve.engine import CannyEngine
+
+    register_backend("stub-stage-only", lambda img, params, ctx, **_: img)
+    try:
+        with pytest.raises(UnsupportedFeature, match="serving"):
+            CannyEngine(PARAMS, backend="stub-stage-only")
+    finally:  # the registry is process-global — leave no stub behind
+        _SPECS.pop("stub-stage-only", None)
+
+
+def test_jnp_backend_serves_everywhere():
+    """The portable backend is serving-complete too: CannyEngine with
+    backend='jnp' (no Pallas anywhere) stays bit-exact on mixed sizes."""
+    from repro.serve.engine import CannyEngine
+
+    engine = CannyEngine(PARAMS, backend="jnp", bucket_multiple=32, max_batch=4)
+    reqs = [synthetic_image(h, w, seed=60 + i)
+            for i, (h, w) in enumerate([(33, 47), (64, 64), (21, 90)])]
+    for req, edges in zip(reqs, engine.process(reqs)):
+        assert (edges == canny_reference(req, PARAMS)).all()
+
+
+def test_scheduler_rejects_skip_under_a_shared_mesh_detector():
+    from repro.stream import FarmScheduler
+
+    with pytest.raises(UnsupportedFeature, match="warm"):
+        FarmScheduler(PARAMS, skip=True, dist=_mesh_dist())
+
+
+def test_pod_worker_rejects_skip_on_a_mesh_rank():
+    from repro.stream import PodCtx, PodWorker
+
+    with pytest.raises(UnsupportedFeature, match="warm"):
+        PodWorker(PodCtx(0, 2), PARAMS, dist=_mesh_dist(), skip=True)
+
+
+def test_stage_plane_mesh_requires_stage_dist():
+    """pallas/fused distribute through their serving entry only: asking
+    for their stage plane (bucket_multiple=None) under a mesh must fail
+    at construction, not at trace time."""
+    for name in ("pallas", "fused"):
+        with pytest.raises(UnsupportedFeature, match="serving entry"):
+            make_canny(PARAMS, _mesh_dist(), backend=name, bucket_multiple=None)
+
+
 # ---------------- skip-path cost assertions ---------------------------------
-def test_warm_skip_static_stream_saves_frontend_launches():
-    """All-static: ONE front-end launch total (frame 0); every later
-    frame skips the launch entirely AND converges in one verifying
-    hysteresis sweep with zero productive dilations."""
-    det = TemporalCanny(PARAMS, warm=True, skip=True, block_rows=16)
+def _frontend_launches_per_frame(name: str) -> int:
+    """Measured, not assumed: frame 0 of a fresh stream reports how many
+    front-end launches one full recompute costs (1 fused, 3 per-stage)."""
+    det = TemporalCanny(PARAMS, warm=True, skip=True, backend=name, block_rows=16)
+    cost = det.step(jnp.asarray(_all_static(frames=1)[0]))[1]
+    return int(cost[2])
+
+
+@pytest.mark.parametrize("name", SKIP_BACKENDS)
+def test_warm_skip_static_stream_saves_frontend_launches(name):
+    """All-static: every frame after the first skips the whole front-end
+    (0 launches, 0 recomputed strips) and converges in one verifying
+    hysteresis sweep with zero productive dilations — the SAME savings
+    counters on every backend, per-stage included (acceptance criterion)."""
+    det = TemporalCanny(PARAMS, warm=True, skip=True, backend=name, block_rows=16)
     costs = [det.step(jnp.asarray(f))[1] for f in _all_static(frames=5)]
     tot = det.cost_totals()
-    assert tot["frontend_launches"] == 1, tot
-    for launches, dilations, fe_launches, fe_strips in costs[1:]:
-        assert int(fe_launches) == 0 and int(fe_strips) == 0
-        assert int(launches) == 1 and int(dilations) == 0
+    assert tot["frontend_launches"] == int(costs[0][2]), tot
+    for cost in costs[1:]:
+        launches, dilations = int(cost[0]), int(cost[1])
+        fe_launches = int(cost[2]) if len(cost) > 2 else 1
+        fe_strips = int(cost[3]) if len(cost) > 3 else 0
+        assert fe_launches == 0 and fe_strips == 0
+        assert launches == 1 and dilations == 0
 
 
-def test_warm_skip_changing_stream_never_skips():
-    det = TemporalCanny(PARAMS, warm=True, skip=True, block_rows=16)
+def test_per_stage_static_savings_match_fused():
+    """The acceptance row, explicitly: on a static stream the per-stage
+    warm+skip path reports bit-identical per-frame cost tuples to fused
+    from frame 1 on — (1 verify launch, 0 dilations, 0 front-end
+    launches, 0 recomputed strips)."""
+    costs = {}
+    for name in ("pallas", "fused"):
+        det = TemporalCanny(PARAMS, warm=True, skip=True, backend=name, block_rows=16)
+        costs[name] = [
+            tuple(int(c) for c in det.step(jnp.asarray(f))[1])
+            for f in _all_static(frames=5)
+        ]
+    assert costs["pallas"][1:] == costs["fused"][1:]
+    assert all(c == (1, 0, 0, 0) for c in costs["fused"][1:])
+
+
+@pytest.mark.parametrize("name", SKIP_BACKENDS)
+def test_warm_skip_changing_stream_never_skips(name):
+    det = TemporalCanny(PARAMS, warm=True, skip=True, backend=name, block_rows=16)
     frames = _all_changing(frames=4)
+    per_frame = _frontend_launches_per_frame(name)
     for frame in frames:
         det.step(jnp.asarray(frame))
     tot = det.cost_totals()
-    assert tot["frontend_launches"] == len(frames), tot
+    assert tot["frontend_launches"] == per_frame * len(frames), tot
 
 
-def test_warm_skip_flicker_recomputes_only_touched_strips():
-    """The flicker pixel sits in one 16-row strip; with the ±(radius+2)
-    halo it can dirty at most its two neighbours. Every other strip must
-    come from the stored front-end output."""
-    det = TemporalCanny(PARAMS, warm=True, skip=True, block_rows=16)
+@pytest.mark.parametrize("name", STRIP_SKIP_BACKENDS)
+def test_warm_skip_flicker_recomputes_only_touched_strips(name):
+    """The flicker pixel sits in one 16-row strip; with its stage halo it
+    can dirty at most the two neighbouring strips per stage launch. Every
+    other strip must come from the stored front-end output — on the
+    per-stage path this holds PER STAGE (each stage its own mask)."""
+    det = TemporalCanny(PARAMS, warm=True, skip=True, backend=name, block_rows=16)
     frames = _single_pixel_flicker(frames=5, h=48, w=64)
     n_strips = 48 // 16
+    per_frame = _frontend_launches_per_frame(name)
     for frame in frames:
         det.step(jnp.asarray(frame))
     tot = det.cost_totals()
-    # frame 0 computes all strips; frames 1.. recompute ≤ 3 of 3... strips
-    # touched by the flicker halo — strictly fewer tiles than full
-    full = len(frames) * n_strips
+    full = len(frames) * n_strips * per_frame
     assert 0 < tot["frontend_strips"] < full, tot
-    # frame 0 pays all strips; later frames pay only the dirtied ones
-    assert tot["frontend_strips"] <= n_strips + (len(frames) - 1) * 2, tot
+    # frame 0 pays all strips of every stage launch; later frames pay only
+    # the ≤2 strips per launch whose halo sees the flicker pixel
+    bound = per_frame * (n_strips + (len(frames) - 1) * 2)
+    assert tot["frontend_strips"] <= bound, tot
 
 
 def test_jnp_warm_skip_static_stream_saves_frontend_launches():
@@ -161,3 +310,15 @@ def test_jnp_warm_skip_static_stream_saves_frontend_launches():
 def test_skip_requires_warm():
     with pytest.raises(ValueError, match="skip"):
         TemporalCanny(PARAMS, warm=False, skip=True)
+
+
+def test_over_claiming_spec_fails_loudly():
+    """A spec that claims a feature its backend cannot deliver is caught
+    by the matrix contract: require() passes (the claim), so the cell
+    RUNS — meaning a bogus claim surfaces as a hard failure, not a skip.
+    Here: claims are internally consistent for all shipped specs."""
+    for spec in backend_specs():
+        if spec.skip:
+            assert spec.warm, f"{spec.name}: skip without warm is incoherent"
+        if spec.temporal_fn is None:
+            assert not (spec.warm or spec.skip), spec.name

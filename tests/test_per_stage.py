@@ -1,0 +1,147 @@
+"""Hypothesis property tests for the per-stage (backend="pallas") path.
+
+The per-stage backend earned the full pattern stack in the backend
+parity plane (dist/warm/skip — see kernels/staged.py); these properties
+hammer the shape edges the corpus misses: heights below the stage halo,
+widths off the 32-pixel packed-word grid, bucket padding that puts the
+true border mid-array (the sobel clamp fixes), and adversarial streams
+where the launch/strip counters must show the SAME savings as the fused
+path.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from _hypothesis_compat import given, settings, st
+
+from repro.core.canny import CannyParams, canny_reference, make_canny
+from repro.data.images import synthetic_image
+from repro.stream import TemporalCanny
+
+PARAMS = CannyParams(sigma=1.4, radius=2, low=0.08, high=0.2)
+SETTINGS = dict(max_examples=10, deadline=None)
+
+
+# ---------------- tiny/odd shapes through the serving path ------------------
+@given(h=st.integers(1, 40), w=st.integers(1, 70), seed=st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_staged_bucketed_tiny_and_odd_shapes_bit_exact(h, w, seed):
+    """The bucketed per-stage path pads every image up to a 32-multiple
+    bucket, so the TRUE border lands mid-array: the in-kernel true-size
+    anchoring (sobel neighbour clamp + magnitude zeroing) must reproduce
+    the oracle bit-for-bit on heights below the stage halo and widths off
+    the packed-word grid alike."""
+    img = synthetic_image(h, w, seed=seed)
+    det = make_canny(PARAMS, backend="pallas", bucket_multiple=32)
+    got = np.asarray(det(jnp.asarray(img)))
+    assert got.shape == img.shape
+    assert (got == canny_reference(img, PARAMS)).all()
+
+
+@given(h=st.integers(1, 24), w=st.integers(1, 48), seed=st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_staged_packed_word_tail_fallback(h, w, seed):
+    """bucket_multiple=16 produces bucket widths that need NOT divide 32
+    (48, 80, …): the local per-stage path must fall back to the padded-
+    mask hysteresis and stay bit-exact — the packed tail can neither
+    create nor destroy connectivity."""
+    img = synthetic_image(h, w, seed=seed)
+    det = make_canny(PARAMS, backend="pallas", bucket_multiple=16)
+    got = np.asarray(det(jnp.asarray(img)))
+    assert (got == canny_reference(img, PARAMS)).all()
+
+
+@given(
+    b=st.integers(1, 3), h=st.integers(5, 40), w=st.integers(5, 70),
+    seed=st.integers(0, 10_000),
+)
+@settings(**SETTINGS)
+def test_staged_batch_matches_per_image(b, h, w, seed):
+    """Batched per-stage serving == each image alone (the (batch, strip)
+    grid axis must not couple images)."""
+    imgs = np.stack([synthetic_image(h, w, seed=seed + i) for i in range(b)])
+    det = make_canny(PARAMS, backend="pallas", bucket_multiple=32)
+    got = np.asarray(det(jnp.asarray(imgs)))
+    for i in range(b):
+        assert (got[i] == canny_reference(imgs[i], PARAMS)).all()
+
+
+# ---------------- warm/skip stream properties -------------------------------
+def _steps(det, frames):
+    return [
+        tuple(int(c) for c in det.step(jnp.asarray(f))[1]) for f in frames
+    ]
+
+
+@given(
+    h=st.integers(9, 48), w=st.integers(9, 70),
+    frames=st.integers(2, 4), seed=st.integers(0, 10_000),
+)
+@settings(**SETTINGS)
+def test_staged_warm_skip_static_stream_matches_fused_savings(h, w, frames, seed):
+    """On an all-static stream of ANY shape (odd widths pad to the packed
+    grid with edge cols), frames after the first must report exactly
+    (1, 0, 0, 0) — one verifying hysteresis sweep, zero dilations, zero
+    front-end launches, zero recomputed strips — on the per-stage AND the
+    fused backend, and the edges must equal the oracle every frame."""
+    base = synthetic_image(h, w, seed=seed)
+    want = canny_reference(base, PARAMS)
+    costs = {}
+    for name in ("pallas", "fused"):
+        det = TemporalCanny(PARAMS, warm=True, skip=True, backend=name,
+                            block_rows=8)
+        got = []
+        costs[name] = []
+        for _ in range(frames):
+            e, c = det.step(jnp.asarray(base))
+            got.append(np.asarray(e))
+            costs[name].append(tuple(int(v) for v in c))
+        for i, e in enumerate(got):
+            assert (e == want).all(), f"{name} diverged on static frame {i}"
+    assert costs["pallas"][1:] == costs["fused"][1:]
+    assert all(c == (1, 0, 0, 0) for c in costs["pallas"][1:])
+
+
+@given(
+    h=st.integers(17, 48), w=st.integers(9, 70),
+    y=st.integers(0, 46), x=st.integers(0, 68), seed=st.integers(0, 10_000),
+)
+@settings(**SETTINGS)
+def test_staged_warm_skip_flicker_is_exact_and_localized(h, w, y, x, seed):
+    """A destructive single-pixel flicker anywhere: edges must stay
+    bit-exact (the warm gate falls back cold) and the per-stage strip
+    counters must recompute strictly fewer tiles than a full front-end
+    on the flicker frames (the masks localize the damage)."""
+    y, x = y % h, x % w
+    base = synthetic_image(h, w, seed=seed)
+    flick = base.copy()
+    flick[y, x] = 1.0
+    frames = [base, flick, base, flick]
+    det = TemporalCanny(PARAMS, warm=True, skip=True, backend="pallas",
+                        block_rows=8)
+    costs = []
+    for f in frames:
+        e, c = det.step(jnp.asarray(f))
+        assert (np.asarray(e) == canny_reference(f, PARAMS)).all()
+        costs.append(tuple(int(v) for v in c))
+    n_strips = -(-h // 8)
+    full = 3 * n_strips  # 3 stage launches × all strips
+    for c in costs[1:]:
+        assert c[3] <= full
+        if n_strips > 3:  # the flicker halo (±4 rows) spans < the frame
+            assert c[3] < full, (c, n_strips)
+
+
+@given(h=st.integers(9, 40), w=st.integers(9, 64), seed=st.integers(0, 10_000))
+@settings(**SETTINGS)
+def test_staged_warm_equals_cold_every_frame(h, w, seed):
+    """warm=True vs warm=False on a changing stream: identical bits on
+    every frame (the seed gate is exactness-preserving); only the cost
+    counters may differ."""
+    frames = [synthetic_image(h, w, seed=seed + i) for i in range(3)]
+    warm = TemporalCanny(PARAMS, warm=True, backend="pallas", block_rows=8)
+    cold = TemporalCanny(PARAMS, warm=False, backend="pallas", block_rows=8)
+    for f in frames:
+        ew, _ = warm.step(jnp.asarray(f))
+        ec, _ = cold.step(jnp.asarray(f))
+        assert (np.asarray(ew) == np.asarray(ec)).all()
+        assert (np.asarray(ec) == canny_reference(f, PARAMS)).all()

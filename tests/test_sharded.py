@@ -16,6 +16,7 @@ def test_sharded_canny_and_patterns():
     out = _sharded_canny_out()
     assert "ALL-OK" in out
     assert "sharded batched: OK" in out
+    assert "sharded stage plane: OK" in out
     assert "distributed scan: OK" in out
 
 
