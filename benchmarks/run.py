@@ -20,6 +20,11 @@ the LM table reads the dry-run artifacts.
                                  pod ranks over the same stream, cold vs
                                  warm+skip (static-strip front-end skip),
                                  rank-tagged reassembly, bit-exact
+  pod_churn_fps                  elastic recovery cost: the same 200-frame
+                                 stream through the elastic pod farm with
+                                 0/1/2 injected rank deaths (cold revival
+                                 re-admits the dead ranks), bit-identical
+                                 across every churn pattern
   per_stage_parity               backend parity plane: per-stage vs fused
                                  on identical serving + stream workloads,
                                  cold vs warm+skip, bit-exact asserted
@@ -362,6 +367,62 @@ def pod_farm_fps(frames=24, h=128, w=128, hold=6, block_rows=32):
     assert exact, "pod farm configurations diverged"
 
 
+def pod_churn_fps(frames=200, h=96, w=96, hold=6, ranks=3, block_rows=32):
+    """Elastic recovery cost (PR 6): the SAME deterministic 200-frame
+    stream through ``ElasticPodFarm`` with 0, 1, and 2 injected rank
+    deaths. Each death forces an epoch transition, re-ownership of the
+    dead rank's outstanding frames, and (``revive_after`` frames later) a
+    COLD re-admission of the rank at a fresh epoch. Churn may only move
+    wall clock and the recovery counters — every configuration's merged
+    stream must be bit-identical to the healthy (0-death) run."""
+    from repro.distributed import FaultInjector
+    from repro.stream import ElasticPodFarm, SyntheticStream, TemporalCanny
+
+    # compile outside the clock: the fused jit caches are module-level
+    TemporalCanny(PARAMS, warm=True, block_rows=block_rows).step(
+        jnp.asarray(synthetic_image(h, w, seed=99))
+    )
+
+    # kill points in per-rank cumulative-frame units: with a round-robin
+    # dispatch over `ranks` live ranks, nth≈frames/(3*ranks) lands the
+    # first death a third of the way in, the second two thirds in
+    third = max(1, frames // (3 * ranks))
+    plans = {
+        0: None,
+        1: FaultInjector(kill={(1, third)}),
+        2: FaultInjector(kill={(1, third), (2, 2 * third)}),
+    }
+    outs = {}
+    for n_deaths, injector in plans.items():
+        farm = ElasticPodFarm(
+            PARAMS, ranks=ranks, warm=True, block_rows=block_rows,
+            timeout=300.0, revive_after=3 * ranks, injector=injector,
+        )
+        source = SyntheticStream(frames, h, w, seed=0, hold=hold, n_moving=4)
+        t0 = time.perf_counter()
+        outs[n_deaths] = [np.asarray(e).copy() for e in farm.run(source)]
+        dt = time.perf_counter() - t0
+        rec = (
+            f" recovery_s={statistics.median(farm.recoveries_s):.2f}"
+            if farm.recoveries_s
+            else ""
+        )
+        row(
+            f"pod_churn_fps_deaths{n_deaths}",
+            dt / frames * 1e6,
+            f"{frames/dt:.2f} fps deaths={farm.deaths} "
+            f"epoch={farm.membership.epoch}{rec}",
+        )
+        assert farm.deaths == n_deaths, (n_deaths, farm.deaths, farm.events)
+    base = outs[0]
+    exact = all(
+        len(out) == frames and all((a == b).all() for a, b in zip(base, out))
+        for out in outs.values()
+    )
+    row("pod_churn_bit_exact", 0.0, f"deaths_0_1_2_identical={exact}")
+    assert exact, "churned streams diverged from the healthy run"
+
+
 def per_stage_parity(h=256, w=256, b=4, frames=24, hold=6, block_rows=32):
     """Backend parity plane (PR 5): per-stage vs fused on the SAME
     serving and streaming workloads, bit-exactness asserted.
@@ -484,6 +545,7 @@ def main() -> None:
     sharded_throughput()
     stream_fps()
     pod_farm_fps()
+    pod_churn_fps()
     per_stage_parity()
     roofline_table()
     path = write_artifact()

@@ -16,6 +16,17 @@ in input order. This module is the host-side scheduler for that shape:
     sequence number; the consumer sees exactly the input order (paper
     claim C4). The buffer is bounded by the same backpressure invariant:
     ``|reorder| ≤ n_workers · (queue_depth + 2)``.
+  * **worker restarts** (``max_restarts > 0``): a worker that raises is
+    REPLACED instead of tearing the stream down — its in-flight frames
+    (dispatched but unresulted) are re-fed to the replacement first, so
+    no sequence number is ever lost and emission order is unchanged.
+    ``worker_factory(k)`` builds the replacement (fresh state); without
+    a factory the original callable is retried (stateless workers).
+  * **bounded waits** (``timeout``): the consumer's result wait polls
+    under exponential backoff and raises a typed ``StreamTimeout`` once
+    ``timeout`` seconds pass with NO progress — a hung worker becomes a
+    catchable error, never a deadlock. The deadline is per-result:
+    every emitted frame resets it.
 
 Workers are either plain callables (item → result, run on a worker
 thread) or objects with a ``stream(items) → results`` iterator method
@@ -30,7 +41,10 @@ from __future__ import annotations
 import collections
 import queue
 import threading
+import time
 from typing import Callable, Iterable, Iterator, Sequence
+
+from repro.distributed.fault_tolerance import Backoff, StreamTimeout
 
 
 def put_cancellable(q: queue.Queue, msg, cancelled: Callable[[], bool]) -> bool:
@@ -47,15 +61,38 @@ def put_cancellable(q: queue.Queue, msg, cancelled: Callable[[], bool]) -> bool:
 
 
 class Farm:
-    """Farm executor over ``workers`` (callables or ``.stream`` objects)."""
+    """Farm executor over ``workers`` (callables or ``.stream`` objects).
 
-    def __init__(self, workers: Sequence, queue_depth: int = 2):
+    ``max_restarts`` dead workers are replaced (``worker_factory(k)``
+    builds the slot-``k`` replacement; default: retry the original
+    worker object) with their in-flight frames requeued; the
+    ``max_restarts + 1``-th death propagates to the consumer as before.
+    ``timeout`` bounds the consumer's per-result wait (exponential
+    backoff, ``StreamTimeout``); ``None`` preserves the unbounded wait.
+    """
+
+    def __init__(
+        self,
+        workers: Sequence,
+        queue_depth: int = 2,
+        max_restarts: int = 0,
+        worker_factory: Callable[[int], object] | None = None,
+        timeout: float | None = None,
+    ):
         if not workers:
             raise ValueError("farm needs at least one worker")
         if queue_depth < 1:
             raise ValueError("queue_depth must be >= 1")
+        if max_restarts < 0:
+            raise ValueError("max_restarts must be >= 0")
+        if timeout is not None and timeout <= 0:
+            raise ValueError("timeout must be positive (or None for unbounded)")
         self.workers = list(workers)
         self.queue_depth = queue_depth
+        self.max_restarts = max_restarts
+        self.worker_factory = worker_factory
+        self.timeout = timeout
+        self.restarts = 0  # cumulative across run()s, sampled by stats layers
         # live input queues, exposed for depth sampling by stats layers
         self.queues: list[queue.Queue] = []
 
@@ -96,16 +133,34 @@ class Farm:
                 for q in qs:
                     put_cancellable(q, None, cancelled)  # end-of-stream sentinels
 
-        def worker_loop(k: int) -> None:
-            w = self.workers[k]
-            seqs: collections.deque[int] = collections.deque()
+        threads: list[threading.Thread] = []
+
+        def worker_loop(k: int, w, preload: Sequence[tuple[int, object]]) -> None:
+            # every frame pulled but not yet resulted — what a restart
+            # must requeue so no sequence number is lost with the worker
+            pending: collections.deque[tuple[int, object]] = collections.deque()
 
             def items() -> Iterator:
+                for msg in preload:  # a dead predecessor's in-flight frames
+                    if state["cancel"]:
+                        return
+                    pending.append(msg)
+                    yield msg[1]
                 while True:
-                    msg = qs[k].get()
+                    try:
+                        msg = qs[k].get(timeout=0.1)
+                    except queue.Empty:
+                        # safety net for restarts: the predecessor may have
+                        # consumed this queue's end-of-stream sentinel, so
+                        # "feeder done + queue empty" must also terminate
+                        if state["cancel"] or (
+                            state["total"] is not None and qs[k].empty()
+                        ):
+                            return
+                        continue
                     if msg is None or state["cancel"]:
                         return
-                    seqs.append(msg[0])
+                    pending.append(msg)
                     yield msg[1]
 
             stream = getattr(w, "stream", None)
@@ -113,27 +168,77 @@ class Farm:
             try:
                 for res in results:
                     with cond:
-                        reorder[seqs.popleft()] = res
+                        reorder[pending.popleft()[0]] = res
                         cond.notify_all()
-            except BaseException as exc:  # noqa: BLE001 — relayed to consumer
-                post_error(exc)
+            except BaseException as exc:  # noqa: BLE001 — restart or relay
+                restart = False
+                with cond:
+                    if not state["cancel"] and self.restarts < self.max_restarts:
+                        self.restarts += 1
+                        restart = True
+                    elif state["error"] is None:
+                        state["error"] = exc
+                    cond.notify_all()
+                if not restart:
+                    return
+                try:
+                    new_w = (
+                        self.worker_factory(k)
+                        if self.worker_factory is not None
+                        else w
+                    )
+                    self.workers[k] = new_w
+                    t = threading.Thread(
+                        target=worker_loop,
+                        args=(k, new_w, list(pending)),
+                        daemon=True,
+                    )
+                    with cond:
+                        if state["cancel"]:
+                            return
+                        threads.append(t)
+                    t.start()
+                except BaseException as exc2:  # noqa: BLE001 — factory failed
+                    post_error(exc2)
 
-        threads = [threading.Thread(target=feeder, daemon=True)] + [
-            threading.Thread(target=worker_loop, args=(k,), daemon=True)
+        threads.append(threading.Thread(target=feeder, daemon=True))
+        threads.extend(
+            threading.Thread(
+                target=worker_loop, args=(k, self.workers[k], ()), daemon=True
+            )
             for k in range(n)
-        ]
-        for t in threads:
+        )
+        for t in list(threads):
             t.start()
+
+        def result_ready() -> bool:
+            return (
+                state["error"] is not None
+                or nxt in reorder
+                or (state["total"] is not None and nxt >= state["total"])
+            )
 
         nxt = 0
         try:
             while True:
                 with cond:
-                    cond.wait_for(
-                        lambda: state["error"] is not None
-                        or nxt in reorder
-                        or (state["total"] is not None and nxt >= state["total"])
-                    )
+                    if self.timeout is None:
+                        cond.wait_for(result_ready)
+                    else:
+                        # per-result deadline under exponential backoff: a
+                        # hung worker raises instead of parking us forever
+                        deadline = time.monotonic() + self.timeout
+                        for delay in Backoff().delays():
+                            if result_ready():
+                                break
+                            remaining = deadline - time.monotonic()
+                            if remaining <= 0:
+                                if result_ready():
+                                    break
+                                raise StreamTimeout(
+                                    f"farm result for seq {nxt}", self.timeout
+                                )
+                            cond.wait(timeout=min(delay, remaining))
                     if state["error"] is not None:
                         raise state["error"]
                     if nxt not in reorder:  # nxt == total: stream exhausted
@@ -142,13 +247,15 @@ class Farm:
                 yield res  # outside the lock: the consumer may be slow
                 nxt += 1
         finally:
-            state["cancel"] = True
+            with cond:
+                state["cancel"] = True
+                snapshot = list(threads)
             for q in qs:  # unblock workers parked on q.get()
                 try:
                     q.put_nowait(None)
                 except queue.Full:
                     pass
-            for t in threads:
+            for t in snapshot:
                 t.join(timeout=5.0)
 
 

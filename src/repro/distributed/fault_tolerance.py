@@ -15,16 +15,201 @@ checkpoints are mesh-agnostic, see checkpoint/). What this module adds:
   * ``RestartLoop`` — crash-resume driver: restore-latest → run →
     checkpoint every N steps → on failure, re-mesh and continue. The
     deterministic (seed, step) data pipeline makes the replay exact.
+  * ``StreamTimeout`` / ``Backoff`` / ``wait_for`` — the bounded-wait
+    primitives underneath every blocking call in the streaming plane
+    (farm result waits, engine ticket resolution, pod reassembly):
+    exponential-backoff polling with a hard deadline, so a hung rank
+    turns into a typed, catchable error instead of a deadlock.
+  * ``FaultInjector`` — deterministic, seedable fault schedules (kill a
+    worker mid-frame, stall a rank, drop a rank, delay heartbeats) that
+    drive the elastic pod farm's recovery paths from tests and
+    benchmarks without ever relying on real timing races.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
+import threading
 import time
-from typing import Callable
+from typing import Callable, Iterator
 
 import numpy as np
+
+
+class StreamTimeout(TimeoutError):
+    """A bounded wait in the streaming plane expired without progress.
+
+    Raised instead of hanging by every blocking call that takes a
+    ``timeout``: ``Farm.run`` result waits, ``CannyEngine`` drains and
+    ticket resolution, and the elastic pod farm's reassembly. Carries
+    what was being waited for and the budget that ran out.
+    """
+
+    def __init__(self, what: str, timeout: float):
+        super().__init__(f"timed out after {timeout:.3g}s waiting for {what}")
+        self.what = what
+        self.timeout = timeout
+
+
+@dataclasses.dataclass(frozen=True)
+class Backoff:
+    """Exponential-backoff delay schedule: ``initial · factor^k``, capped.
+
+    The polling shape every bounded wait shares: start fine-grained (so
+    fast paths resolve in ~a millisecond), grow geometrically (so long
+    waits cost O(log) wakeups, not a busy spin), never sleep past
+    ``cap`` (so cancellation/deadline checks stay responsive).
+    """
+
+    initial: float = 1e-3
+    factor: float = 2.0
+    cap: float = 0.25
+
+    def __post_init__(self):
+        if self.initial <= 0 or self.factor < 1.0 or self.cap < self.initial:
+            raise ValueError(f"bad backoff schedule: {self}")
+
+    def delays(self) -> Iterator[float]:
+        d = self.initial
+        while True:
+            yield d
+            d = min(d * self.factor, self.cap)
+
+
+def wait_for(
+    predicate: Callable[[], object],
+    timeout: float | None,
+    what: str = "condition",
+    backoff: Backoff = Backoff(),
+    clock: Callable[[], float] = time.monotonic,
+    sleep: Callable[[float], None] = time.sleep,
+):
+    """Poll ``predicate`` under exponential backoff until it is truthy.
+
+    Returns the predicate's (truthy) value. ``timeout=None`` waits
+    forever (still with backoff); otherwise raises ``StreamTimeout``
+    naming ``what`` once the deadline passes. The final poll happens AT
+    the deadline, so a predicate that becomes true exactly at timeout
+    still wins.
+    """
+    deadline = None if timeout is None else clock() + timeout
+    for delay in backoff.delays():
+        got = predicate()
+        if got:
+            return got
+        if deadline is not None:
+            remaining = deadline - clock()
+            if remaining <= 0:
+                got = predicate()  # one last look at the deadline
+                if got:
+                    return got
+                raise StreamTimeout(what, timeout)
+            delay = min(delay, remaining)
+        sleep(delay)
+    raise AssertionError("unreachable")  # pragma: no cover
+
+
+class InjectedFault(RuntimeError):
+    """A deterministic failure planted by ``FaultInjector`` — the elastic
+    plane must recover from it exactly as from a real worker death."""
+
+
+class FaultInjector:
+    """Deterministic fault schedule for the streaming/pod plane.
+
+    Faults are keyed by ``(rank, nth)`` where ``nth`` is the rank's
+    cumulative frame-processing count across worker restarts — a pure
+    function of the (deterministic) dispatch order, so a seeded schedule
+    replays identically on every run. Four fault kinds:
+
+      * ``kill``  — raise ``InjectedFault`` before frame ``nth`` runs
+        (a worker thread dying mid-frame). Fires ONCE: the restarted
+        worker re-runs the frame and proceeds.
+      * ``stall`` — sleep ``seconds`` before the frame (a straggling or
+        hung rank; with a heartbeat timeout shorter than the stall, the
+        membership layer declares the rank dead).
+      * ``drop``  — permanently disable a rank from its ``nth`` frame on
+        (every later frame raises; recovery must re-own its work).
+      * ``heartbeat_delay`` — per-rank seconds to subtract from the
+        heartbeat freshness, so death detection can be driven without
+        real waiting (tests feed it into an injected clock).
+
+    ``FaultInjector.seeded(seed, ranks, frames, ...)`` derives a random
+    schedule from a seed; the explicit constructor pins exact plans.
+    """
+
+    def __init__(
+        self,
+        kill: dict[tuple[int, int], str] | set[tuple[int, int]] | None = None,
+        stall: dict[tuple[int, int], float] | None = None,
+        drop: dict[int, int] | None = None,
+        heartbeat_delay: dict[int, float] | None = None,
+        sleep: Callable[[float], None] = time.sleep,
+    ):
+        kill = kill or {}
+        self.kill = (
+            {k: "injected kill" for k in kill} if isinstance(kill, set) else dict(kill)
+        )
+        self.stall = dict(stall or {})
+        self.drop = dict(drop or {})
+        self.heartbeat_delays = dict(heartbeat_delay or {})
+        self._sleep = sleep
+        self._lock = threading.Lock()
+        self._counts: dict[int, int] = {}
+        self.fired: list[tuple[str, int, int]] = []  # (kind, rank, nth)
+
+    @classmethod
+    def seeded(
+        cls,
+        seed: int,
+        ranks: int,
+        frames: int,
+        kills: int = 1,
+        stalls: int = 0,
+        stall_s: float = 0.5,
+        **kw,
+    ) -> "FaultInjector":
+        """Derive a deterministic schedule from ``seed``: ``kills`` kill
+        faults and ``stalls`` stall faults spread over distinct
+        (rank, nth) slots in the first ``frames`` frames. Same seed →
+        same schedule, always."""
+        rng = np.random.default_rng(seed)
+        per_rank = max(1, frames // max(ranks, 1))
+        slots = [(r, n) for r in range(ranks) for n in range(1, per_rank)]
+        if len(slots) < kills + stalls:
+            raise ValueError(
+                f"schedule needs {kills + stalls} distinct fault slots, "
+                f"only {len(slots)} available ({ranks} ranks x {per_rank} frames)"
+            )
+        picks = rng.choice(len(slots), size=kills + stalls, replace=False)
+        kill = {slots[int(i)]: f"seeded kill (seed={seed})" for i in picks[:kills]}
+        stall = {slots[int(i)]: stall_s for i in picks[kills:]}
+        return cls(kill=kill, stall=stall, **kw)
+
+    def before_frame(self, rank: int) -> None:
+        """Hook workers call before processing each frame: applies the
+        schedule for this rank's next cumulative frame index."""
+        with self._lock:
+            nth = self._counts.get(rank, 0)
+            self._counts[rank] = nth + 1
+            dropped = rank in self.drop and nth >= self.drop[rank]
+            reason = self.kill.pop((rank, nth), None)
+            stall_s = self.stall.get((rank, nth), 0.0)
+            if dropped or reason is not None:
+                self.fired.append(("drop" if dropped else "kill", rank, nth))
+            elif stall_s:
+                self.fired.append(("stall", rank, nth))
+        if stall_s:
+            self._sleep(stall_s)
+        if dropped:
+            raise InjectedFault(f"rank {rank} dropped (frame {nth})")
+        if reason is not None:
+            raise InjectedFault(f"rank {rank} killed at frame {nth}: {reason}")
+
+    def heartbeat_delay(self, rank: int) -> float:
+        """Seconds this rank's heartbeats lag (0 when unscheduled)."""
+        return self.heartbeat_delays.get(rank, 0.0)
 
 
 class StepWatchdog:
@@ -45,6 +230,14 @@ class StepWatchdog:
         assert self._t0 is not None, "step_start() not called"
         dt = self.clock() - self._t0
         self._t0 = None
+        return self.observe(dt, host_durations)
+
+    def observe(
+        self, dt: float, host_durations: dict[str, float] | None = None
+    ) -> dict:
+        """Feed an externally-measured duration (the streaming stats
+        plane measures per-frame compute itself); same report shape as
+        ``step_end``. Not thread-safe — callers serialize."""
         self.times.append(dt)
         self.times = self.times[-self.window :]
         report = {"duration": dt, "slow": False, "stragglers": []}
@@ -115,6 +308,10 @@ class RestartLoop:
         self.restarts = 0
 
     def run(self, state, total_steps: int, restore_template=None):
+        # the pristine input state: a restart with NO checkpoint on disk
+        # must replay from here, not from whatever partially-updated (or
+        # in-place-corrupted) state the failing step left behind
+        initial = state
         start = 0
         latest = self.ckpt.latest_step()
         if latest is not None:
@@ -132,6 +329,7 @@ class RestartLoop:
                     raise
                 latest = self.ckpt.latest_step()
                 if latest is None:
+                    state = initial
                     step = 0
                     continue
                 state, saved = self.ckpt.restore(

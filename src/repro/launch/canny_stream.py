@@ -67,6 +67,21 @@ def main():
         choices=[s.name for s in backend_specs() if s.temporal_fn],
         help="any registered temporal-capable backend (default: auto)",
     )
+    ap.add_argument(
+        "--timeout", type=float, default=None,
+        help="seconds to wait for any single result before raising "
+        "StreamTimeout (exponential-backoff polling; default: wait forever)",
+    )
+    ap.add_argument(
+        "--max-restarts", type=int, default=0,
+        help="replace up to K dead workers (in-flight frames requeued, "
+        "order and bits preserved) before the failure propagates",
+    )
+    ap.add_argument(
+        "--chaos-seed", type=int, default=None,
+        help="plant a seeded FaultInjector kill schedule (demo of the "
+        "restart plumbing; implies --max-restarts>=2 unless set higher)",
+    )
     ap.add_argument("--sigma", type=float, default=1.4)
     ap.add_argument("--low", type=float, default=0.08)
     ap.add_argument("--high", type=float, default=0.2)
@@ -92,6 +107,16 @@ def main():
             "--engine batches frames through one queue and cannot dispatch "
             "over pods; drop --engine or use a DATAxMODEL mesh"
         )
+    injector = None
+    max_restarts = args.max_restarts
+    if args.chaos_seed is not None:
+        from repro.distributed import FaultInjector
+
+        n_victims = pods if pods > 1 else args.workers
+        injector = FaultInjector.seeded(
+            args.chaos_seed, ranks=n_victims, frames=args.frames, kills=1
+        )
+        max_restarts = max(max_restarts, 2)
     sched = FarmScheduler(
         params,
         n_workers=args.workers,
@@ -101,6 +126,9 @@ def main():
         backend=args.backend,
         block_rows=args.block_rows,
         dist=dist,
+        max_restarts=max_restarts,
+        timeout=args.timeout,
+        injector=injector,
     )
     if args.engine:
         mode = "engine"
@@ -146,6 +174,17 @@ def main():
     n = sched.stats.frames
     print(f"\ndone: {n} frames in {dt:.2f}s → {n / dt:.2f} fps")
     print(sched.stats.summary())
+    stragglers = (
+        ", ".join(
+            f"{h} (x{c})"
+            for h, c in sched.stats.straggler_counts.most_common(3)
+        )
+        or "none"
+    )
+    print(
+        f"health: worker_restarts={sched.stats.restarts} "
+        f"slow_steps={sched.stats.slow_steps} stragglers: {stragglers}"
+    )
     for k, det in enumerate(sched.detectors):
         tot = det.cost_totals()
         print(

@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.core.canny.params import CannyParams
 from repro.core.patterns.dist import LOCAL, Dist
+from repro.distributed.fault_tolerance import StreamTimeout, wait_for
 
 
 def round_up(x: int, m: int) -> int:
@@ -213,6 +214,11 @@ class EngineStats:
         )
 
 
+# distinguishes "argument omitted → use the engine default" from an
+# explicit ``timeout=None`` (= wait unbounded)
+_UNSET = object()
+
+
 class Ticket:
     """Handle for a ``CannyEngine.submit`` request; resolves at drain."""
 
@@ -236,12 +242,27 @@ class Ticket:
         self._error = exc
         self._done = True
 
-    def result(self) -> np.ndarray:
+    def result(self, timeout: float | None = _UNSET) -> np.ndarray:
         """The uint8 edge map; drains the engine if still pending. Raises
-        the wave's exception if its ``process`` call failed."""
-        while not self._done:
-            if self._engine.drain() == 0 and not self._done:
-                time.sleep(1e-3)  # another thread's in-flight wave holds us
+        the wave's exception if its ``process`` call failed.
+
+        The wait is bounded: ``timeout`` (default: the engine's
+        ``timeout``) caps how long we poll — under exponential backoff —
+        for another thread's in-flight wave to resolve us, then raises
+        ``StreamTimeout`` instead of spinning forever on a hung wave.
+        ``timeout=None`` restores the unbounded wait.
+        """
+        if timeout is _UNSET:
+            timeout = self._engine.timeout
+
+        def resolved() -> bool:
+            if self._done:
+                return True
+            # drain(0): someone else's wave holds the lock — keep polling
+            self._engine.drain(timeout=0)
+            return self._done
+
+        wait_for(resolved, timeout, what="engine ticket result")
         if self._error is not None:
             raise self._error
         assert self._result is not None
@@ -265,6 +286,15 @@ class CannyEngine:
     ``dist`` makes ONE engine queue drain across a whole mesh: bucket
     batches pad to a multiple of the data-axis size and the kernels run
     inside shard_map, so every device works on every wave.
+
+    **Bounded waits**: ``timeout`` (seconds; ``None`` = unbounded, the
+    historical behaviour) is the default budget for every blocking call
+    on this engine — ``drain`` waiting on another thread's in-flight
+    wave, ``Ticket.result`` polling for resolution, and ``submit`` when
+    ``max_pending`` caps the admission queue. All of them poll under
+    exponential backoff and raise ``StreamTimeout`` when the budget runs
+    out, so a hung wave (dead device, stuck collective) surfaces as a
+    typed error instead of a deadlocked server.
     """
 
     def __init__(
@@ -276,6 +306,8 @@ class CannyEngine:
         interpret: bool | None = None,
         donate: bool | None = None,
         dist: Dist = LOCAL,
+        timeout: float | None = None,
+        max_pending: int | None = None,
     ):
         from repro.core.canny.backends import backend_spec
 
@@ -296,11 +328,17 @@ class CannyEngine:
                 f"mesh serving needs bucket_multiple % 32 == 0 (packed "
                 f"hysteresis words), got {bucket_multiple}"
             )
+        if timeout is not None and timeout <= 0:
+            raise ValueError("timeout must be positive (or None for unbounded)")
+        if max_pending is not None and max_pending < 1:
+            raise ValueError("max_pending must be >= 1 (or None for unbounded)")
         self.params = params
         self.backend = backend
         self.bucket_multiple = bucket_multiple
         self.max_batch = max_batch
         self.dist = dist
+        self.timeout = timeout
+        self.max_pending = max_pending
         self._cache = _BucketCache(serve_fn, params, interpret, donate, dist)
         self.stats = EngineStats()
         self._lock = threading.Lock()
@@ -311,24 +349,65 @@ class CannyEngine:
         self._pending: list[tuple[np.ndarray, Ticket]] = []
 
     # -- async request plane ------------------------------------------------
-    def submit(self, image: np.ndarray) -> Ticket:
-        """Enqueue one (h, w) image; resolves at the next ``drain``."""
+    def submit(self, image: np.ndarray, timeout: float | None = _UNSET) -> Ticket:
+        """Enqueue one (h, w) image; resolves at the next ``drain``.
+
+        With ``max_pending`` set, admission is bounded: a full queue
+        polls (exponential backoff) for space freed by a concurrent
+        drain and raises ``StreamTimeout`` when ``timeout`` (default:
+        the engine's) expires — load-shedding instead of unbounded
+        buffering when the drain side is stuck.
+        """
         if image.ndim != 2:
             raise ValueError(f"expected (h,w), got {image.shape}")
+        if timeout is _UNSET:
+            timeout = self.timeout
         ticket = Ticket(self)
-        with self._lock:
-            self._pending.append((image, ticket))
+
+        def admitted() -> bool:
+            with self._lock:
+                if (
+                    self.max_pending is not None
+                    and len(self._pending) >= self.max_pending
+                ):
+                    return False
+                self._pending.append((image, ticket))
+                return True
+
+        wait_for(
+            admitted, timeout,
+            what=f"engine admission (max_pending={self.max_pending})",
+        )
         return ticket
 
-    def drain(self) -> int:
+    def drain(self, timeout: float | None = _UNSET) -> int:
         """Run every pending request as one wave; returns how many ran.
 
         ``_drain_lock`` serializes whole waves, so concurrent drains (e.g.
         two threads calling ``Ticket.result``) never run ``process`` — and
         its stats/bucket-cache updates — in parallel. A failing wave fails
         its tickets (``result`` re-raises) instead of stranding them.
+
+        The wait for another thread's in-flight wave is bounded by
+        ``timeout`` (default: the engine's; ``None`` = unbounded) under
+        exponential backoff → ``StreamTimeout``. ``timeout=0`` is the
+        non-blocking probe ``Ticket.result`` polls with: if a wave is in
+        flight, return 0 immediately rather than queueing behind it.
         """
-        with self._drain_lock:
+        if timeout is _UNSET:
+            timeout = self.timeout
+        if timeout == 0:
+            if not self._drain_lock.acquire(blocking=False):
+                return 0
+        elif timeout is None:
+            self._drain_lock.acquire()
+        else:
+            wait_for(
+                lambda: self._drain_lock.acquire(blocking=False),
+                timeout,
+                what="engine drain (another wave in flight)",
+            )
+        try:
             with self._lock:
                 pending, self._pending = self._pending, []
             if not pending:
@@ -342,6 +421,8 @@ class CannyEngine:
             for (_, ticket), res in zip(pending, results):
                 ticket._resolve(res)
             return len(pending)
+        finally:
+            self._drain_lock.release()
 
     # -- request plane -----------------------------------------------------
     def process(self, images: Sequence[np.ndarray]) -> list[np.ndarray]:

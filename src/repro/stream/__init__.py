@@ -16,7 +16,18 @@ from repro.stream.sources import (
     SyntheticStream,
     write_npy_sequence,
 )
-from repro.stream.pod import PodCtx, PodWorker, pod_workers, reassemble, strided
+from repro.stream.pod import (
+    ElasticPodFarm,
+    PodCtx,
+    PodMembership,
+    PodWorker,
+    elastic_pod_dist,
+    owns,
+    pod_workers,
+    reassemble,
+    reassemble_elastic,
+    strided,
+)
 from repro.stream.temporal import TemporalCanny
 from repro.stream.scheduler import FarmScheduler, StreamStats, StreamWorker
 
@@ -26,10 +37,15 @@ __all__ = [
     "Prefetcher",
     "SyntheticStream",
     "write_npy_sequence",
+    "ElasticPodFarm",
     "PodCtx",
+    "PodMembership",
     "PodWorker",
+    "elastic_pod_dist",
+    "owns",
     "pod_workers",
     "reassemble",
+    "reassemble_elastic",
     "strided",
     "TemporalCanny",
     "FarmScheduler",

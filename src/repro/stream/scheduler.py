@@ -37,6 +37,7 @@ import numpy as np
 from repro.core.canny.params import CannyParams
 from repro.core.patterns.farm import Farm
 from repro.core.patterns.pipeline import PatternPipeline
+from repro.distributed.fault_tolerance import FaultInjector, StepWatchdog
 from repro.serve.engine import percentile
 from repro.stream.temporal import TemporalCanny
 
@@ -66,15 +67,32 @@ class StreamStats:
     batch_sizes: collections.Counter = dataclasses.field(
         default_factory=collections.Counter
     )
+    # health plane: worker restarts (sampled from the farm), watchdog-
+    # flagged slow steps, and per-worker straggler flag counts — the
+    # per-host report the controller uses to exclude a sick rank
+    restarts: int = 0
+    slow_steps: int = 0
+    straggler_counts: collections.Counter = dataclasses.field(
+        default_factory=collections.Counter
+    )
+    watchdog: StepWatchdog | None = None
     _lock: threading.Lock = dataclasses.field(default_factory=threading.Lock)
 
     def record_prep(self, ms: float) -> None:
         with self._lock:
             self.prep_ms.append(ms)
 
-    def record_compute(self, ms: float) -> None:
+    def record_compute(self, ms: float, host: str | None = None) -> None:
         with self._lock:
             self.compute_ms.append(ms)
+            if self.watchdog is not None:
+                report = self.watchdog.observe(
+                    ms / 1e3, {host: ms / 1e3} if host else None
+                )
+                if report["slow"]:
+                    self.slow_steps += 1
+                for h in report["stragglers"]:
+                    self.straggler_counts[h] += 1
 
     def record_cost(
         self,
@@ -117,6 +135,15 @@ class StreamStats:
         )
         if self.batch_sizes:
             line += f" micro_batch~{self.mean_batch_size():.1f}"
+        if self.restarts or self.slow_steps or self.straggler_counts:
+            line += (
+                f" health: restarts={self.restarts} slow_steps={self.slow_steps}"
+            )
+            if self.straggler_counts:
+                worst = ",".join(
+                    f"{h}x{c}" for h, c in self.straggler_counts.most_common(3)
+                )
+                line += f" stragglers={worst}"
         return line
 
 
@@ -126,6 +153,12 @@ class StreamWorker:
     ``step`` maps a device frame to ``(edges, cost)`` (cost may be None
     for stateless detectors). The inner ``PatternPipeline`` keeps one
     frame's transfer in flight while the previous frame computes.
+
+    ``rank``/``injector`` are the fault-injection hook: the injector's
+    schedule is consulted before every frame this worker computes, so a
+    planted kill surfaces exactly like a real worker death (and the
+    farm's restart plumbing handles both identically). ``name`` labels
+    the worker in the watchdog's straggler report.
     """
 
     def __init__(
@@ -133,12 +166,20 @@ class StreamWorker:
         step: Callable,
         stats: StreamStats,
         device=None,
+        name: str | None = None,
+        rank: int = 0,
+        injector: FaultInjector | None = None,
     ):
         self.step = step
         self.stats = stats
         self.device = device
+        self.name = name
+        self.rank = rank
+        self.injector = injector
 
     def _run_step(self, x):
+        if self.injector is not None:
+            self.injector.before_frame(self.rank)
         out = self.step(x)
         return out if isinstance(out, tuple) else (out, None)
 
@@ -154,7 +195,7 @@ class StreamWorker:
         for edges, cost in pipe.run(prepped()):
             t1 = time.perf_counter()
             out = np.asarray(edges)  # blocks until the device result lands
-            self.stats.record_compute((time.perf_counter() - t1) * 1e3)
+            self.stats.record_compute((time.perf_counter() - t1) * 1e3, self.name)
             if cost is not None:
                 self.stats.record_cost(*(int(c) for c in cost))
             yield out
@@ -192,6 +233,10 @@ class FarmScheduler:
         detector: Callable | None = None,
         devices=None,
         dist=None,
+        max_restarts: int = 0,
+        timeout: float | None = None,
+        injector: FaultInjector | None = None,
+        watchdog: StepWatchdog | None = None,
     ):
         devices = list(devices) if devices is not None else jax.local_devices()
         if n_workers is None:
@@ -199,7 +244,11 @@ class FarmScheduler:
         self.params = params
         self.warm = warm
         self.dist = dist
+        self.injector = injector
         self.stats = StreamStats()
+        # watchdog on by default: slow-step/straggler counts cost one
+        # median over a 50-sample window per frame and feed summary()
+        self.stats.watchdog = watchdog if watchdog is not None else StepWatchdog()
         self.detectors: list = []
         self.pods: list = []
         if detector is None and dist is not None and dist.pod_size() > 1:
@@ -216,8 +265,29 @@ class FarmScheduler:
                 backend=backend, block_rows=block_rows,
             )
             self.detectors = [w.temporal for w in self.pods if w.temporal]
-            workers = [StreamWorker(w.step, self.stats) for w in self.pods]
-            self.farm = Farm(workers, queue_depth=queue_depth)
+            workers = [
+                StreamWorker(
+                    w.step, self.stats,
+                    name=f"rank{k}", rank=k, injector=injector,
+                )
+                for k, w in enumerate(self.pods)
+            ]
+
+            def remake_rank(k: int) -> StreamWorker:
+                # cold restart: the dead incarnation's warm/skip state is
+                # untrustworthy (PodWorker.reset docstring) — and cold is
+                # always bit-exact, so only sweep cost is lost
+                self.pods[k].reset()
+                return StreamWorker(
+                    self.pods[k].step, self.stats,
+                    name=f"rank{k}", rank=k, injector=injector,
+                )
+
+            self.farm = Farm(
+                workers, queue_depth=queue_depth,
+                max_restarts=max_restarts, worker_factory=remake_rank,
+                timeout=timeout,
+            )
             return
         if detector is None and dist is not None and not dist.is_local:
             from repro.core.canny.backends import UnsupportedFeature
@@ -253,8 +323,30 @@ class FarmScheduler:
                 )
                 self.detectors.append(t)
                 step = t.step
-            workers.append(StreamWorker(step, self.stats, devices[k % len(devices)]))
-        self.farm = Farm(workers, queue_depth=queue_depth)
+            workers.append(
+                StreamWorker(
+                    step, self.stats, devices[k % len(devices)],
+                    name=f"worker{k}", rank=k, injector=injector,
+                )
+            )
+
+        def remake_worker(k: int) -> StreamWorker:
+            # per-worker TemporalCanny: reset to cold before reuse
+            # (detectors[k] aligns with worker k on the stateful path;
+            # shared detectors are stateless, reused as-is)
+            if k < len(self.detectors):
+                self.detectors[k].reset()
+            old = self.farm.workers[k]
+            return StreamWorker(
+                old.step, self.stats, old.device,
+                name=old.name, rank=k, injector=injector,
+            )
+
+        self.farm = Farm(
+            workers, queue_depth=queue_depth,
+            max_restarts=max_restarts, worker_factory=remake_worker,
+            timeout=timeout,
+        )
 
     def run(self, source: Iterable[np.ndarray]) -> Iterator[np.ndarray]:
         """Yield uint8 edge maps in frame order; updates ``self.stats``."""
@@ -262,6 +354,7 @@ class FarmScheduler:
         for edges in self.farm.run(source):
             self.stats.frames += 1
             self.stats.queue_depth.append(sum(self.farm.queue_depths()))
+            self.stats.restarts = self.farm.restarts
             self.stats.wall_s = time.perf_counter() - t0
             yield edges
 
@@ -271,6 +364,7 @@ class FarmScheduler:
         engine=None,
         max_batch: int = 8,
         adaptive: bool = True,
+        timeout: float | None = None,
     ) -> Iterator[np.ndarray]:
         """Micro-batching path: frames ride ``CannyEngine.submit``/``drain``.
 
@@ -287,6 +381,11 @@ class FarmScheduler:
         chosen sizes land in ``stats.batch_sizes``. Frame order and edge
         bits are identical either way (wave boundaries only group work).
         ``adaptive=False`` restores the fixed-size waves.
+
+        ``timeout`` bounds every engine wait (drain-lock contention and
+        ticket resolution) with a ``StreamTimeout``; ``None`` defers to
+        the engine's own default (unbounded for a default-constructed
+        engine).
         """
         if self.dist is not None and self.dist.pod_size() > 1:
             raise ValueError(
@@ -298,7 +397,8 @@ class FarmScheduler:
             from repro.serve.engine import CannyEngine
 
             engine = CannyEngine(
-                self.params, max_batch=max_batch, dist=self.dist or LOCAL
+                self.params, max_batch=max_batch, dist=self.dist or LOCAL,
+                timeout=timeout,
             )
         t0 = time.perf_counter()
         pending = []
@@ -306,11 +406,14 @@ class FarmScheduler:
 
         def flush():
             self.stats.record_batch_size(len(pending))
-            engine.drain()
+            if timeout is None:
+                engine.drain()
+            else:
+                engine.drain(timeout=timeout)
             for ticket in pending:
                 self.stats.frames += 1
                 self.stats.wall_s = time.perf_counter() - t0
-                yield ticket.result()
+                yield ticket.result() if timeout is None else ticket.result(timeout)
             pending.clear()
 
         for frame in source:

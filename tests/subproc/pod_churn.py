@@ -1,0 +1,288 @@
+"""Elastic pod churn harness — rank death, re-ownership, and revival.
+
+Two faces, one file (same shape as pod_farm.py):
+
+  * **orchestrator** (no ``--rank``): computes the healthy single-host
+    oracle, then FORKS one real JAX process per pod rank and drives a
+    scripted churn timeline against the REAL membership/ownership code:
+
+      epoch 0  ranks {0,1,2} process frames under ``owns(seq, roster)``
+      epoch 1  rank 1 is SIGKILLed MID-FRAME (stalled on purpose so the
+               kill lands inside compute); its in-flight seq re-owns to
+               a survivor and is re-dispatched
+      epoch 2  rank 2 drains voluntarily (clean leave)
+      epoch 3  rank 1 REVIVES as a fresh cold process and takes work
+
+    A late "zombie replay" re-computes an already-owned seq on the
+    revived rank; first-writer-wins reassembly must drop it after a
+    bit-exact cross-check. The merged stream must equal the healthy
+    oracle bit for bit, in order — and every wait in the orchestrator
+    is bounded (``wait_for`` + timeout), so no child failure mode can
+    deadlock the harness.
+
+  * **rank child** (``--rank R --out DIR``): a real host's loop — reads
+    ``FRAME s`` / ``STALL s`` / ``EXIT`` commands on stdin, derives
+    frame ``s`` from the shared deterministic source (pure function of
+    the constants below), detects with its OWN warm ``TemporalCanny``,
+    writes ``DIR/seq<s>.npy`` and acks ``DONE s``. No sibling
+    coordination whatsoever.
+
+The orchestrator also runs the IN-PROCESS ``ElasticPodFarm`` against a
+seeded ``FaultInjector`` matrix (kills + stalls derived from seeds) —
+every seed must recover to the same bit-identical stream.
+
+Run via tests/test_pod_churn.py (which forces the virtual device count)
+or the CI fault-injection job.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import pathlib
+import queue
+import signal
+import subprocess
+import sys
+import tempfile
+import threading
+import time
+
+assert "xla_force_host_platform_device_count" in os.environ.get("XLA_FLAGS", ""), (
+    "run me via tests/test_pod_churn.py (or set "
+    "XLA_FLAGS=--xla_force_host_platform_device_count=8)"
+)
+
+import numpy as np
+
+from repro.core.canny import CannyParams, canny_reference
+from repro.distributed import FaultInjector, wait_for
+from repro.stream import (
+    ElasticPodFarm,
+    PodMembership,
+    SyntheticStream,
+    TemporalCanny,
+    owns,
+    reassemble_elastic,
+)
+
+PARAMS = CannyParams(sigma=1.4, radius=2, low=0.08, high=0.2)
+FRAMES, H, W, HOLD, SEED, BLOCK_ROWS = 12, 48, 64, 2, 0, 16
+STALL_S = 1.0  # child-side stall so a SIGKILL lands mid-frame
+CHILD_TIMEOUT = 120.0  # bound on every per-child wait (READY / DONE)
+
+
+def make_source() -> SyntheticStream:
+    return SyntheticStream(FRAMES, H, W, seed=SEED, hold=HOLD)
+
+
+# ---------------------------------------------------------------------------
+def run_rank(rank: int, out: str) -> None:
+    """One pod rank = one real JAX process obeying stdin commands."""
+    outdir = pathlib.Path(out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    det = TemporalCanny(PARAMS, warm=True, block_rows=BLOCK_ROWS)
+    src = make_source()
+    print("READY", flush=True)
+    for line in sys.stdin:
+        parts = line.split()
+        if not parts or parts[0] == "EXIT":
+            break
+        if parts[0] == "STALL":
+            time.sleep(STALL_S)  # a hung rank: the kill window
+        s = int(parts[1])
+        edges = np.asarray(det(np.asarray(src.frame(s), np.float32)))
+        np.save(outdir / f"seq{s}.npy", edges)
+        print(f"DONE {s}", flush=True)
+
+
+class RankProc:
+    """Orchestrator's handle on one child: line-queue stdout reader (so
+    every read is a bounded poll, not a blocking pipe), stderr to a file
+    (pipes would deadlock a chatty dying child)."""
+
+    def __init__(self, rank: int, tmp: pathlib.Path, incarnation: int = 0):
+        self.rank = rank
+        self.outdir = tmp / f"rank{rank}_gen{incarnation}"
+        env = dict(os.environ)
+        env["PYTHONPATH"] = str(pathlib.Path(__file__).resolve().parents[2] / "src")
+        self.errfile = open(tmp / f"rank{rank}_gen{incarnation}.err", "w")
+        self.proc = subprocess.Popen(
+            [sys.executable, __file__, "--rank", str(rank),
+             "--out", str(self.outdir)],
+            env=env, stdin=subprocess.PIPE, stdout=subprocess.PIPE,
+            stderr=self.errfile, text=True,
+        )
+        self.lines: queue.Queue[str] = queue.Queue()
+        self.results: list[tuple[int, int, np.ndarray]] = []  # (seq, epoch, edges)
+
+        def reader() -> None:
+            for line in self.proc.stdout:
+                self.lines.put(line.strip())
+
+        threading.Thread(target=reader, daemon=True).start()
+
+    def send(self, cmd: str) -> None:
+        self.proc.stdin.write(cmd + "\n")
+        self.proc.stdin.flush()
+
+    def _poll_line(self):
+        try:
+            return self.lines.get_nowait()
+        except queue.Empty:
+            return False
+
+    def expect(self, want: str) -> None:
+        got = wait_for(
+            self._poll_line, CHILD_TIMEOUT,
+            what=f"rank {self.rank}: '{want}' "
+            f"(stderr: {self.errfile.name})",
+        )
+        assert got == want, f"rank {self.rank}: expected '{want}', got '{got}'"
+
+    def compute(self, seq: int, epoch: int, stall: bool = False) -> None:
+        self.send(f"{'STALL' if stall else 'FRAME'} {seq}")
+        if stall:
+            return  # caller will kill mid-frame; no DONE is coming
+        self.expect(f"DONE {seq}")
+        self.results.append((seq, epoch, np.load(self.outdir / f"seq{seq}.npy")))
+
+    def kill(self) -> None:
+        self.proc.send_signal(signal.SIGKILL)
+        self.proc.wait(timeout=30)
+
+    def drain(self) -> None:
+        self.send("EXIT")
+        assert self.proc.wait(timeout=30) == 0, f"rank {self.rank} drain failed"
+
+
+# ---------------------------------------------------------------------------
+def healthy_oracle() -> list[np.ndarray]:
+    det = TemporalCanny(PARAMS, warm=True, block_rows=BLOCK_ROWS)
+    ref = [np.asarray(det(np.asarray(f, np.float32))) for f in make_source()]
+    want = canny_reference(make_source().frame(3), PARAMS)
+    assert (ref[3] == want).all(), "oracle diverged from canny_reference"
+    return ref
+
+
+def check_forked_churn(ref: list[np.ndarray], tmp: pathlib.Path) -> None:
+    """The scripted kill → re-own → drain → revive timeline."""
+    members = PodMembership(range(3), heartbeat_timeout=1e9)  # epochs driven explicitly
+    procs = {r: RankProc(r, tmp) for r in range(3)}
+    streams = [procs[r] for r in range(3)]
+    for p in procs.values():
+        p.expect("READY")
+
+    def dispatch(seq: int, stall: bool = False):
+        owner = members.owner(seq)
+        procs[owner].compute(seq, members.epoch, stall=stall)
+        return owner
+
+    # epoch 0: healthy ownership over the full roster
+    for seq in range(4):
+        assert dispatch(seq) == owns(seq, (0, 1, 2))
+
+    # epoch 1: rank 1 dies MID-FRAME on seq 4 (stalled → SIGKILL window)
+    assert members.owner(4) == 1
+    procs[1].compute(4, members.epoch, stall=True)
+    time.sleep(0.2)  # inside the child's stall, before it computes
+    procs[1].kill()
+    assert not (procs[1].outdir / "seq4.npy").exists(), (
+        "kill landed after the frame — no orphan to recover"
+    )
+    members.leave(1, reason="SIGKILL mid-frame")
+    new_owner = members.owner(4)  # the orphan re-owns deterministically
+    assert new_owner == owns(4, (0, 2)) and new_owner != 1
+    procs[new_owner].compute(4, members.epoch)
+    for seq in range(5, 8):
+        dispatch(seq)
+
+    # epoch 2: rank 2 drains voluntarily
+    procs[2].drain()
+    members.leave(2, reason="drain")
+    assert members.roster() == (0,)
+    for seq in range(8, 10):
+        assert dispatch(seq) == 0
+
+    # epoch 3: rank 1 revives as a fresh COLD process and takes work
+    procs[1] = RankProc(1, tmp, incarnation=1)
+    streams.append(procs[1])
+    procs[1].expect("READY")
+    members.join(1, reason="revived")
+    assert members.roster() == (0, 1)
+    for seq in range(10, FRAMES):
+        dispatch(seq)
+
+    # zombie replay: the revived rank re-computes an already-owned seq;
+    # first-writer-wins must DROP it after a bit-exact cross-check
+    procs[1].compute(3, members.epoch)
+
+    for p in procs.values():
+        if p.proc.poll() is None:
+            p.drain()
+
+    assert members.epoch == 3 and len(members.history) == 4, members.history
+    merged = list(
+        reassemble_elastic([p.results for p in streams], expect=FRAMES)
+    )
+    assert len(merged) == FRAMES
+    for i, (g, w) in enumerate(zip(merged, ref)):
+        assert (g == w).all(), f"churned stream: frame {i} diverged from oracle"
+    print("forked churn (kill mid-frame / drain / revive): bit-identical OK")
+
+    # the gap property: drop the re-owned seq 4 and reassembly must name it
+    pruned = [
+        [(s, e, x) for s, e, x in p.results if s != 4] for p in streams
+    ]
+    try:
+        list(reassemble_elastic(pruned, expect=FRAMES))
+        raise AssertionError("reassembly accepted a never-re-owned gap")
+    except RuntimeError as exc:
+        assert "4" in str(exc)
+    print("forked churn gap detection: OK")
+
+
+def check_seeded_matrix(ref: list[np.ndarray]) -> None:
+    """In-process ElasticPodFarm under seeded fault schedules: every
+    seed's kills/stalls must recover to the exact oracle stream."""
+    for seed in (0, 1, 2):
+        inj = FaultInjector.seeded(
+            seed, ranks=3, frames=FRAMES, kills=2, stalls=1, stall_s=0.2
+        )
+        farm = ElasticPodFarm(
+            PARAMS, ranks=3, warm=True, block_rows=BLOCK_ROWS,
+            timeout=120.0, revive_after=3, injector=inj,
+        )
+        got = list(farm.run(make_source()))
+        assert len(got) == FRAMES
+        for i, (g, w) in enumerate(zip(got, ref)):
+            assert (np.asarray(g) == w).all(), (
+                f"seed {seed}: frame {i} diverged (events {farm.events})"
+            )
+        assert farm.deaths >= 1, f"seed {seed}: no death fired ({inj.fired})"
+        print(
+            f"seeded injector matrix seed={seed}: OK "
+            f"(deaths={farm.deaths} events={farm.events} "
+            f"final_epoch={farm.membership.epoch})"
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rank", type=int, default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.rank is not None:
+        run_rank(args.rank, args.out)
+        return
+
+    ref = healthy_oracle()
+    print("healthy oracle: OK")
+    with tempfile.TemporaryDirectory() as d:
+        check_forked_churn(ref, pathlib.Path(d))
+    check_seeded_matrix(ref)
+    print("ALL-OK")
+
+
+if __name__ == "__main__":
+    main()

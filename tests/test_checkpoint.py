@@ -101,6 +101,29 @@ def test_restart_loop_survives_failures(tmp_path):
     assert int(resumed["step"]) == 19
 
 
+def test_restart_loop_restarts_from_scratch_without_checkpoint(tmp_path):
+    """A failure with NO checkpoint on disk (step 0 dies before the
+    first save) must replay from the pristine initial state at step 0 —
+    the step function itself pins both: it sees x == 0 at step 0 on
+    every attempt."""
+    ck = Checkpointer(tmp_path, keep=5)
+    attempts = {"n": 0}
+
+    def run_step(state, step):
+        if step == 0:
+            assert int(state["x"]) == 0, "restart did not restore the initial state"
+            attempts["n"] += 1
+            if attempts["n"] == 1:
+                raise DeviceFailure("chip lost before the first checkpoint")
+        return {"x": state["x"] + 1}
+
+    loop = RestartLoop(ck, run_step, save_every=5)
+    final = loop.run({"x": jnp.asarray(0)}, total_steps=5)
+    assert loop.restarts == 1
+    assert attempts["n"] == 2  # step 0 ran again, from scratch
+    assert int(final["x"]) == 5  # exact replay: 5 successful steps
+
+
 def test_watchdog_flags_slow_steps():
     t = [0.0]
 
@@ -134,3 +157,46 @@ def test_elastic_plan():
     assert 256 % p2.mesh_shape[0] == 0
     p3 = plan_elastic_mesh(7, 64)  # odd survivor count
     assert p3.mesh_shape[1] == 1
+
+
+def test_elastic_plan_small_pools():
+    """The rank-slice sizes the elastic pod farm actually re-buckets:
+    6 and 12 host devices."""
+    p6 = plan_elastic_mesh(6, 8, prefer_model=2)
+    data, model = p6.mesh_shape
+    assert model == 2 and data * model == p6.n_devices <= 6
+    assert 8 % data == 0
+    p12 = plan_elastic_mesh(12, 8, prefer_model=4)
+    data, model = p12.mesh_shape
+    assert model == 4 and 8 % data == 0 and data * model == p12.n_devices
+
+
+def test_elastic_plan_indivisible_global_batch():
+    """Batch divisibility wins over device count: data shrinks by powers
+    of two until it divides the global batch."""
+    p = plan_elastic_mesh(8, 6, prefer_model=1)  # 6 % 8 != 0, 6 % 4 != 0
+    data, model = p.mesh_shape
+    assert model == 1 and data == 2 and 6 % data == 0
+    assert p.n_devices == 2  # the rest go unused rather than misdivide
+
+
+def test_elastic_plan_prefer_model_exceeds_devices():
+    """prefer_model larger than the pool caps at the largest power-of-2
+    divisor of n_devices — never oversubscribes."""
+    p = plan_elastic_mesh(4, 8, prefer_model=64)
+    assert p.mesh_shape == (1, 4)
+    assert p.n_devices == 4
+    p_odd = plan_elastic_mesh(3, 6, prefer_model=64)  # no 2-divisor at all
+    assert p_odd.mesh_shape == (3, 1)
+
+
+def test_elastic_plan_notes_unused_devices():
+    """When the plan drops devices, the note must say how many survive —
+    the line the stream CLI surfaces after a re-bucketing."""
+    p = plan_elastic_mesh(8, 6, prefer_model=1)
+    assert p.n_devices < 8
+    assert f"using {p.n_devices}/8 devices" in p.note
+    full = plan_elastic_mesh(8, 8, prefer_model=1)
+    assert full.n_devices == 8 and "using 8/8 devices" in full.note
+    with pytest.raises(ValueError):
+        plan_elastic_mesh(0, 8)

@@ -194,3 +194,65 @@ def test_submitted_waves_share_bucket_batches():
     assert engine.stats.batches == 1
     assert engine.stats.requests == 4
     assert all(t.done for t in tickets)
+
+
+# ---------------- bounded waits ----------------------------------------------
+def test_engine_validates_timeout_knobs():
+    with pytest.raises(ValueError):
+        CannyEngine(PARAMS, timeout=0.0)
+    with pytest.raises(ValueError):
+        CannyEngine(PARAMS, max_pending=0)
+
+
+def test_engine_drain_timeout_zero_is_nonblocking_probe():
+    """timeout=0 is the Ticket polling path: a wave in flight elsewhere
+    means 'ran 0 requests now', never a block."""
+    import threading
+
+    from repro.distributed.fault_tolerance import StreamTimeout
+
+    engine = CannyEngine(PARAMS, bucket_multiple=32)
+    engine.submit(synthetic_image(20, 20, seed=7))
+    assert engine._drain_lock.acquire(blocking=False)  # simulate a stuck wave
+    try:
+        assert engine.drain(timeout=0) == 0
+        with pytest.raises(StreamTimeout, match="drain"):
+            engine.drain(timeout=0.1)
+    finally:
+        engine._drain_lock.release()
+    assert engine.drain() == 1  # the stuck wave cleared; work proceeds
+
+
+def test_ticket_result_timeout_on_stuck_wave():
+    """A ticket whose wave never completes raises a typed StreamTimeout
+    (default budget from the engine) instead of hanging the caller."""
+    from repro.distributed.fault_tolerance import StreamTimeout
+
+    engine = CannyEngine(PARAMS, bucket_multiple=32, timeout=0.2)
+    ticket = engine.submit(synthetic_image(20, 20, seed=8))
+    assert engine._drain_lock.acquire(blocking=False)
+    try:
+        with pytest.raises(StreamTimeout):
+            ticket.result()  # engine default budget
+        with pytest.raises(StreamTimeout):
+            ticket.result(timeout=0.05)  # per-call override
+    finally:
+        engine._drain_lock.release()
+    assert (np.asarray(ticket.result()) == np.asarray(
+        canny_reference(synthetic_image(20, 20, seed=8), PARAMS)
+    )).all()
+
+
+def test_submit_max_pending_sheds_load():
+    """Bounded admission: a full pending queue times out the submitter
+    instead of buffering without limit; a drain frees the slot."""
+    from repro.distributed.fault_tolerance import StreamTimeout
+
+    engine = CannyEngine(PARAMS, bucket_multiple=32, max_pending=2, timeout=0.1)
+    engine.submit(synthetic_image(20, 20, seed=1))
+    engine.submit(synthetic_image(20, 20, seed=2))
+    with pytest.raises(StreamTimeout, match="admission"):
+        engine.submit(synthetic_image(20, 20, seed=3))
+    assert engine.drain() == 2
+    engine.submit(synthetic_image(20, 20, seed=3))  # slot freed
+    assert engine.drain() == 1

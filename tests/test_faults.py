@@ -1,0 +1,346 @@
+"""The bounded-wait + fault-injection plane, unit-level.
+
+Everything here runs on fake workers and injected clocks — fast and
+deterministic. The real-detector recovery paths are pinned by
+tests/test_pod_churn.py (subprocess, SIGKILL) and the in-repo smoke in
+tests/test_stream.py.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.patterns.farm import Farm
+from repro.distributed.fault_tolerance import (
+    Backoff,
+    FaultInjector,
+    InjectedFault,
+    StreamTimeout,
+    wait_for,
+)
+from repro.stream.pod import PodMembership, owns, reassemble_elastic
+
+
+# -- Backoff / wait_for -----------------------------------------------------
+def test_backoff_schedule_grows_to_cap():
+    b = Backoff(initial=0.01, factor=2.0, cap=0.05)
+    it = b.delays()
+    got = [next(it) for _ in range(5)]
+    assert got == [0.01, 0.02, 0.04, 0.05, 0.05]
+
+
+def test_backoff_validates():
+    with pytest.raises(ValueError):
+        Backoff(initial=0.0)
+    with pytest.raises(ValueError):
+        Backoff(factor=0.5)
+    with pytest.raises(ValueError):
+        Backoff(initial=1.0, cap=0.5)
+
+
+def test_wait_for_returns_predicate_value():
+    assert wait_for(lambda: {"x": 1}, timeout=1.0) == {"x": 1}
+
+
+def test_wait_for_polls_until_true():
+    calls = {"n": 0}
+
+    def pred():
+        calls["n"] += 1
+        return calls["n"] >= 3
+
+    assert wait_for(pred, timeout=5.0, backoff=Backoff(initial=1e-4))
+    assert calls["n"] == 3
+
+
+def test_wait_for_timeout_is_typed_and_named():
+    t0 = time.monotonic()
+    with pytest.raises(StreamTimeout) as ei:
+        wait_for(lambda: False, timeout=0.05, what="the thing")
+    assert time.monotonic() - t0 < 2.0
+    assert ei.value.what == "the thing"
+    assert ei.value.timeout == 0.05
+    assert "the thing" in str(ei.value)
+    assert isinstance(ei.value, TimeoutError)  # catchable as stdlib timeout
+
+
+def test_wait_for_final_poll_at_deadline():
+    """A predicate that flips exactly when time runs out still wins —
+    driven entirely by an injected clock, no real sleeping."""
+    t = {"now": 0.0}
+
+    def clock():
+        return t["now"]
+
+    def sleep(s):
+        t["now"] += s
+
+    flips_at = 1.0
+
+    def pred():
+        return t["now"] >= flips_at
+
+    assert wait_for(pred, timeout=1.0, clock=clock, sleep=sleep)
+
+
+def test_wait_for_none_waits_forever():
+    calls = {"n": 0}
+
+    def pred():
+        calls["n"] += 1
+        return calls["n"] >= 50
+
+    assert wait_for(
+        pred, timeout=None, backoff=Backoff(initial=1e-6, cap=1e-5)
+    )
+
+
+# -- FaultInjector ----------------------------------------------------------
+def test_injector_kill_fires_once():
+    inj = FaultInjector(kill={(0, 1)})
+    inj.before_frame(0)  # nth=0
+    with pytest.raises(InjectedFault):
+        inj.before_frame(0)  # nth=1: planted
+    inj.before_frame(0)  # the restarted worker proceeds
+    assert inj.fired == [("kill", 0, 1)]
+
+
+def test_injector_drop_is_permanent():
+    inj = FaultInjector(drop={1: 2})
+    inj.before_frame(1)
+    inj.before_frame(1)
+    for _ in range(3):
+        with pytest.raises(InjectedFault):
+            inj.before_frame(1)
+    assert [k for k, _, _ in inj.fired] == ["drop"] * 3
+
+
+def test_injector_stall_sleeps_then_continues():
+    slept = []
+    inj = FaultInjector(stall={(2, 0): 0.7}, sleep=slept.append)
+    inj.before_frame(2)  # stalls, does not raise
+    inj.before_frame(2)
+    assert slept == [0.7]
+    assert inj.fired == [("stall", 2, 0)]
+
+
+def test_injector_heartbeat_delay():
+    inj = FaultInjector(heartbeat_delay={3: 2.5})
+    assert inj.heartbeat_delay(3) == 2.5
+    assert inj.heartbeat_delay(0) == 0.0
+
+
+def test_injector_seeded_is_deterministic():
+    a = FaultInjector.seeded(42, ranks=4, frames=40, kills=2, stalls=2)
+    b = FaultInjector.seeded(42, ranks=4, frames=40, kills=2, stalls=2)
+    assert a.kill.keys() == b.kill.keys()
+    assert a.stall == b.stall
+    c = FaultInjector.seeded(43, ranks=4, frames=40, kills=2, stalls=2)
+    assert (a.kill.keys(), a.stall) != (c.kill.keys(), c.stall)
+
+
+def test_injector_seeded_rejects_impossible_schedule():
+    with pytest.raises(ValueError, match="fault slots"):
+        FaultInjector.seeded(0, ranks=2, frames=4, kills=5)
+
+
+# -- PodMembership ----------------------------------------------------------
+def make_membership(timeout=1.0):
+    t = {"now": 0.0}
+    m = PodMembership([0, 1, 2], heartbeat_timeout=timeout, clock=lambda: t["now"])
+    return t, m
+
+
+def test_membership_sweep_declares_stale_ranks_dead():
+    t, m = make_membership()
+    t["now"] = 0.5
+    m.heartbeat(0)
+    m.heartbeat(2)
+    t["now"] = 1.3  # rank 1's init beat (t=0) is now stale
+    assert m.sweep() == (1,)
+    assert m.epoch == 1 and m.roster() == (0, 2)
+    assert not m.alive(1)
+
+
+def test_membership_death_is_sticky():
+    """A zombie's late heartbeat must NOT resurrect it — only an
+    explicit join does."""
+    t, m = make_membership()
+    t["now"] = 2.0
+    m.heartbeat(1)
+    m.heartbeat(2)
+    m.sweep()  # rank 0 dead
+    assert m.roster() == (1, 2)
+    m.heartbeat(0)  # zombie beats
+    assert m.roster() == (1, 2) and m.epoch == 1
+    assert m.join(0, "revived")
+    assert m.roster() == (0, 1, 2) and m.epoch == 2
+    assert not m.join(0)  # already live: no spurious epoch
+
+
+def test_membership_epoch_history_is_auditable():
+    t, m = make_membership()
+    m.leave(2, "drain")
+    m.join(3, "replacement")
+    epochs = [e for e, _, _ in m.history]
+    rosters = [r for _, r, _ in m.history]
+    assert epochs == [0, 1, 2]
+    assert rosters == [(0, 1, 2), (0, 1), (0, 1, 3)]
+
+
+def test_membership_ownership_tracks_epoch_roster():
+    t, m = make_membership()
+    assert [m.owner(s) for s in range(6)] == [0, 1, 2, 0, 1, 2]
+    m.leave(1, "died")
+    # survivors deterministically re-own: roster (0, 2), seq % 2
+    assert [m.owner(s) for s in range(6)] == [0, 2, 0, 2, 0, 2]
+    assert m.owner(4) == owns(4, m.roster())
+
+
+def test_membership_never_empties_the_roster():
+    t, m = make_membership()
+    m.leave(0)
+    m.leave(1)
+    with pytest.raises(RuntimeError, match="last live rank"):
+        m.leave(2)
+    # an all-stale sweep keeps the freshest rank instead of raising
+    t["now"] = 100.0
+    assert m.sweep() == ()
+    assert m.roster() == (2,)
+
+
+def test_membership_all_stale_sweep_keeps_freshest():
+    t, m = make_membership()
+    t["now"] = 0.3
+    m.heartbeat(1)
+    t["now"] = 50.0  # everyone stale; rank 1 beat last
+    dead = m.sweep()
+    assert set(dead) == {0, 2}
+    assert m.roster() == (1,)
+
+
+def test_owns_pure_function():
+    assert owns(7, (0, 1, 2)) == 1
+    assert owns(7, (0, 2)) == 2  # the re-owned world
+    assert owns(0, (5,)) == 5
+    with pytest.raises(ValueError):
+        owns(0, ())
+    with pytest.raises(ValueError):
+        owns(-1, (0, 1))
+
+
+# -- reassemble_elastic -----------------------------------------------------
+def item(seq):
+    return np.full((2, 2), seq, np.uint8)
+
+
+def test_reassemble_elastic_merges_across_epoch_gaps():
+    """Rank 1 died holding seqs 1 and 4; rank 0's epoch-1 stream fills
+    them late and out of order — the merge still emits 0..5 in order."""
+    r0 = [(0, 0, item(0)), (2, 0, item(2)), (4, 1, item(4)), (1, 1, item(1))]
+    r2 = [(3, 0, item(3)), (5, 0, item(5))]
+    got = list(reassemble_elastic([r0, r2], expect=6))
+    assert [int(g[0, 0]) for g in got] == list(range(6))
+
+
+def test_reassemble_elastic_first_writer_wins_on_agreeing_duplicate():
+    r0 = [(0, 0, item(0)), (1, 1, item(1))]
+    zombie = [(1, 0, item(1))]  # same bits, older epoch
+    got = list(reassemble_elastic([r0, zombie], expect=2))
+    assert len(got) == 2
+
+
+def test_reassemble_elastic_rejects_disagreeing_duplicate():
+    r0 = [(0, 0, item(0)), (1, 1, item(1))]
+    bad = [(1, 0, item(9))]
+    with pytest.raises(RuntimeError, match="disagrees"):
+        list(reassemble_elastic([r0, bad], expect=2))
+
+
+def test_reassemble_elastic_names_gaps():
+    r0 = [(0, 0, item(0)), (3, 0, item(3))]
+    with pytest.raises(RuntimeError, match=r"\[1, 2\]"):
+        list(reassemble_elastic([r0], expect=4))
+
+
+def test_reassemble_elastic_rejects_out_of_range_seq():
+    with pytest.raises(RuntimeError, match="outside"):
+        list(reassemble_elastic([[(7, 0, item(7))]], expect=4))
+
+
+# -- Farm restarts + timeouts ----------------------------------------------
+def test_farm_restart_requeues_in_flight_frames():
+    """A worker dying mid-stream is replaced and its pulled-but-
+    unresulted frames re-run — every seq emitted, in order."""
+    died = threading.Event()
+
+    def flaky(x):
+        if x == 5 and not died.is_set():
+            died.set()
+            raise RuntimeError("worker death")
+        return x * 2
+
+    farm = Farm([flaky, flaky], max_restarts=1, timeout=30.0)
+    assert list(farm.run(range(12))) == [x * 2 for x in range(12)]
+    assert farm.restarts == 1
+
+
+def test_farm_restart_uses_factory_for_fresh_state():
+    built = []
+
+    class Worker:
+        def __init__(self, tag):
+            self.tag = tag
+            self.poisoned = tag == "original-0"
+
+        def __call__(self, x):
+            if self.poisoned and x >= 4:
+                raise RuntimeError("stateful corruption")
+            return x
+
+    def factory(k):
+        w = Worker(f"replacement-{k}")
+        built.append(k)
+        return w
+
+    farm = Farm(
+        [Worker("original-0"), Worker("original-1")],
+        max_restarts=2, worker_factory=factory, timeout=30.0,
+    )
+    assert list(farm.run(range(10))) == list(range(10))
+    assert built == [0]
+    assert farm.workers[0].tag == "replacement-0"
+
+
+def test_farm_exhausted_restarts_propagate_the_error():
+    def always_dies(x):
+        raise RuntimeError("unrecoverable")
+
+    farm = Farm([always_dies], max_restarts=2, timeout=30.0)
+    with pytest.raises(RuntimeError, match="unrecoverable"):
+        list(farm.run(range(4)))
+    assert farm.restarts == 2
+
+
+def test_farm_timeout_raises_instead_of_deadlocking():
+    release = threading.Event()
+
+    def hang(x):
+        release.wait(30.0)
+        return x
+
+    farm = Farm([hang], timeout=0.3)
+    t0 = time.monotonic()
+    with pytest.raises(StreamTimeout, match="seq 0"):
+        list(farm.run(range(2)))
+    assert time.monotonic() - t0 < 10.0
+    release.set()
+
+
+def test_farm_validates_new_knobs():
+    with pytest.raises(ValueError):
+        Farm([lambda x: x], max_restarts=-1)
+    with pytest.raises(ValueError):
+        Farm([lambda x: x], timeout=0.0)

@@ -38,6 +38,8 @@ def test_mesh_engine_and_serving_registry():
 def test_elastic_checkpoint_restore():
     out = run_with_devices("elastic.py", n_devices=8)
     assert "ALL-OK" in out
+    assert "elastic restore: OK" in out
+    assert "elastic pod re-bucketing (4 -> 3 -> 4 ranks): OK" in out
 
 
 def test_moe_expert_parallel_variants():

@@ -542,3 +542,156 @@ def test_farm_scheduler_skip_matches_cold():
     # hold=3 with 2 workers: each worker sees held repeats → must skip
     assert skip.stats.frontend_launches < len(frames)
     assert cold.stats.frontend_launches == len(frames)
+
+
+# ---------------- elastic plane ----------------------------------------------
+def test_farm_scheduler_recovers_from_injected_kill_bit_identical():
+    """A FaultInjector-planted worker death mid-stream, with restarts
+    on: the replacement runs cold and the output stays bit-identical to
+    the healthy run — warm state never owned any bits."""
+    from repro.distributed import FaultInjector
+
+    frames = list(SyntheticStream(8, 48, 64, seed=11, hold=2))
+    healthy = [np.asarray(e).copy() for e in FarmScheduler(
+        PARAMS, n_workers=2, block_rows=16
+    ).run(frames)]
+    inj = FaultInjector(kill={(0, 2)})
+    sched = FarmScheduler(
+        PARAMS, n_workers=2, block_rows=16,
+        max_restarts=2, timeout=60.0, injector=inj,
+    )
+    got = [np.asarray(e).copy() for e in sched.run(frames)]
+    assert len(got) == len(healthy)
+    assert all((a == b).all() for a, b in zip(got, healthy))
+    assert sched.farm.restarts == 1
+    assert sched.stats.restarts == 1
+    assert [k for k, _, _ in inj.fired] == ["kill"]
+    assert "restarts=1" in sched.stats.summary()
+
+
+def test_farm_scheduler_exhausted_restarts_raise_injected_fault():
+    from repro.distributed import FaultInjector
+    from repro.distributed.fault_tolerance import InjectedFault
+
+    inj = FaultInjector(drop={0: 0, 1: 0})  # both workers always die
+    sched = FarmScheduler(
+        PARAMS, n_workers=2, block_rows=16, max_restarts=1, timeout=30.0,
+        injector=inj,
+    )
+    with pytest.raises(InjectedFault):
+        list(sched.run(SyntheticStream(4, 48, 64, seed=1)))
+
+
+def test_stream_stats_watchdog_counts_slow_steps_and_stragglers():
+    """The StepWatchdog report lands in StreamStats and the summary
+    line — one worker consistently 3x slower gets named."""
+    from repro.stream.scheduler import StreamStats
+    from repro.distributed.fault_tolerance import StepWatchdog
+
+    stats = StreamStats()
+    stats.watchdog = StepWatchdog(k=3.0, clock=lambda: 0.0)
+    for _ in range(12):
+        stats.record_compute(10.0, "worker0")  # the uniform baseline
+    for _ in range(4):
+        stats.record_compute(40.0, "worker1")  # the consistent straggler
+    assert stats.slow_steps >= 1
+    assert stats.straggler_counts and stats.straggler_counts.most_common(1)[0][0] == "worker1"
+    line = stats.summary()
+    assert "slow_steps=" in line and "worker1" in line
+
+
+def test_elastic_pod_farm_kill_and_revive_bit_identical():
+    """The in-process tentpole: rank death mid-stream, deterministic
+    re-ownership, cold revival — output equals the healthy oracle."""
+    from repro.distributed import FaultInjector
+    from repro.stream import ElasticPodFarm
+
+    frames = list(SyntheticStream(10, 48, 64, seed=7, hold=2))
+    oracle = [np.asarray(e).copy() for e in ElasticPodFarm(
+        PARAMS, ranks=2, block_rows=16, timeout=120.0
+    ).run(frames)]
+    inj = FaultInjector(kill={(1, 1)})
+    farm = ElasticPodFarm(
+        PARAMS, ranks=2, block_rows=16, timeout=120.0,
+        injector=inj, revive_after=3,
+    )
+    got = [np.asarray(e).copy() for e in farm.run(frames)]
+    assert len(got) == len(oracle)
+    assert all((a == b).all() for a, b in zip(got, oracle))
+    assert farm.deaths == 1
+    kinds = [k for k, _, _ in farm.events]
+    assert "death" in kinds and "join" in kinds
+    assert farm.membership.epoch == 2  # death + rejoin
+    assert len(farm.recoveries_s) == 1
+
+
+def test_elastic_pod_farm_heartbeat_declares_stalled_rank_dead():
+    """The heartbeat path with cheap fake workers: a rank stalled past
+    the timeout is swept dead, its frame re-owned — no InjectedFault is
+    ever raised (the stall is not an exception), yet the farm heals."""
+    import time as _time
+
+    from repro.distributed import FaultInjector
+    from repro.stream import ElasticPodFarm
+
+    class Fake:
+        def step(self, x):
+            return np.asarray(x) * 0 + 7, None
+
+        def reset(self):
+            pass
+
+    inj = FaultInjector(stall={(1, 1): 1.2})
+    farm = ElasticPodFarm(
+        ranks=2, heartbeat_timeout=0.3, timeout=30.0,
+        injector=inj, make_worker=lambda rank: Fake(),
+    )
+    frames = [np.full((4, 4), i, np.float32) for i in range(6)]
+    got = list(farm.run(frames))
+    assert len(got) == 6
+    assert all((g == 7).all() for g in got)
+    assert farm.deaths == 1
+    _, _, reason = farm.membership.history[1]
+    assert "heartbeat timeout" in reason
+    assert inj.fired and inj.fired[0][0] == "stall"
+
+
+def test_elastic_pod_farm_last_rank_death_raises():
+    from repro.distributed import FaultInjector
+    from repro.distributed.fault_tolerance import InjectedFault
+    from repro.stream import ElasticPodFarm
+
+    class Fake:
+        def step(self, x):
+            return np.asarray(x), None
+
+    inj = FaultInjector(drop={0: 0, 1: 0})  # every rank dies on sight
+    farm = ElasticPodFarm(
+        ranks=2, timeout=30.0, injector=inj,
+        make_worker=lambda rank: Fake(),
+    )
+    with pytest.raises(InjectedFault):
+        list(farm.run([np.zeros((4, 4), np.float32)] * 4))
+
+
+def test_elastic_pod_farm_stream_timeout_is_bounded():
+    """A farm whose ranks never produce must raise StreamTimeout within
+    the budget — the no-deadlock guarantee."""
+    import time as _time
+
+    from repro.distributed.fault_tolerance import StreamTimeout
+    from repro.stream import ElasticPodFarm
+
+    class Hang:
+        def step(self, x):
+            _time.sleep(3.0)  # long enough to trip the 0.5s budget; short
+            return np.asarray(x), None  # enough that thread cleanup joins
+
+    farm = ElasticPodFarm(
+        ranks=2, timeout=0.5, heartbeat_timeout=1e9,
+        make_worker=lambda rank: Hang(),
+    )
+    t0 = _time.perf_counter()
+    with pytest.raises(StreamTimeout, match="seq 0"):
+        list(farm.run([np.zeros((4, 4), np.float32)] * 2))
+    assert _time.perf_counter() - t0 < 10.0
