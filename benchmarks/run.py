@@ -28,11 +28,21 @@ the LM table reads the dry-run artifacts.
   per_stage_parity               backend parity plane: per-stage vs fused
                                  on identical serving + stream workloads,
                                  cold vs warm+skip, bit-exact asserted
+  serve_saturation               AOT continuous-batching plane: offered
+                                 load (Poisson arrivals) swept as
+                                 fractions of back-to-back capacity;
+                                 per-row p50/p95/p99 latency, the
+                                 tail-latency knee, continuous-vs-wave
+                                 p99 at moderate load, bit-exact, zero
+                                 post-warmup traces
   roofline_table                 §Roofline summary from experiments/dryrun
 
 Besides the CSV on stdout, results land in ``BENCH_<git rev>.json`` next
-to this file (name → {us_per_call, derived}) for machine-readable
-regression tracking across PRs.
+to this file (name → {us_per_call, derived, latency_ms}) for
+machine-readable regression tracking across PRs; ``latency_ms`` is a
+{p50, p95, p99} dict on serving rows and null elsewhere. Run
+``--serve-saturation [--frames N]`` standalone for the serving smoke (CI
+``serving-slo`` job); it merges its rows into the same artifact.
 """
 
 from __future__ import annotations
@@ -70,12 +80,27 @@ from repro.kernels.fused_canny.ops import fused_canny
 
 PARAMS = CannyParams(sigma=1.4, low=0.08, high=0.2)
 CTX = StencilCtx(None, "edge")
-ROWS: list[tuple[str, float, str]] = []
+# (name, us_per_call, derived, latency_ms) — latency_ms is a
+# {p50, p95, p99} dict for serving rows and None (json null) for every
+# throughput-only target, so the BENCH trajectory stays parseable with
+# one schema across all rows
+ROWS: list[tuple[str, float, str, dict | None]] = []
 
 
-def row(name: str, us: float, derived: str = "") -> None:
-    ROWS.append((name, us, derived))
+def row(name: str, us: float, derived: str = "", latency: dict | None = None) -> None:
+    ROWS.append((name, us, derived, latency))
     print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def latency_dict(samples_ms) -> dict:
+    """The per-row latency summary the BENCH schema carries."""
+    from repro.serve.engine import percentile
+
+    return {
+        "p50": round(percentile(samples_ms, 0.50), 3),
+        "p95": round(percentile(samples_ms, 0.95), 3),
+        "p99": round(percentile(samples_ms, 0.99), 3),
+    }
 
 
 def _timeit(fn, n=5, warmup=1) -> float:
@@ -494,6 +519,161 @@ def per_stage_parity(h=256, w=256, b=4, frames=24, hold=6, block_rows=32):
     assert fe_counts[("pallas", "warmskip")] < 3 * frames
 
 
+def _offered_run_continuous(engine, reqs, gaps, linger_ms, slo_ms):
+    """One offered-load run through the continuous plane: seeded arrival
+    gaps, per-ticket latency samples, outputs in submission order."""
+    from repro.serve.admission import ContinuousBatcher
+
+    tickets = []
+    with ContinuousBatcher(
+        engine, linger_ms=linger_ms, slo_ms=slo_ms, timeout=600.0
+    ) as batcher:
+        t0 = time.perf_counter()
+        for req, gap in zip(reqs, gaps):
+            if gap:
+                time.sleep(float(gap))
+            tickets.append(batcher.submit(req))
+        batcher.drain()
+        dt = time.perf_counter() - t0
+        slo = batcher.stats.slo()
+    outs = [t.result() for t in tickets]
+    lats = [t.latency_ms() for t in tickets]
+    return outs, lats, dt, slo
+
+
+def _offered_run_wave(engine, reqs, gaps, max_batch):
+    """The synchronous-wave baseline on the SAME arrival schedule and the
+    SAME precompiled engine: arrivals accumulate until a full wave of
+    ``max_batch`` is present (the lazy plane's drain shape), then the
+    whole wave launches; per-request latency = arrival → wave complete.
+    Early arrivals eat the wave barrier — the tail the continuous plane
+    exists to remove."""
+    outs, lats = [], []
+    pending: list[tuple[float, np.ndarray]] = []
+    t0 = time.perf_counter()
+    for i, (req, gap) in enumerate(zip(reqs, gaps)):
+        if gap:
+            time.sleep(float(gap))
+        pending.append((time.perf_counter(), req))
+        if len(pending) == max_batch or i == len(reqs) - 1:
+            res = engine.process([r for _, r in pending])
+            t_done = time.perf_counter()
+            for (t_arrive, _), out in zip(pending, res):
+                lats.append((t_done - t_arrive) * 1e3)
+                outs.append(out)
+            pending = []
+    return outs, lats, time.perf_counter() - t0
+
+
+def serve_saturation(
+    frames=96, sizes=((96, 96), (64, 128)), max_batch=4,
+    linger_ms=2.0, slo_ms=250.0,
+):
+    """Offered-load sweep through the AOT continuous-batching plane.
+
+    One ``AotCannyEngine`` warms every (bucket, lane) executable, then the
+    SAME seeded mixed-size request corpus replays at Poisson arrival rates
+    swept as fractions of measured back-to-back capacity. Each row lands
+    fps plus the p50/p95/p99 latency dict in the BENCH schema — the knee
+    row names where the tail blows up. At moderate load the continuous
+    plane's p99 must beat the synchronous-wave baseline's p99 on the same
+    schedule (waves make early arrivals wait for the wave barrier), while
+    outputs stay bit-identical and zero traces ride the request path.
+    """
+    from repro.serve.aot import AotCannyEngine
+
+    engine = AotCannyEngine(
+        PARAMS, backend="fused", buckets=list(sizes),
+        bucket_multiple=32, max_batch=max_batch,
+    )
+    rng = np.random.default_rng(0)
+    reqs = [
+        synthetic_image(*sizes[i % len(sizes)], seed=int(rng.integers(1 << 31)))
+        for i in range(frames)
+    ]
+    # unit-mean exponential gaps, scaled per offered rate below so every
+    # load level replays the SAME arrival-pattern shape
+    unit_gaps = rng.exponential(1.0, size=frames)
+
+    # back-to-back capacity anchors the sweep in req/s on THIS host
+    outs_sat, lats, dt, _ = _offered_run_continuous(
+        engine, reqs, np.zeros(frames), linger_ms, slo_ms
+    )
+    capacity = frames / dt
+    row(
+        "serve_saturation_capacity",
+        dt / frames * 1e6,
+        f"{capacity:.1f} req/s backtoback",
+        latency_dict(lats),
+    )
+
+    p99_by_frac: dict[float, float] = {}
+    outs_by_frac: dict[float, list] = {}
+    for frac in (0.25, 0.5, 1.0, 2.0):
+        rate = capacity * frac
+        outs, lats, dt, slo = _offered_run_continuous(
+            engine, reqs, unit_gaps / rate, linger_ms, slo_ms
+        )
+        lat = latency_dict(lats)
+        p99_by_frac[frac] = lat["p99"]
+        outs_by_frac[frac] = outs
+        row(
+            f"serve_continuous_load{frac:.2f}",
+            dt / frames * 1e6,
+            f"{frames/dt:.1f} req/s offered={rate:.1f}/s poisson "
+            f"slo_pass={slo['pass']}/{slo['pass'] + slo['fail']}",
+            lat,
+        )
+
+    # the tail-latency knee: first load fraction whose p99 leaves the
+    # low-load regime (>3x the 0.25-capacity tail)
+    base_p99 = p99_by_frac[0.25]
+    knee = next(
+        (f for f in sorted(p99_by_frac) if p99_by_frac[f] > 3 * base_p99), None
+    )
+    row(
+        "serve_saturation_knee",
+        0.0,
+        f"knee_load={knee if knee is not None else '>2.0'}x_capacity "
+        f"p99_at_0.25x={base_p99:.1f}ms p99_at_2x={p99_by_frac[2.0]:.1f}ms",
+    )
+
+    # synchronous-wave baseline at moderate (0.5x) load, same schedule,
+    # same precompiled executables — only the admission policy differs
+    moderate = 0.5
+    outs_wave, lats_wave, dt_wave = _offered_run_wave(
+        engine, reqs, unit_gaps / (capacity * moderate), max_batch
+    )
+    lat_wave = latency_dict(lats_wave)
+    row(
+        f"serve_wave_load{moderate:.2f}",
+        dt_wave / frames * 1e6,
+        f"{frames/dt_wave:.1f} req/s continuous_p99_beats_wave="
+        f"{p99_by_frac[moderate] < lat_wave['p99']}",
+        lat_wave,
+    )
+    assert p99_by_frac[moderate] < lat_wave["p99"], (
+        f"continuous p99 {p99_by_frac[moderate]:.1f}ms did not beat the "
+        f"wave barrier's {lat_wave['p99']:.1f}ms at {moderate}x capacity"
+    )
+
+    # bit-identity across every admission policy + the no-retrace contract
+    exact = all(
+        all((a == b).all() for a, b in zip(outs_sat, outs))
+        for outs in [outs_wave, *outs_by_frac.values()]
+    )
+    row(
+        "serve_saturation_bit_exact",
+        0.0,
+        f"continuous_vs_wave={exact} "
+        f"post_warmup_traces={engine.post_warmup_traces}",
+    )
+    assert exact, "continuous admission diverged from the wave path"
+    assert engine.post_warmup_traces == 0, (
+        f"{engine.post_warmup_traces} traces leaked onto the request path"
+    )
+
+
 def roofline_table():
     """LM cells summary from the dry-run artifacts (see EXPERIMENTS.md)."""
     d = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
@@ -525,11 +705,26 @@ def _git_rev() -> str:
 
 
 def write_artifact() -> pathlib.Path:
-    """Dump the collected rows as BENCH_<rev>.json next to this file."""
+    """Dump the collected rows as BENCH_<rev>.json next to this file.
+
+    Merges into an existing artifact for the same rev (a standalone
+    ``--serve-saturation`` run extends the full table instead of
+    clobbering it). Every row carries ``latency_ms`` — a {p50, p95, p99}
+    dict for serving rows, null for throughput-only targets.
+    """
     out = pathlib.Path(__file__).resolve().parent / f"BENCH_{_git_rev()}.json"
-    payload = {
-        name: {"us_per_call": us, "derived": derived} for name, us, derived in ROWS
-    }
+    payload: dict = {}
+    if out.exists():
+        try:
+            payload = json.loads(out.read_text())
+        except ValueError:
+            payload = {}
+    payload.update(
+        {
+            name: {"us_per_call": us, "derived": derived, "latency_ms": latency}
+            for name, us, derived, latency in ROWS
+        }
+    )
     out.write_text(json.dumps(payload, indent=2) + "\n")
     return out
 
@@ -547,6 +742,7 @@ def main() -> None:
     pod_farm_fps()
     pod_churn_fps()
     per_stage_parity()
+    serve_saturation()
     roofline_table()
     path = write_artifact()
     print(f"# wrote {path}", file=sys.stderr)
@@ -556,5 +752,14 @@ if __name__ == "__main__":
     if "--sharded-payload" in sys.argv:
         print("name,us_per_call,derived")
         _sharded_payload()
+    elif "--serve-saturation" in sys.argv:
+        n = (
+            int(sys.argv[sys.argv.index("--frames") + 1])
+            if "--frames" in sys.argv
+            else 96
+        )
+        print("name,us_per_call,derived")
+        serve_saturation(frames=n)
+        print(f"# wrote {write_artifact()}", file=sys.stderr)
     else:
         main()

@@ -44,7 +44,7 @@ import threading
 import time
 from typing import Callable, Iterable, Iterator, Sequence
 
-from repro.distributed.fault_tolerance import Backoff, StreamTimeout
+from repro.distributed.fault_tolerance import Backoff, FailFast, StreamTimeout
 
 
 def put_cancellable(q: queue.Queue, msg, cancelled: Callable[[], bool]) -> bool:
@@ -188,10 +188,11 @@ class Farm:
                         else w
                     )
                     self.workers[k] = new_w
-                    t = threading.Thread(
+                    t = FailFast(
                         target=worker_loop,
                         args=(k, new_w, list(pending)),
                         daemon=True,
+                        on_error=post_error,
                     )
                     with cond:
                         if state["cancel"]:
@@ -201,10 +202,14 @@ class Farm:
                 except BaseException as exc2:  # noqa: BLE001 — factory failed
                     post_error(exc2)
 
-        threads.append(threading.Thread(target=feeder, daemon=True))
+        # FailFast with on_error=post_error: an exception that escapes a
+        # loop's OWN handling (restart machinery, bookkeeping) still posts
+        # to the consumer immediately — a dead thread is never lost
+        threads.append(FailFast(target=feeder, daemon=True, on_error=post_error))
         threads.extend(
-            threading.Thread(
-                target=worker_loop, args=(k, self.workers[k], ()), daemon=True
+            FailFast(
+                target=worker_loop, args=(k, self.workers[k], ()), daemon=True,
+                on_error=post_error,
             )
             for k in range(n)
         )
@@ -256,7 +261,9 @@ class Farm:
                 except queue.Full:
                     pass
             for t in snapshot:
-                t.join(timeout=5.0)
+                # reraise=False: a primary error is already propagating
+                # through the consumer; errors here were posted already
+                t.join(timeout=5.0, reraise=False)
 
 
 def farm_map(

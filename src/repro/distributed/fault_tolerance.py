@@ -15,6 +15,11 @@ checkpoints are mesh-agnostic, see checkpoint/). What this module adds:
   * ``RestartLoop`` — crash-resume driver: restore-latest → run →
     checkpoint every N steps → on failure, re-mesh and continue. The
     deterministic (seed, step) data pipeline makes the replay exact.
+  * ``FailFast`` — a ``threading.Thread`` that records an escaping
+    exception, reports it through ``on_error`` immediately, and
+    re-raises it at ``join()`` — the farm, the stream prefetcher, and
+    the continuous-batching serving plane all run their background
+    workers on it so a dead thread can never be lost.
   * ``StreamTimeout`` / ``Backoff`` / ``wait_for`` — the bounded-wait
     primitives underneath every blocking call in the streaming plane
     (farm result waits, engine ticket resolution, pod reassembly):
@@ -108,6 +113,43 @@ def wait_for(
             delay = min(delay, remaining)
         sleep(delay)
     raise AssertionError("unreachable")  # pragma: no cover
+
+
+class FailFast(threading.Thread):
+    """A thread whose death can never be lost (the MaxText ``JetThread``
+    shape): an exception escaping the target is recorded on
+    ``.exception``, reported IMMEDIATELY through ``on_error`` (when
+    given), and re-raised at ``join()``.
+
+    Every background worker in the streaming/serving plane runs on one of
+    these — the farm's feeder/worker threads, the ``Prefetcher`` fill
+    thread, and the continuous batcher's dispatch/drain threads — so a
+    worker dying outside its own error handling surfaces at its owner the
+    moment it is observed (``on_error`` → poison the queue, or the next
+    ``join``/liveness probe), instead of silently stranding consumers
+    until a timeout fires.
+
+    ``join(reraise=False)`` is for cleanup paths that are already
+    propagating a primary error and must not mask it.
+    """
+
+    def __init__(self, *args, on_error: Callable[[BaseException], None] | None = None, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.exception: BaseException | None = None
+        self._on_error = on_error
+
+    def run(self) -> None:
+        try:
+            super().run()
+        except BaseException as exc:  # noqa: BLE001 — recorded, never lost
+            self.exception = exc
+            if self._on_error is not None:
+                self._on_error(exc)
+
+    def join(self, timeout: float | None = None, reraise: bool = True) -> None:
+        super().join(timeout)
+        if reraise and self.exception is not None and not self.is_alive():
+            raise self.exception
 
 
 class InjectedFault(RuntimeError):

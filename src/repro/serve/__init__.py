@@ -1,3 +1,22 @@
-from repro.serve.engine import BucketedCanny, CannyEngine, EngineStats, Ticket
+from repro.serve.admission import ContinuousBatcher, SloTicket
+from repro.serve.aot import AotCannyEngine, default_lanes, infer_buckets
+from repro.serve.engine import (
+    BucketedCanny,
+    CannyEngine,
+    EngineStats,
+    Ticket,
+    pack_requests,
+)
 
-__all__ = ["BucketedCanny", "CannyEngine", "EngineStats", "Ticket"]
+__all__ = [
+    "AotCannyEngine",
+    "BucketedCanny",
+    "CannyEngine",
+    "ContinuousBatcher",
+    "EngineStats",
+    "SloTicket",
+    "Ticket",
+    "default_lanes",
+    "infer_buckets",
+    "pack_requests",
+]

@@ -66,6 +66,31 @@ def bucket_batch(n: int, lane: int = 1) -> int:
     return round_up(max(next_pow2(n), 1), lane)
 
 
+def pack_requests(
+    images: Sequence[np.ndarray], hb: int, wb: int, bb: int | None = None,
+    lane: int = 1,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Pad a wave of (h, w) requests into one (bb, hb, wb) bucket batch
+    plus its per-slot true-size table — the packing the lazy engine, the
+    AOT engine, and the continuous batcher all share. Edge-replicate on
+    h/w (what the kernels' true-size border math expects), zeros on the
+    phantom batch slots. ``bb=None`` derives the batch bucket from the
+    request count (pow2, then ``lane``-divisible)."""
+    if bb is None:
+        bb = bucket_batch(len(images), lane)
+    if len(images) > bb:
+        raise ValueError(f"{len(images)} requests exceed batch bucket {bb}")
+    batch = np.zeros((bb, hb, wb), np.float32)
+    true_hw = np.full((bb, 2), (hb, wb), np.int32)
+    for slot, img in enumerate(images):
+        h, w = img.shape
+        batch[slot] = np.pad(
+            img.astype(np.float32), ((0, hb - h), (0, wb - w)), mode="edge"
+        )
+        true_hw[slot] = (h, w)
+    return batch, true_hw
+
+
 def percentile(samples, q: float) -> float:
     """q-quantile of a bounded sample window; 0 when empty. Shared by the
     engine and stream stats so the clamp logic lives in one place."""
@@ -308,6 +333,7 @@ class CannyEngine:
         dist: Dist = LOCAL,
         timeout: float | None = None,
         max_pending: int | None = None,
+        name: str = "canny-engine",
     ):
         from repro.core.canny.backends import backend_spec
 
@@ -339,6 +365,7 @@ class CannyEngine:
         self.dist = dist
         self.timeout = timeout
         self.max_pending = max_pending
+        self.name = name
         self._cache = _BucketCache(serve_fn, params, interpret, donate, dist)
         self.stats = EngineStats()
         self._lock = threading.Lock()
@@ -374,9 +401,11 @@ class CannyEngine:
                 self._pending.append((image, ticket))
                 return True
 
+        # the engine's name rides in ``what`` so a StreamTimeout names WHICH
+        # engine shed the load, not just that some admission queue was full
         wait_for(
             admitted, timeout,
-            what=f"engine admission (max_pending={self.max_pending})",
+            what=f"engine {self.name!r} admission (max_pending={self.max_pending})",
         )
         return ticket
 
@@ -448,15 +477,10 @@ class CannyEngine:
     def _run_chunk(self, images, chunk, hb, wb, results) -> None:
         # pow2 for bucket-cache reuse, then a multiple of the data-axis
         # size so the batch ALWAYS shards exactly over the mesh
-        bb = bucket_batch(len(chunk), self.dist.batch_size())
-        batch = np.zeros((bb, hb, wb), np.float32)
-        true_hw = np.full((bb, 2), (hb, wb), np.int32)
-        for slot, i in enumerate(chunk):
-            h, w = images[i].shape
-            batch[slot] = np.pad(
-                images[i].astype(np.float32), ((0, hb - h), (0, wb - w)), mode="edge"
-            )
-            true_hw[slot] = (h, w)
+        batch, true_hw = pack_requests(
+            [images[i] for i in chunk], hb, wb, lane=self.dist.batch_size()
+        )
+        bb = batch.shape[0]
         fn = self._cache.get(bb, hb, wb)
         t0 = time.perf_counter()
         if self._mesh_lock is not None:

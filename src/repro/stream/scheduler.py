@@ -29,7 +29,7 @@ import collections
 import dataclasses
 import threading
 import time
-from typing import Callable, Iterable, Iterator
+from typing import Callable, Iterable, Iterator, Sequence
 
 import jax
 import numpy as np
@@ -67,6 +67,25 @@ class StreamStats:
     batch_sizes: collections.Counter = dataclasses.field(
         default_factory=collections.Counter
     )
+    # continuous-serving SLO plane (serve/admission.py): per-request
+    # latency split (enqueue→dispatch, dispatch→complete, total), the
+    # slot-occupancy gauge (requests packed / lane size per dispatch),
+    # and the pass/fail counter against the slo_ms bound
+    queue_wait_ms: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=4096)
+    )
+    service_ms: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=4096)
+    )
+    request_ms: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=4096)
+    )
+    slot_occupancy: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=4096)
+    )
+    slo_ms: float | None = None
+    slo_pass: int = 0
+    slo_fail: int = 0
     # health plane: worker restarts (sampled from the farm), watchdog-
     # flagged slow steps, and per-worker straggler flag counts — the
     # per-host report the controller uses to exclude a sick rank
@@ -111,6 +130,41 @@ class StreamStats:
         with self._lock:
             self.batch_sizes[size] += 1
 
+    def record_request(
+        self, queue_wait_ms: float, service_ms: float, total_ms: float
+    ) -> None:
+        """One continuously-served request's latency split; scores the
+        total against ``slo_ms`` when a bound is set."""
+        with self._lock:
+            self.queue_wait_ms.append(queue_wait_ms)
+            self.service_ms.append(service_ms)
+            self.request_ms.append(total_ms)
+            if self.slo_ms is not None:
+                if total_ms <= self.slo_ms:
+                    self.slo_pass += 1
+                else:
+                    self.slo_fail += 1
+
+    def record_occupancy(self, filled: int, lane: int) -> None:
+        """How full a dispatched slot was (1.0 = the lane was packed)."""
+        with self._lock:
+            self.slot_occupancy.append(filled / lane)
+
+    def latency_ms(self, q: float) -> float:
+        """q-quantile of per-request enqueue→complete latency (the SLO
+        metric; empty until the continuous plane records requests)."""
+        return percentile(self.request_ms, q)
+
+    def slo(self) -> dict:
+        """The SLO scoreboard: bound, pass/fail counts, attainment."""
+        total = self.slo_pass + self.slo_fail
+        return {
+            "slo_ms": self.slo_ms,
+            "pass": self.slo_pass,
+            "fail": self.slo_fail,
+            "attainment": self.slo_pass / total if total else None,
+        }
+
     def mean_batch_size(self) -> float:
         n = sum(self.batch_sizes.values())
         if not n:
@@ -135,6 +189,23 @@ class StreamStats:
         )
         if self.batch_sizes:
             line += f" micro_batch~{self.mean_batch_size():.1f}"
+        if self.request_ms:
+            occ = (
+                sum(self.slot_occupancy) / len(self.slot_occupancy)
+                if self.slot_occupancy
+                else 0.0
+            )
+            line += (
+                f" req_p50={self.latency_ms(0.50):.1f}ms"
+                f" req_p95={self.latency_ms(0.95):.1f}ms"
+                f" req_p99={self.latency_ms(0.99):.1f}ms"
+                f" occupancy~{occ:.2f}"
+            )
+            if self.slo_ms is not None:
+                line += (
+                    f" slo<{self.slo_ms:g}ms:"
+                    f" pass={self.slo_pass} fail={self.slo_fail}"
+                )
         if self.restarts or self.slow_steps or self.straggler_counts:
             line += (
                 f" health: restarts={self.restarts} slow_steps={self.slow_steps}"
@@ -365,6 +436,10 @@ class FarmScheduler:
         max_batch: int = 8,
         adaptive: bool = True,
         timeout: float | None = None,
+        aot: bool = False,
+        linger_ms: float = 5.0,
+        slo_ms: float | None = None,
+        buckets: Sequence[tuple[int, int]] | None = None,
     ) -> Iterator[np.ndarray]:
         """Micro-batching path: frames ride ``CannyEngine.submit``/``drain``.
 
@@ -386,12 +461,29 @@ class FarmScheduler:
         ticket resolution) with a ``StreamTimeout``; ``None`` defers to
         the engine's own default (unbounded for a default-constructed
         engine).
+
+        ``aot=True`` switches to the CONTINUOUS serving plane: frames are
+        admitted to a ``ContinuousBatcher`` over an ``AotCannyEngine``
+        the moment they arrive (no wave barrier — slots dispatch on fill
+        or ``linger_ms``), compilation happens entirely at warmup
+        (``buckets`` explicit, or inferred from the source's
+        height/width), and per-request SLO latency lands in
+        ``self.stats`` against ``slo_ms``. Emission order and edge bits
+        are identical to the wave path. Pass an existing
+        ``ContinuousBatcher`` as ``engine`` to reuse its warmup.
         """
         if self.dist is not None and self.dist.pod_size() > 1:
             raise ValueError(
                 "run_engine batches frames through one engine queue — it "
                 "does not dispatch over pods; use run() with a pod dist"
             )
+        from repro.serve.admission import ContinuousBatcher
+
+        if aot or isinstance(engine, ContinuousBatcher):
+            yield from self._run_continuous(
+                source, engine, max_batch, timeout, linger_ms, slo_ms, buckets
+            )
+            return
         if engine is None:
             from repro.core.patterns.dist import LOCAL
             from repro.serve.engine import CannyEngine
@@ -428,3 +520,56 @@ class FarmScheduler:
                 yield from flush()
         if pending:
             yield from flush()
+
+    def _run_continuous(
+        self, source, batcher, max_batch, timeout, linger_ms, slo_ms, buckets
+    ) -> Iterator[np.ndarray]:
+        """The AOT/continuous engine mode: frames admit the moment they
+        arrive, slots dispatch on fill-or-linger (no wave barrier), and
+        emission stays in frame order — bits identical to the wave path
+        because every frame runs the same bucketed executable."""
+        import collections as _collections
+
+        from repro.core.patterns.dist import LOCAL
+        from repro.serve.admission import ContinuousBatcher
+        from repro.serve.aot import AotCannyEngine
+
+        owned = batcher is None
+        if owned:
+            if buckets is None:
+                h = getattr(source, "height", None)
+                w = getattr(source, "width", None)
+                if h is None or w is None:
+                    raise ValueError(
+                        "aot=True needs the bucket lattice up front: pass "
+                        "buckets=[(h, w), ...] or a source with "
+                        "height/width attributes"
+                    )
+                buckets = [(int(h), int(w))]
+            aot_engine = AotCannyEngine(
+                self.params, buckets=buckets, max_batch=max_batch,
+                dist=self.dist or LOCAL,
+            )
+            batcher = ContinuousBatcher(
+                aot_engine, linger_ms=linger_ms, slo_ms=slo_ms,
+                timeout=timeout, stats=self.stats,
+            )
+        t0 = time.perf_counter()
+        tickets: _collections.deque = _collections.deque()
+        try:
+            for frame in source:
+                tickets.append(batcher.submit(np.asarray(frame, np.float32)))
+                # emit whatever already resolved — admission never blocks
+                # behind emission, emission never waits on a wave barrier
+                while tickets and tickets[0].done:
+                    self.stats.frames += 1
+                    self.stats.wall_s = time.perf_counter() - t0
+                    yield tickets.popleft().result(timeout)
+            while tickets:
+                res = tickets.popleft().result(timeout)
+                self.stats.frames += 1
+                self.stats.wall_s = time.perf_counter() - t0
+                yield res
+        finally:
+            if owned:
+                batcher.close()

@@ -32,6 +32,7 @@ import numpy as np
 
 from repro.core.patterns.farm import put_cancellable
 from repro.data.images import synthetic_batch, synthetic_image
+from repro.distributed.fault_tolerance import FailFast
 
 
 class SyntheticStream:
@@ -244,11 +245,23 @@ class Prefetcher:
                 self._end_enqueued = True
                 put_cancellable(q, exc, stop.is_set)
 
-        t = threading.Thread(target=fill, daemon=True)
+        # FailFast backstop: fill() routes source errors through the queue
+        # itself, but an exception escaping THAT path (the enqueue dying)
+        # previously killed the thread silently and parked the consumer on
+        # q.get() forever — now the poll loop notices the dead thread and
+        # re-raises its recorded exception
+        t = FailFast(target=fill, daemon=True)
         t.start()
         try:
             while True:
-                item = q.get()
+                try:
+                    item = q.get(timeout=0.1)
+                except queue.Empty:
+                    if not t.is_alive():
+                        if t.exception is not None:
+                            raise t.exception
+                        return  # died without a sentinel: cancelled fill
+                    continue
                 if item is self._END:
                     return
                 if isinstance(item, BaseException):

@@ -243,6 +243,87 @@ def test_ticket_result_timeout_on_stuck_wave():
     )).all()
 
 
+def test_drain_probe_interleaved_resolves_in_submission_order(monkeypatch):
+    """Regression for the drain(timeout=0) probe: interleaving submits
+    with non-blocking probes must resolve tickets in SUBMISSION order —
+    the probe is a real wave over whatever is pending, never a reorder."""
+    from repro.serve.engine import Ticket
+
+    order: list[int] = []
+    orig = Ticket._resolve
+    monkeypatch.setattr(
+        Ticket, "_resolve", lambda self, res: (order.append(id(self)), orig(self, res))
+    )
+
+    engine = CannyEngine(PARAMS, bucket_multiple=32, max_batch=4)
+    a = engine.submit(synthetic_image(20, 20, seed=1))
+    assert engine.drain(timeout=0) == 1  # probe with work pending runs it
+    b = engine.submit(synthetic_image(20, 20, seed=2))
+    c = engine.submit(synthetic_image(40, 40, seed=3))  # different bucket
+    d = engine.submit(synthetic_image(20, 20, seed=4))
+    assert engine.drain(timeout=0) == 3
+    assert engine.drain(timeout=0) == 0  # idle probe: no-op, no block
+    # resolution order == submission order, across buckets and probes
+    assert order == [id(t) for t in (a, b, c, d)]
+    assert all(t.done for t in (a, b, c, d))
+
+
+def test_concurrent_submitters_vs_max_pending_no_drops():
+    """N submitter threads against a small max_pending: bounded admission
+    may make them wait, but every ticket resolves exactly once — no
+    deadlock, no dropped ticket."""
+    import threading
+
+    engine = CannyEngine(
+        PARAMS, bucket_multiple=32, max_batch=4, max_pending=3, timeout=60.0
+    )
+    want = canny_reference(synthetic_image(20, 20, seed=0), PARAMS)
+    tickets: list = []
+    lock = threading.Lock()
+    done = threading.Event()
+
+    def submitter():
+        for _ in range(4):
+            t = engine.submit(synthetic_image(20, 20, seed=0))
+            with lock:
+                tickets.append(t)
+
+    def drainer():  # frees admission slots until every submitter finishes
+        while not done.is_set():
+            engine.drain(timeout=0)
+
+    threads = [threading.Thread(target=submitter) for _ in range(5)]
+    helper = threading.Thread(target=drainer, daemon=True)
+    helper.start()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60.0)
+    done.set()
+    helper.join(timeout=60.0)
+    assert not any(t.is_alive() for t in threads), "submitters deadlocked"
+    engine.drain()
+    assert len(tickets) == 20
+    assert all((t.result() == want).all() for t in tickets)
+    assert engine.stats.requests == 20
+
+
+def test_admission_timeout_names_the_engine():
+    """StreamTimeout.what carries the engine's name — under a fleet of
+    engines the timeout says WHICH admission queue was full."""
+    from repro.distributed.fault_tolerance import StreamTimeout
+
+    engine = CannyEngine(
+        PARAMS, bucket_multiple=32, max_pending=1, timeout=0.1,
+        name="front-door",
+    )
+    engine.submit(synthetic_image(20, 20, seed=1))
+    with pytest.raises(StreamTimeout) as ei:
+        engine.submit(synthetic_image(20, 20, seed=2))
+    assert "front-door" in ei.value.what
+    assert "max_pending=1" in ei.value.what
+
+
 def test_submit_max_pending_sheds_load():
     """Bounded admission: a full pending queue times out the submitter
     instead of buffering without limit; a drain frees the slot."""

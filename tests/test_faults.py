@@ -15,12 +15,61 @@ import pytest
 from repro.core.patterns.farm import Farm
 from repro.distributed.fault_tolerance import (
     Backoff,
+    FailFast,
     FaultInjector,
     InjectedFault,
     StreamTimeout,
     wait_for,
 )
 from repro.stream.pod import PodMembership, owns, reassemble_elastic
+
+
+# -- FailFast threads --------------------------------------------------------
+def test_failfast_records_and_reraises_at_join():
+    def boom():
+        raise ValueError("worker died")
+
+    t = FailFast(target=boom, daemon=True)
+    t.start()
+    with pytest.raises(ValueError, match="worker died"):
+        t.join(timeout=5.0)
+    assert isinstance(t.exception, ValueError)  # still inspectable
+    # a second join re-raises again — the error can't be lost
+    with pytest.raises(ValueError, match="worker died"):
+        t.join(timeout=5.0)
+
+
+def test_failfast_join_reraise_false_suppresses():
+    t = FailFast(target=lambda: 1 / 0, daemon=True)
+    t.start()
+    t.join(timeout=5.0, reraise=False)
+    assert isinstance(t.exception, ZeroDivisionError)
+
+
+def test_failfast_clean_exit_joins_silently():
+    t = FailFast(target=lambda: None, daemon=True)
+    t.start()
+    t.join(timeout=5.0)
+    assert t.exception is None
+
+
+def test_failfast_on_error_callback_fires_before_join():
+    seen = []
+    t = FailFast(target=lambda: 1 / 0, daemon=True, on_error=seen.append)
+    t.start()
+    t.join(timeout=5.0, reraise=False)
+    assert len(seen) == 1 and isinstance(seen[0], ZeroDivisionError)
+
+
+def test_failfast_join_timeout_on_live_thread_does_not_raise():
+    release = threading.Event()
+    t = FailFast(target=release.wait, daemon=True)
+    t.start()
+    t.join(timeout=0.05)  # still alive: no error to report yet
+    assert t.is_alive() and t.exception is None
+    release.set()
+    t.join(timeout=5.0)
+    assert not t.is_alive()
 
 
 # -- Backoff / wait_for -----------------------------------------------------
