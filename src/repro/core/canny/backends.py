@@ -8,7 +8,8 @@ execution planes and the features it supports on each:
   serving_fn  — (imgs, true_hw, params, interpret, dist) → edges; the
                 true-size-aware entry the shape-bucketed serving layer
                 (and every mesh path) drives.
-  temporal_fn — (params, warm=, skip=, block_rows=, interpret=) → impl
+  temporal_fn — (params, warm=, skip=, block_rows=, interpret=,
+                donate=) → impl
                 with ``reset()`` and ``step(x) → (edges, cost)``; the
                 stateful streaming plane behind ``TemporalCanny``.
 

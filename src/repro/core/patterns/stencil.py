@@ -37,6 +37,55 @@ def halo_exchange(
     return _halo_exchange(x, halo, axis, axis_name, pad_mode)
 
 
+def overlap_strips(
+    launch: Callable[[tuple, tuple[jax.Array, jax.Array], int], object],
+    operands: tuple[jax.Array, ...],
+    halos: tuple[jax.Array, jax.Array],
+    *,
+    block_rows: int,
+) -> object:
+    """Split one strip-stage launch so the halo exchange hides under compute.
+
+    ``launch(ops, (top, bot), row_start)`` must run the stage's strip kernel
+    on the given row window with the given external halo slabs; ``operands``
+    are row-aligned (axis 1) and are sliced together, with ``operands[0]``
+    the stencil input the synthetic interior halos are cut from. ``halos``
+    is the shard's exchanged (top, bot) slab pair.
+
+    The split: interior rows ``[bh, h-bh)`` launch with halos sliced from the
+    shard's OWN rows — no dataflow edge to the ppermuted slabs, so the
+    scheduler is free to run the exchange underneath that launch — then the
+    two boundary strips finish on slab arrival. Each sub-launch tile sees
+    exactly the rows + halo rows it would have seen in the single launch
+    (sub-launch boundary slabs are the very rows the neighbour-strip
+    BlockSpecs would have read), so every output is bit-identical; per-strip
+    maps such as the hysteresis ``changed`` counts concatenate back in strip
+    order. Fewer than 3 strips (or a halo wider than a strip) has no
+    interior to hide behind, so it falls back to the serialized launch.
+    """
+    x = operands[0]
+    h = x.shape[1]
+    bh = block_rows
+    n = h // bh
+    hs = halos[0].shape[1]  # slab row count (max(halo, 1), see halo_rows)
+    if n < 3 or hs > bh:
+        return launch(operands, halos, 0)
+
+    top_ops = tuple(a[:, :bh] for a in operands)
+    mid_ops = tuple(a[:, bh : h - bh] for a in operands)
+    bot_ops = tuple(a[:, h - bh :] for a in operands)
+
+    mid = launch(mid_ops, (x[:, bh - hs : bh], x[:, h - bh : h - bh + hs]), bh)
+    top = launch(top_ops, (halos[0], x[:, bh : bh + hs]), 0)
+    bot = launch(bot_ops, (x[:, h - bh - hs : h - bh], halos[1]), h - bh)
+
+    if isinstance(mid, tuple):
+        return tuple(
+            jnp.concatenate([t, m, b], axis=1) for t, m, b in zip(top, mid, bot)
+        )
+    return jnp.concatenate([top, mid, bot], axis=1)
+
+
 def stencil2d(
     fn: Callable[[jax.Array, StencilCtx], jax.Array],
     dist: Dist = Dist(),

@@ -153,6 +153,41 @@ def _staged_zero_fe(b: int, hp: int, wp: int):
     )
 
 
+_STEP_CACHE: dict = {}
+
+
+def _make_step_fn(warm_step, warm_skip_step, skip, donate, kw_items):
+    """MODULE-level jitted-step cache, keyed by (backend step fns, skip,
+    donation, static params + geometry). Temporal state machines are
+    created per stream; if each built its own ``jax.jit`` wrapper, every
+    fresh stream would retrace a program some earlier stream already
+    compiled — a per-stream compile tax big enough to flip the warm+skip
+    economics at small frame sizes. Sharing the wrapper restores the
+    compile-once behaviour of the underlying kernel entry points."""
+    key = (warm_step, warm_skip_step, skip, donate, kw_items)
+    fn = _STEP_CACHE.get(key)
+    if fn is not None:
+        return fn
+    kw = dict(kw_items)
+    if skip:
+
+        def run(x, prev_frame, fe, s_w, wk_w, e_w, have, true_hw):
+            return warm_skip_step(
+                x, prev_frame, fe, s_w, wk_w, e_w, have, true_hw=true_hw,
+                **kw,
+            )
+
+        fn = jax.jit(run, donate_argnums=(1, 2, 3, 4, 5) if donate else ())
+    else:
+
+        def run(x, s_w, wk_w, e_w, true_hw):
+            return warm_step(x, s_w, wk_w, e_w, true_hw=true_hw, **kw)
+
+        fn = jax.jit(run, donate_argnums=(1, 2, 3) if donate else ())
+    _STEP_CACHE[key] = fn
+    return fn
+
+
 class PackedTemporal:
     """Temporal state machine shared by every packed-words backend.
 
@@ -163,6 +198,15 @@ class PackedTemporal:
     to a multiple of 32 with edge cols (bit-exact: the kernels anchor at
     ``true_hw``). ``warm=False`` keeps the zero state so every frame runs
     the cold seed — the answer must not change, only the cost counters.
+
+    The hot loop is host-free: the skip gate (``have_prev``) is a device
+    scalar transferred once per reset, the skip DECISION is a traced
+    ``lax.cond`` inside the step program, and in warm mode the threaded
+    state buffers (packed words, stored frame, front-end outputs) are
+    DONATED to the step — on donation-capable platforms (TPU/GPU; the
+    default gate) each stream updates its state in place instead of
+    allocating fresh HBM every frame. ``donate=None`` auto-selects by
+    platform (CPU ignores donation, harmlessly).
     """
 
     def __init__(
@@ -175,6 +219,7 @@ class PackedTemporal:
         warm_step,
         warm_skip_step,
         zero_fe,
+        donate: bool | None = None,
     ):
         self.params = params
         self.warm = warm
@@ -184,13 +229,48 @@ class PackedTemporal:
         self._warm_step = warm_step
         self._warm_skip_step = warm_skip_step
         self._zero_fe = zero_fe
+        if donate is None:
+            donate = jax.devices()[0].platform in ("tpu", "gpu")
+        self.donate = bool(donate)
+        self._steps: dict = {}
+        self._have_true = None
         self.reset()
 
     def reset(self) -> None:
         self._state = None
         self._fe = None
         self._prev_frame = None
-        self._have_prev = False
+        self._have_prev = None
+
+    def _step_fn(self, bh: int):
+        """One jitted step per (skip, block geometry), resolved through
+        the module-level cache (shared across instances): closes over the
+        static params and, in warm mode, donates the threaded state args —
+        the gate scalar and ``true_hw`` are deliberately NOT donated (they
+        persist across frames)."""
+        key = (self.skip, bh)
+        fn = self._steps.get(key)
+        if fn is not None:
+            return fn
+        p = self.params
+        kw_items = (
+            ("sigma", p.sigma),
+            ("radius", p.radius),
+            ("low", p.low),
+            ("high", p.high),
+            ("l2_norm", p.l2_norm),
+            ("block_rows", bh),
+            ("interpret", self.interpret),
+        )
+        fn = _make_step_fn(
+            self._warm_step,
+            self._warm_skip_step,
+            self.skip,
+            self.donate and self.warm,
+            kw_items,
+        )
+        self._steps[key] = fn
+        return fn
 
     def step(self, x: jax.Array):
         b, h, w = x.shape
@@ -202,49 +282,50 @@ class PackedTemporal:
         true_hw = jnp.broadcast_to(jnp.asarray([h, w], jnp.int32), (b, 2))
         hp = -(-h // bh) * bh
         if self._state is None:
-            z = jnp.zeros((b, hp, wp // 32), jnp.uint32)
-            self._state = (z, z, z)
+            # three DISTINCT zero buffers: donation rejects the same buffer
+            # appearing under two donated arguments
+            self._state = tuple(
+                jnp.zeros((b, hp, wp // 32), jnp.uint32) for _ in range(3)
+            )
             self._prev_frame = jnp.zeros((b, hp, wp), jnp.float32)
             self._fe = self._zero_fe(b, hp, wp)
-        kw = dict(
-            sigma=p.sigma,
-            radius=p.radius,
-            low=p.low,
-            high=p.high,
-            l2_norm=p.l2_norm,
-            block_rows=bh,
-            interpret=self.interpret,
-            true_hw=true_hw,
-        )
+        if self._have_prev is None:
+            # device-resident gate: one transfer per reset, none per frame
+            self._have_prev = jnp.zeros((), bool)
+            if self._have_true is None:
+                self._have_true = jnp.ones((), bool)
+        step_fn = self._step_fn(bh)
         if self.skip:
-            edges, fe, state, frame, cost = self._warm_skip_step(
+            edges, fe, state, frame, cost = step_fn(
                 x, self._prev_frame, self._fe, *self._state,
-                jnp.asarray(self._have_prev), **kw,
+                self._have_prev, true_hw,
             )
             if self.warm:
                 self._fe = fe
                 self._prev_frame = frame
-                self._have_prev = True
+                self._have_prev = self._have_true
         else:
-            edges, state, cost = self._warm_step(x, *self._state, **kw)
+            edges, state, cost = step_fn(x, *self._state, true_hw)
         if self.warm:
             self._state = tuple(state)
         return edges[..., :w], cost
 
 
 def _fused_temporal(params, *, warm=True, skip=False, block_rows=None,
-                    interpret=None):
+                    interpret=None, donate=None):
     return PackedTemporal(
         params, warm, skip, block_rows, interpret,
         _fused_warm_step, _fused_warm_skip_step, lambda b, hp, wp: (),
+        donate=donate,
     )
 
 
 def _staged_temporal(params, *, warm=True, skip=False, block_rows=None,
-                     interpret=None):
+                     interpret=None, donate=None):
     return PackedTemporal(
         params, warm, skip, block_rows, interpret,
         staged_canny_warm, _staged_warm_skip_step, _staged_zero_fe,
+        donate=donate,
     )
 
 

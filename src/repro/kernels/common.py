@@ -91,11 +91,39 @@ def pick_batch_block(
     return bt
 
 
-def strip_specs(n_strips: int, bh: int, w: int, bt: int = 1):
-    """(prev, cur, next) BlockSpecs for the neighbour-strip halo trick on
-    a 2D ``(batch_tiles, n_strips)`` grid. Blocks are (BT, BH, W): the
-    strip-axis clamp is per-image because a block never crosses images.
+def strip_grid(b: int, bt: int, n_strips: int):
+    """Launch grid + strip-walking axis for a (batch, strip) kernel.
+
+    Normally the grid is 2D ``(b // bt, n_strips)`` and strips walk axis 1
+    (``STRIP_AXIS``). When ONE batch tile covers the whole batch (``bt ==
+    b`` — the b=1 serving case, and any batch small enough for a single
+    VMEM-resident block) the batch grid axis is degenerate: it buys no
+    tiling, but every index map still evaluates a dead batch coordinate
+    per grid cell. Dropping it dispatches a flat 1D ``(n_strips,)`` grid —
+    the no-batch-axis program a ``jax.vmap`` lifting never produces, which
+    is what closes the b=1 batch-grid-vs-vmap gap (BENCH
+    ``canny_batchgrid_b1_parity``). Returns ``(grid, strip_axis)``; pass
+    ``strip_axis`` to the kernel so ``pl.program_id`` reads the right dim.
     """
+    if bt == b:
+        return (n_strips,), 0
+    return (b // bt, n_strips), 1
+
+
+def strip_specs(n_strips: int, bh: int, w: int, bt: int = 1, strip_axis: int = 1):
+    """(prev, cur, next) BlockSpecs for the neighbour-strip halo trick on
+    a 2D ``(batch_tiles, n_strips)`` grid — or the flat 1D ``(n_strips,)``
+    grid when ``strip_axis == 0`` (see ``strip_grid``). Blocks are
+    (BT, BH, W): the strip-axis clamp is per-image because a block never
+    crosses images.
+    """
+    if strip_axis == 0:
+        prev = pl.BlockSpec((bt, bh, w), lambda i: (0, jnp.maximum(i - 1, 0), 0))
+        cur = pl.BlockSpec((bt, bh, w), lambda i: (0, i, 0))
+        nxt = pl.BlockSpec(
+            (bt, bh, w), lambda i: (0, jnp.minimum(i + 1, n_strips - 1), 0)
+        )
+        return prev, cur, nxt
     prev = pl.BlockSpec((bt, bh, w), lambda b, i: (b, jnp.maximum(i - 1, 0), 0))
     cur = pl.BlockSpec((bt, bh, w), lambda b, i: (b, i, 0))
     nxt = pl.BlockSpec(
@@ -104,31 +132,39 @@ def strip_specs(n_strips: int, bh: int, w: int, bt: int = 1):
     return prev, cur, nxt
 
 
-def out_strip_spec(bh: int, w: int, bt: int = 1):
+def out_strip_spec(bh: int, w: int, bt: int = 1, strip_axis: int = 1):
+    if strip_axis == 0:
+        return pl.BlockSpec((bt, bh, w), lambda i: (0, i, 0))
     return pl.BlockSpec((bt, bh, w), lambda b, i: (b, i, 0))
 
 
-def per_image_spec(cols: int, bt: int = 1):
+def per_image_spec(cols: int, bt: int = 1, strip_axis: int = 1):
     """Spec for per-image metadata rows, e.g. the (B, 2) true-size table:
     every strip of image-block b binds the same (BT, cols) slice."""
+    if strip_axis == 0:
+        return pl.BlockSpec((bt, cols), lambda i: (0, 0))
     return pl.BlockSpec((bt, cols), lambda b, i: (b, 0))
 
 
-def halo_spec(halo: int, w: int, bt: int = 1):
+def halo_spec(halo: int, w: int, bt: int = 1, strip_axis: int = 1):
     """Spec for an externally supplied (B, halo, W) halo slab: every strip
     of image-block b binds the same rows. The slab feeds the FIRST/LAST
     local strips (where the clamped neighbour trick has no neighbour) —
     under ``shard_map`` it carries the ppermute-exchanged rows of the
     adjacent shard, so the shard-local grid composes into one global
     stencil bit-identically (see ``assemble_rows``)."""
+    if strip_axis == 0:
+        return pl.BlockSpec((bt, halo, w), lambda i: (0, 0, 0))
     return pl.BlockSpec((bt, halo, w), lambda b, i: (b, 0, 0))
 
 
-def offset_spec(bt: int = 1):
+def offset_spec(bt: int = 1, strip_axis: int = 1):
     """Spec for the (1, 1) int32 global-row-offset scalar: the first global
     row this shard owns, added to ``i*bh`` so border logic anchored at
     per-image TRUE sizes keeps working on a shard-local grid."""
     del bt
+    if strip_axis == 0:
+        return pl.BlockSpec((1, 1), lambda i: (0, 0))
     return pl.BlockSpec((1, 1), lambda b, i: (0, 0))
 
 
@@ -212,7 +248,17 @@ def check_halos(halos, b: int, halo: int, w: int):
     return top, bot
 
 
-def skip_specs_operands(skip_mask, prev_out, out_shape, bh: int, bt: int):
+def strip_map_spec(bt: int = 1, strip_axis: int = 1):
+    """Spec for a per-(image, strip) map — e.g. the hysteresis (B,
+    n_strips) changed counters — one (BT, 1) cell per grid point."""
+    if strip_axis == 0:
+        return pl.BlockSpec((bt, 1), lambda i: (0, i))
+    return pl.BlockSpec((bt, 1), lambda b, i: (b, i))
+
+
+def skip_specs_operands(
+    skip_mask, prev_out, out_shape, bh: int, bt: int, strip_axis: int = 1
+):
     """Wrapper-side plumbing for the temporal strip-mask path, shared by
     every masked stencil kernel: validates the (B, n_strips) mask + the
     stored previous outputs (must mirror the kernel's outputs exactly),
@@ -232,10 +278,10 @@ def skip_specs_operands(skip_mask, prev_out, out_shape, bh: int, bt: int):
             f"prev_out must mirror the outputs "
             f"{[(s.shape, s.dtype) for s in shapes]}"
         )
-    specs = [pl.BlockSpec((bt, 1), lambda b_, i_: (b_, i_))]
+    specs = [strip_map_spec(bt, strip_axis)]
     operands = [skip_mask.astype(jnp.int32)]
     for p, s in zip(prev_out, shapes):
-        specs.append(out_strip_spec(bh, s.shape[-1], bt))
+        specs.append(out_strip_spec(bh, s.shape[-1], bt, strip_axis))
         operands.append(p)
     return specs, operands
 

@@ -56,14 +56,15 @@ def _kernel(
     high: float,
     emit: str,
     masked: bool = False,
+    grid_axis: int = common.STRIP_AXIS,
 ):
     r = radius
     h2 = r + 2
     bt, bh, w = cur_ref.shape
     # grid position binds at kernel top level only — frontend() may run
     # inside a pl.when branch, where program_id cannot be staged
-    i = pl.program_id(common.STRIP_AXIS)
-    n_strips = pl.num_programs(common.STRIP_AXIS)
+    i = pl.program_id(grid_axis)
+    n_strips = pl.num_programs(grid_axis)
     ht = hw_ref[:, 0].reshape(bt, 1, 1)  # per-image true height
     wt = hw_ref[:, 1].reshape(bt, 1, 1)  # per-image true width
     # First GLOBAL row this kernel's array owns: 0 locally; under shard_map
@@ -234,31 +235,32 @@ def fused_canny_strips(
     n = h // bh
     bt = batch_block or common.pick_batch_block(b, bh, w)
     taps = tuple(float(t) for t in gaussian_kernel1d(sigma, radius))
-    prev, cur, nxt = common.strip_specs(n, bh, w, bt)
+    grid, sx = common.strip_grid(b, bt, n)
+    prev, cur, nxt = common.strip_specs(n, bh, w, bt, sx)
     if emit == "packed":
         if w % 32:
             raise ValueError(f"emit='packed' needs W % 32 == 0, got W={w}")
         nw = w // 32
         out_specs = (
-            common.out_strip_spec(bh, nw, bt),
-            common.out_strip_spec(bh, nw, bt),
+            common.out_strip_spec(bh, nw, bt, sx),
+            common.out_strip_spec(bh, nw, bt, sx),
         )
         out_shape = (
             jax.ShapeDtypeStruct((b, h, nw), jnp.uint32),
             jax.ShapeDtypeStruct((b, h, nw), jnp.uint32),
         )
     else:
-        out_specs = common.out_strip_spec(bh, w, bt)
+        out_specs = common.out_strip_spec(bh, w, bt, sx)
         out_dtype = jnp.float32 if emit == "nms" else jnp.uint8
         out_shape = jax.ShapeDtypeStruct((b, h, w), out_dtype)
     in_specs = [
         prev,
         cur,
         nxt,
-        common.halo_spec(h2, w, bt),
-        common.halo_spec(h2, w, bt),
-        common.per_image_spec(2, bt),
-        common.offset_spec(bt),
+        common.halo_spec(h2, w, bt, sx),
+        common.halo_spec(h2, w, bt, sx),
+        common.per_image_spec(2, bt, sx),
+        common.offset_spec(bt, sx),
     ]
     operands = [
         imgs,
@@ -270,7 +272,9 @@ def fused_canny_strips(
         row_offset,
     ]
     if skip_mask is not None:
-        specs, ops = common.skip_specs_operands(skip_mask, prev_out, out_shape, bh, bt)
+        specs, ops = common.skip_specs_operands(
+            skip_mask, prev_out, out_shape, bh, bt, sx
+        )
         in_specs += specs
         operands += ops
     return pl.pallas_call(
@@ -283,8 +287,9 @@ def fused_canny_strips(
             high=high,
             emit=emit,
             masked=skip_mask is not None,
+            grid_axis=sx,
         ),
-        grid=(b // bt, n),
+        grid=grid,
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,

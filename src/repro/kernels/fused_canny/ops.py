@@ -26,6 +26,7 @@ from jax import lax
 from repro import compat
 from repro.core.canny.hysteresis import warm_seed
 from repro.core.patterns.dist import LOCAL, Dist, StencilCtx
+from repro.core.patterns.stencil import overlap_strips
 from repro.kernels import common
 from repro.kernels.fused_canny.fused_canny import fused_canny_strips
 from repro.kernels.hysteresis.ops import (
@@ -138,10 +139,15 @@ def _sharded_fused_canny(
     h2 = radius + 2
 
     def shard_fn(x, hw, row_off, bh, ctx):
-        halos = ctx.halo_rows(x, h2) if ctx.axis_name is not None else None
-        strong_w, weak_w = fused_canny_strips(
-            x, sigma, radius, low, high, l2_norm, "packed", bh, interpret, hw,
-            halos=halos, row_offset=row_off,
+        # interior strips have no dataflow edge to the exchanged slabs, so
+        # the frontend's ppermute hides under the interior launch; the
+        # sharded fixpoint double-buffers its own exchange (auto overlap)
+        strong_w, weak_w = overlap_strips(
+            lambda ops, slabs, r0: fused_canny_strips(
+                ops[0], sigma, radius, low, high, l2_norm, "packed", bh,
+                interpret, hw, halos=slabs, row_offset=row_off + r0,
+            ),
+            (x,), ctx.halo_rows(x, h2), block_rows=bh,
         )
         packed = packed_fixpoint(strong_w, weak_w, bh, interpret, ctx=hctx)
         return common.unpack_mask(packed)
@@ -165,10 +171,12 @@ def _sharded_fused_frontend(
     h2 = radius + 2
 
     def shard_fn(x, hw, row_off, bh, ctx):
-        halos = ctx.halo_rows(x, h2) if ctx.axis_name is not None else None
-        return fused_canny_strips(
-            x, sigma, radius, low, high, l2_norm, emit, bh, interpret, hw,
-            halos=halos, row_offset=row_off,
+        return overlap_strips(
+            lambda ops, slabs, r0: fused_canny_strips(
+                ops[0], sigma, radius, low, high, l2_norm, emit, bh,
+                interpret, hw, halos=slabs, row_offset=row_off + r0,
+            ),
+            (x,), ctx.halo_rows(x, h2), block_rows=bh,
         )
 
     return _run_sharded(imgs, true_hw, h2, block_rows, dist, shard_fn)
@@ -280,16 +288,20 @@ def fused_canny(
     return edges if had_batch else edges[0]
 
 
-def static_strip_mask(
-    cur: jax.Array, prev: jax.Array, block_rows: int, halo: int
-) -> jax.Array:
-    """Per-(image, strip) frame-diff mask: (B, Hp, W) current + previous
-    frames → (B, n_strips) bool, True iff EVERY input row the strip's
-    front-end stencil reads — rows [i·bh − halo, (i+1)·bh + halo), clamped
-    to the grid — is bitwise identical between the frames. Exactly those
-    strips may reuse the previous front-end output (purity; DESIGN.md §9).
-    Row ranges are resolved with one cumulative-sum pass, so the mask
-    costs one elementwise compare + O(H) adds per image.
+def static_strip_masks(
+    cur: jax.Array, prev: jax.Array, block_rows: int, halos: tuple[int, ...]
+) -> tuple[jax.Array, ...]:
+    """Per-(image, strip) frame-diff masks for SEVERAL stencil widths at
+    once: (B, Hp, W) current + previous frames → one (B, n_strips) bool
+    mask per halo in ``halos``, each True iff EVERY input row the strip's
+    stencil reads — rows [i·bh − halo, (i+1)·bh + halo), clamped to the
+    grid — is bitwise identical between the frames. Exactly those strips
+    may reuse the previous stage output (purity; DESIGN.md §9).
+
+    The full-frame row compare and its cumulative sum are computed ONCE
+    and shared by every width — per extra stencil depth only the O(n)
+    range gather differs, which is what lets the per-stage skip path
+    (gaussian ±r, sobel ±(r+1), NMS ±(r+2)) pay a single frame diff.
     """
     if cur.shape != prev.shape:
         raise ValueError(f"frame shapes differ: {cur.shape} vs {prev.shape}")
@@ -301,9 +313,19 @@ def static_strip_mask(
     csum = jnp.concatenate(
         [jnp.zeros((b, 1), jnp.int32), jnp.cumsum(eq, axis=1)], axis=1
     )
-    lo = np.maximum(np.arange(n) * block_rows - halo, 0)
-    hi = np.minimum((np.arange(n) + 1) * block_rows + halo, hp)
-    return (csum[:, hi] - csum[:, lo]) == jnp.asarray(hi - lo, jnp.int32)
+    out = []
+    for halo in halos:
+        lo = np.maximum(np.arange(n) * block_rows - halo, 0)
+        hi = np.minimum((np.arange(n) + 1) * block_rows + halo, hp)
+        out.append((csum[:, hi] - csum[:, lo]) == jnp.asarray(hi - lo, jnp.int32))
+    return tuple(out)
+
+
+def static_strip_mask(
+    cur: jax.Array, prev: jax.Array, block_rows: int, halo: int
+) -> jax.Array:
+    """Single-width ``static_strip_masks`` (the fused path's one mask)."""
+    return static_strip_masks(cur, prev, block_rows, (halo,))[0]
 
 
 @functools.partial(

@@ -37,14 +37,15 @@ def _kernel(
     taps: tuple[float, ...],
     radius: int,
     masked: bool = False,
+    grid_axis: int = common.STRIP_AXIS,
 ):
     r = radius
     bt, bh, w = cur_ref.shape
     # grid position binds at kernel top level only — compute() may run
     # inside a pl.when branch, where program_id cannot be staged
     grid_pos = (
-        pl.program_id(common.STRIP_AXIS),
-        pl.num_programs(common.STRIP_AXIS),
+        pl.program_id(grid_axis),
+        pl.num_programs(grid_axis),
     )
     if masked:
         skip_ref, prev_out_ref, out_ref = refs
@@ -124,14 +125,15 @@ def gaussian_blur_strips(
     else:
         halo_top, halo_bot = common.check_halos(halos, b, radius, w)
 
-    prev, cur, nxt = common.strip_specs(n, bh, w, bt)
+    grid, sx = common.strip_grid(b, bt, n)
+    prev, cur, nxt = common.strip_specs(n, bh, w, bt, sx)
     out_shape = jax.ShapeDtypeStruct((b, h, w), jnp.float32)
     in_specs = [
         prev,
         cur,
         nxt,
-        common.halo_spec(radius, w, bt),
-        common.halo_spec(radius, w, bt),
+        common.halo_spec(radius, w, bt, sx),
+        common.halo_spec(radius, w, bt, sx),
     ]
     operands = [
         imgs,
@@ -141,16 +143,22 @@ def gaussian_blur_strips(
         halo_bot.astype(imgs.dtype),
     ]
     if skip_mask is not None:
-        specs, ops = common.skip_specs_operands(skip_mask, prev_out, out_shape, bh, bt)
+        specs, ops = common.skip_specs_operands(
+            skip_mask, prev_out, out_shape, bh, bt, sx
+        )
         in_specs += specs
         operands += ops
     return pl.pallas_call(
         functools.partial(
-            _kernel, taps=taps, radius=radius, masked=skip_mask is not None
+            _kernel,
+            taps=taps,
+            radius=radius,
+            masked=skip_mask is not None,
+            grid_axis=sx,
         ),
-        grid=(b // bt, n),
+        grid=grid,
         in_specs=in_specs,
-        out_specs=common.out_strip_spec(bh, w, bt),
+        out_specs=common.out_strip_spec(bh, w, bt, sx),
         out_shape=out_shape,
         interpret=interpret,
     )(*operands)

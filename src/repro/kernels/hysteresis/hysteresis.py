@@ -21,6 +21,8 @@ once per sweep.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 from jax import lax
@@ -38,7 +40,10 @@ def _hshift(v):
     return v | (v << 1) | (pw >> 31) | (v >> 1) | (xw << 31)
 
 
-def _kernel(eprev_ref, ecur_ref, enxt_ref, weak_ref, top_ref, bot_ref, out_ref, changed_ref):
+def _kernel(
+    eprev_ref, ecur_ref, enxt_ref, weak_ref, top_ref, bot_ref, out_ref,
+    changed_ref, *, grid_axis=common.STRIP_AXIS,
+):
     bt, bh, nw = ecur_ref.shape
     ext = common.assemble_rows(
         eprev_ref[...],
@@ -46,6 +51,7 @@ def _kernel(eprev_ref, ecur_ref, enxt_ref, weak_ref, top_ref, bot_ref, out_ref, 
         enxt_ref[...],
         1,
         "zero",
+        grid_axis=grid_axis,
         top_ext=top_ref[...],
         bot_ext=bot_ref[...],
     )  # (bt, bh+2, nw) uint32; halo rows stay FIXED during this launch
@@ -121,21 +127,22 @@ def hysteresis_sweep_strips(
             )
     n = h // bh
     bt = batch_block or common.pick_batch_block(b, bh, nw)
-    prev, cur, nxt = common.strip_specs(n, bh, nw, bt)
+    grid, sx = common.strip_grid(b, bt, n)
+    prev, cur, nxt = common.strip_specs(n, bh, nw, bt, sx)
     return pl.pallas_call(
-        _kernel,
-        grid=(b // bt, n),
+        functools.partial(_kernel, grid_axis=sx),
+        grid=grid,
         in_specs=[
             prev,
             cur,
             nxt,
-            common.out_strip_spec(bh, nw, bt),
-            common.halo_spec(1, nw, bt),
-            common.halo_spec(1, nw, bt),
+            common.out_strip_spec(bh, nw, bt, sx),
+            common.halo_spec(1, nw, bt, sx),
+            common.halo_spec(1, nw, bt, sx),
         ],
         out_specs=(
-            common.out_strip_spec(bh, nw, bt),
-            pl.BlockSpec((bt, 1), lambda bi, si: (bi, si)),
+            common.out_strip_spec(bh, nw, bt, sx),
+            common.strip_map_spec(bt, sx),
         ),
         out_shape=(
             jax.ShapeDtypeStruct((b, h, nw), jnp.uint32),

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.patterns.dist import StencilCtx
+from repro.core.patterns.stencil import overlap_strips
 from repro.kernels import common
 from repro.kernels.hysteresis.hysteresis import hysteresis_sweep_strips
 
@@ -34,11 +35,12 @@ def packed_fixpoint(
     block_rows: int,
     interpret: bool | None = None,
     ctx: StencilCtx | None = None,
+    overlap: bool | None = None,
 ) -> jax.Array:
     """Drive packed (B, H, W//32) masks to the global fixpoint: one XLA
     while-loop of whole-batch sweep launches. H must divide block_rows."""
     return packed_fixpoint_count(
-        strong_words, weak_words, block_rows, interpret, ctx
+        strong_words, weak_words, block_rows, interpret, ctx, overlap
     )[0]
 
 
@@ -48,6 +50,7 @@ def packed_fixpoint_count(
     block_rows: int,
     interpret: bool | None = None,
     ctx: StencilCtx | None = None,
+    overlap: bool | None = None,
 ):
     """``packed_fixpoint`` + its cost: → (packed, launches, dilations).
 
@@ -69,16 +72,50 @@ def packed_fixpoint_count(
     changed maps over all of ``ctx.sync_axes`` — mandatory, because a
     psum inside a ``lax.while_loop`` body requires every device to agree
     on the trip count.
+
+    ``overlap`` selects the double-buffered sweep schedule: the strip grid
+    is split into an interior body (whose halo rows come from the shard's
+    own edge strips, so it has NO dataflow edge to the ppermute) plus two
+    boundary strips that finish on slab arrival — sweep k's exchange hides
+    under sweep k's interior dilation, bit-identically (each tile sees the
+    exact rows the serialized launch fed it). ``None`` auto-enables it
+    exactly when the row axis is sharded (locally there is no exchange to
+    hide); ``True`` forces the split schedule with the local zero-border
+    slabs, which is how the conformance matrix pins overlapped ==
+    serialized without a mesh; ``False`` always serializes.
     """
     ctx = ctx or StencilCtx(None, "zero")
     sharded_rows = ctx.axis_name is not None
+    if overlap is None:
+        overlap = sharded_rows
+
+    def sweep(e):
+        if sharded_rows:
+            halos = ctx.halo_rows(e, 1, pad_mode="zero")
+        elif overlap:
+            z = jnp.zeros((e.shape[0], 1, e.shape[-1]), jnp.uint32)
+            halos = (z, z)  # the local zero-border rule, as explicit slabs
+        else:
+            return hysteresis_sweep_strips(
+                e, weak_words, block_rows, interpret, halos=None
+            )
+        if not overlap:
+            return hysteresis_sweep_strips(
+                e, weak_words, block_rows, interpret, halos=halos
+            )
+
+        def launch(ops, slabs, row_start):
+            return hysteresis_sweep_strips(
+                ops[0], ops[1], block_rows, interpret, halos=slabs
+            )
+
+        return overlap_strips(
+            launch, (e, weak_words), halos, block_rows=block_rows
+        )
 
     def body(carry):
         e, _, n, work = carry
-        halos = ctx.halo_rows(e, 1, pad_mode="zero") if sharded_rows else None
-        e2, changed = hysteresis_sweep_strips(
-            e, weak_words, block_rows, interpret, halos=halos
-        )
+        e2, changed = sweep(e)
         c = ctx.sum_global(changed.sum())
         return e2, c, n + 1, work + c
 
@@ -89,14 +126,24 @@ def packed_fixpoint_count(
     return packed, n, work
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("block_rows", "interpret", "overlap")
+)
 def hysteresis_from_masks(
     strong: jax.Array,
     weak: jax.Array,
     block_rows: int | None = None,
     interpret: bool | None = None,
+    overlap: bool | None = None,
 ) -> jax.Array:
-    """(h,w) or (b,h,w) strong/weak bool|uint8 masks → uint8 edges."""
+    """(h,w) or (b,h,w) strong/weak bool|uint8 masks → uint8 edges.
+
+    ``overlap`` forces/forbids the double-buffered sweep schedule (see
+    ``packed_fixpoint_count``); the default serializes locally. Odd
+    heights and W % 32 ≠ 0 tails pad here, BEFORE the schedule choice, so
+    both schedules see identical grids — the conformance matrix pins
+    their bit-equality across exactly these shapes.
+    """
     s8, had_batch = common.as_batch(strong.astype(jnp.uint8))
     w8, _ = common.as_batch(weak.astype(jnp.uint8))
     bh = block_rows or common.pick_block_rows(s8.shape[-2], min_rows=1)
@@ -105,7 +152,10 @@ def hysteresis_from_masks(
     wp, _ = common.pad_rows_to_multiple(w8, bh, mode="zero")
     sp, w = common.pad_cols_to_multiple(sp, 32)
     wp, _ = common.pad_cols_to_multiple(wp, 32)
-    packed = packed_fixpoint(common.pack_mask(sp), common.pack_mask(wp), bh, interpret)
+    packed = packed_fixpoint(
+        common.pack_mask(sp), common.pack_mask(wp), bh, interpret,
+        overlap=overlap,
+    )
     edges = common.crop_rows(common.unpack_mask(packed)[..., :w], h)
     return edges if had_batch else edges[0]
 

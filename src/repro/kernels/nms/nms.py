@@ -62,11 +62,12 @@ def _kernel(
     dir_ref,
     *refs,
     masked: bool = False,
+    grid_axis: int = common.STRIP_AXIS,
 ):
     _, bh, w = mcur_ref.shape
     grid_pos = (
-        pl.program_id(common.STRIP_AXIS),
-        pl.num_programs(common.STRIP_AXIS),
+        pl.program_id(grid_axis),
+        pl.num_programs(grid_axis),
     )
     if masked:
         skip_ref, prev_out_ref, out_ref = refs
@@ -121,15 +122,16 @@ def nms_strips(
     else:
         halo_top, halo_bot = common.check_halos(halos, b, 1, w)
 
-    prev, cur, nxt = common.strip_specs(n, bh, w, bt)
+    grid, sx = common.strip_grid(b, bt, n)
+    prev, cur, nxt = common.strip_specs(n, bh, w, bt, sx)
     out_shape = jax.ShapeDtypeStruct((b, h, w), jnp.float32)
     in_specs = [
         prev,
         cur,
         nxt,
-        common.halo_spec(1, w, bt),
-        common.halo_spec(1, w, bt),
-        common.out_strip_spec(bh, w, bt),
+        common.halo_spec(1, w, bt, sx),
+        common.halo_spec(1, w, bt, sx),
+        common.out_strip_spec(bh, w, bt, sx),
     ]
     operands = [
         mag,
@@ -140,14 +142,16 @@ def nms_strips(
         dirs,
     ]
     if skip_mask is not None:
-        specs, ops = common.skip_specs_operands(skip_mask, prev_out, out_shape, bh, bt)
+        specs, ops = common.skip_specs_operands(
+            skip_mask, prev_out, out_shape, bh, bt, sx
+        )
         in_specs += specs
         operands += ops
     return pl.pallas_call(
-        functools.partial(_kernel, masked=skip_mask is not None),
-        grid=(b // bt, n),
+        functools.partial(_kernel, masked=skip_mask is not None, grid_axis=sx),
+        grid=grid,
         in_specs=in_specs,
-        out_specs=common.out_strip_spec(bh, w, bt),
+        out_specs=common.out_strip_spec(bh, w, bt, sx),
         out_shape=out_shape,
         interpret=interpret,
     )(*operands)

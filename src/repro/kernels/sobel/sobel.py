@@ -104,11 +104,12 @@ def _kernel(
     *refs,
     l2_norm: bool,
     masked: bool = False,
+    grid_axis: int = common.STRIP_AXIS,
 ):
     bt, bh, w = cur_ref.shape
     grid_pos = (
-        pl.program_id(common.STRIP_AXIS),
-        pl.num_programs(common.STRIP_AXIS),
+        pl.program_id(grid_axis),
+        pl.num_programs(grid_axis),
     )
     ht = hw_ref[:, 0].reshape(bt, 1, 1)
     wt = hw_ref[:, 1].reshape(bt, 1, 1)
@@ -184,7 +185,8 @@ def sobel_strips(
         row_offset = jnp.zeros((1, 1), jnp.int32)
     row_offset = jnp.asarray(row_offset, jnp.int32).reshape(1, 1)
 
-    prev, cur, nxt = common.strip_specs(n, bh, w, bt)
+    grid, sx = common.strip_grid(b, bt, n)
+    prev, cur, nxt = common.strip_specs(n, bh, w, bt, sx)
     out_shape = (
         jax.ShapeDtypeStruct((b, h, w), jnp.float32),
         jax.ShapeDtypeStruct((b, h, w), jnp.uint8),
@@ -193,10 +195,10 @@ def sobel_strips(
         prev,
         cur,
         nxt,
-        common.halo_spec(1, w, bt),
-        common.halo_spec(1, w, bt),
-        common.per_image_spec(2, bt),
-        common.offset_spec(bt),
+        common.halo_spec(1, w, bt, sx),
+        common.halo_spec(1, w, bt, sx),
+        common.per_image_spec(2, bt, sx),
+        common.offset_spec(bt, sx),
     ]
     operands = [
         imgs,
@@ -208,16 +210,20 @@ def sobel_strips(
         row_offset,
     ]
     if skip_mask is not None:
-        specs, ops = common.skip_specs_operands(skip_mask, prev_out, out_shape, bh, bt)
+        specs, ops = common.skip_specs_operands(
+            skip_mask, prev_out, out_shape, bh, bt, sx
+        )
         in_specs += specs
         operands += ops
     return pl.pallas_call(
-        functools.partial(_kernel, l2_norm=l2_norm, masked=skip_mask is not None),
-        grid=(b // bt, n),
+        functools.partial(
+            _kernel, l2_norm=l2_norm, masked=skip_mask is not None, grid_axis=sx
+        ),
+        grid=grid,
         in_specs=in_specs,
         out_specs=(
-            common.out_strip_spec(bh, w, bt),
-            common.out_strip_spec(bh, w, bt),
+            common.out_strip_spec(bh, w, bt, sx),
+            common.out_strip_spec(bh, w, bt, sx),
         ),
         out_shape=out_shape,
         interpret=interpret,

@@ -36,8 +36,9 @@ from jax import lax
 
 from repro.core.canny.hysteresis import warm_seed
 from repro.core.patterns.dist import LOCAL, Dist, StencilCtx
+from repro.core.patterns.stencil import overlap_strips
 from repro.kernels import common
-from repro.kernels.fused_canny.ops import _run_sharded, static_strip_mask
+from repro.kernels.fused_canny.ops import _run_sharded, static_strip_masks
 from repro.kernels.gaussian.gaussian import gaussian_blur_strips
 from repro.kernels.hysteresis.ops import (
     hysteresis_from_masks,
@@ -64,8 +65,39 @@ def _frontend(
     the temporal strip-skip path (local only): per-stage static masks +
     stored previous outputs, each stage launch-skipped entirely via
     ``lax.cond`` when every strip is static. Returns
-    ((blur, mag, dirs, sup), fe_launches, recomputed_tiles)."""
+    ((blur, mag, dirs, sup), fe_launches, recomputed_tiles).
+
+    Sharded, every stage launches through ``overlap_strips``: the stage's
+    interior strips depend only on the previous stage's local output, so
+    each ppermute slab exchange is in flight WHILE the interior computes,
+    and only the two boundary strips wait on arrival — the staged pipeline
+    never serializes a full stage behind its halo exchange."""
     sharded = ctx.axis_name is not None
+
+    if sharded:
+        g_halos = ctx.halo_rows(x, max(radius, 1))
+        blur = overlap_strips(
+            lambda ops, slabs, r0: gaussian_blur_strips(
+                ops[0], sigma, radius, bh, interpret, halos=slabs
+            ),
+            (x,), g_halos, block_rows=bh,
+        )
+        s_halos = ctx.halo_rows(blur, 1)
+        mag, dirs = overlap_strips(
+            lambda ops, slabs, r0: sobel_strips(
+                ops[0], l2_norm, bh, interpret, true_hw=hw, halos=slabs,
+                row_offset=row_off + r0,
+            ),
+            (blur,), s_halos, block_rows=bh,
+        )
+        n_halos = zctx.halo_rows(mag, 1)
+        sup = overlap_strips(
+            lambda ops, slabs, r0: nms_strips(
+                ops[0], ops[1], bh, interpret, halos=slabs
+            ),
+            (mag, dirs), n_halos, block_rows=bh,
+        )
+        return (blur, mag, dirs, sup), jnp.int32(3), jnp.int32(0)
 
     def stage(compute_fn, reuse_val, mask):
         if mask is None:
@@ -80,29 +112,26 @@ def _frontend(
         )
         return out, launches, n_tiles - n_static
 
-    g_halos = ctx.halo_rows(x, max(radius, 1)) if sharded else None
     blur, lg, sg = stage(
         lambda m: gaussian_blur_strips(
-            x, sigma, radius, bh, interpret, halos=g_halos,
+            x, sigma, radius, bh, interpret,
             skip_mask=m, prev_out=None if m is None else prev[0],
         ),
         None if masks is None else prev[0],
         None if masks is None else masks[0],
     )
-    s_halos = ctx.halo_rows(blur, 1) if sharded else None
     (mag, dirs), ls, ss = stage(
         lambda m: sobel_strips(
-            blur, l2_norm, bh, interpret, true_hw=hw, halos=s_halos,
+            blur, l2_norm, bh, interpret, true_hw=hw,
             row_offset=row_off, skip_mask=m,
             prev_out=None if m is None else (prev[1], prev[2]),
         ),
         None if masks is None else (prev[1], prev[2]),
         None if masks is None else masks[1],
     )
-    n_halos = zctx.halo_rows(mag, 1) if sharded else None
     sup, ln, sn = stage(
         lambda m: nms_strips(
-            mag, dirs, bh, interpret, halos=n_halos,
+            mag, dirs, bh, interpret,
             skip_mask=m, prev_out=None if m is None else prev[3],
         ),
         None if masks is None else prev[3],
@@ -292,9 +321,12 @@ def staged_canny_warm_skip(
     prev_padded, _ = common.pad_rows_to_multiple(prev_imgs.astype(jnp.float32), bh)
     if true_hw is None:
         true_hw = jnp.broadcast_to(jnp.asarray([h, w], jnp.int32), (b, 2))
+    # one frame diff + cumsum shared by all three stencil depths
     masks = tuple(
-        static_strip_mask(padded, prev_padded, bh, halo) & have_prev
-        for halo in (max(radius, 1), radius + 1, radius + 2)
+        m & have_prev
+        for m in static_strip_masks(
+            padded, prev_padded, bh, (max(radius, 1), radius + 1, radius + 2)
+        )
     )
     ctx = StencilCtx(None, "edge")
     row_off = jnp.zeros((1, 1), jnp.int32)

@@ -231,6 +231,42 @@ class RooflineReport:
         return dataclasses.asdict(self)
 
 
+def cost_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized to one flat dict.
+
+    Some backends (CPU PJRT) return a one-element list of per-program
+    dicts; TPU returns the dict directly. Missing analysis → {}.
+    """
+    cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost
+
+
+def kernel_bandwidth(compiled, measured_s: float, attainable_bps: float) -> dict:
+    """Achieved vs attainable bandwidth for ONE compiled kernel program.
+
+    Reads XLA's own HBM-traffic accounting (``bytes accessed``) off the
+    compiled executable and divides by the measured wall-clock to get the
+    achieved bandwidth; ``attainable_bps`` is the caller's roofline
+    ceiling (on real hardware ``hw.HBM_BW``; on a bench host, a measured
+    streaming baseline). ``pct`` is achieved/attainable × 100 — the
+    number a kernel row carries so regressions in memory efficiency are
+    visible without re-deriving the analytic byte counts per kernel.
+    """
+    cost = cost_dict(compiled)
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    achieved = bytes_accessed / measured_s if measured_s > 0 else 0.0
+    pct = 100.0 * achieved / attainable_bps if attainable_bps > 0 else None
+    return {
+        "bytes_accessed": bytes_accessed,
+        "flops": float(cost.get("flops", 0.0)),
+        "achieved_bps": achieved,
+        "attainable_bps": attainable_bps,
+        "pct": pct,
+    }
+
+
 def analyze(
     compiled,
     *,
@@ -243,7 +279,7 @@ def analyze(
     analytic_bytes_per_dev: float | None = None,
     note: str = "",
 ) -> RooflineReport:
-    cost = compiled.cost_analysis() or {}
+    cost = cost_dict(compiled)
     raw_flops = float(cost.get("flops", 0.0))
     raw_bytes = float(cost.get("bytes accessed", 0.0))
     text = compiled.as_text()

@@ -31,6 +31,7 @@ warm/skip (or a non-local ``dist``) it does not declare raises
 
 from __future__ import annotations
 
+import functools
 from typing import Callable
 
 import jax
@@ -67,19 +68,23 @@ class JnpTemporal:
     bit-identical by purity."""
 
     def __init__(self, params: CannyParams, *, warm=True, skip=False,
-                 block_rows=None, interpret=None):
+                 block_rows=None, interpret=None, donate=None):
         del block_rows, interpret  # no strip grid / Pallas on this path
         self.params = params
         self.warm = warm
         self.skip = skip
+        if donate is None:
+            donate = jax.devices()[0].platform in ("tpu", "gpu")
+        self.donate = bool(donate) and warm
         self._step = self._make_step()
+        self._have_true = jnp.ones((), bool)
         self.reset()
 
     def reset(self) -> None:
         self._state = None
         self._prev_frame = None
         self._prev_nms = None
-        self._have_prev = False
+        self._have_prev = None
 
     def _make_step(self) -> Callable:
         from repro.core.canny.gaussian import gaussian_stage
@@ -93,9 +98,10 @@ class JnpTemporal:
             mag, dirs = sobel_stage(blur, ctx, params)
             return nms_stage(mag, dirs, ctx)
 
+        donated = (1, 2, 3) if self.donate else ()
         if not self.skip:
 
-            @jax.jit
+            @functools.partial(jax.jit, donate_argnums=donated)
             def step(imgs, prev_strong, prev_weak, prev_edges):
                 sup = frontend(imgs)
                 strong, weak = double_threshold(sup, params)
@@ -105,7 +111,11 @@ class JnpTemporal:
 
             return step
 
-        @jax.jit
+        # prev_frame is the CALLER's frame array (stored by reference), so it
+        # is never donated — only buffers this state machine itself produced
+        donated = (2, 3, 4, 5) if self.donate else ()
+
+        @functools.partial(jax.jit, donate_argnums=donated)
         def step_skip(imgs, prev_frame, prev_nms, prev_s, prev_w, prev_e, have):
             same = have & jnp.all(imgs == prev_frame)
             sup, fe = lax.cond(
@@ -125,18 +135,21 @@ class JnpTemporal:
     def step(self, x: jax.Array):
         b, h, w = x.shape
         if self._state is None:
-            z = jnp.zeros((b, h, w), bool)
-            self._state = (z, z, z)
+            # distinct zero buffers: donated args must not share a buffer
+            self._state = tuple(jnp.zeros((b, h, w), bool) for _ in range(3))
             self._prev_frame = jnp.zeros((b, h, w), jnp.float32)
             self._prev_nms = jnp.zeros((b, h, w), jnp.float32)
+        if self._have_prev is None:
+            # device-resident gate: one transfer per reset, none per frame
+            self._have_prev = jnp.zeros((), bool)
         if self.skip:
             edges, nms, state, cost = self._step(
                 x, self._prev_frame, self._prev_nms, *self._state,
-                jnp.asarray(self._have_prev),
+                self._have_prev,
             )
             if self.warm:
                 self._prev_frame, self._prev_nms = x, nms
-                self._have_prev = True
+                self._have_prev = self._have_true
         else:
             edges, state, cost = self._step(x, *self._state)
         if self.warm:
@@ -170,6 +183,7 @@ class TemporalCanny:
         interpret: bool | None = None,
         skip: bool = False,
         dist: Dist = LOCAL,
+        donate: bool | None = None,
     ):
         if skip and not warm:
             raise ValueError(
@@ -199,9 +213,10 @@ class TemporalCanny:
         self.skip = skip
         self.block_rows = block_rows
         self.interpret = interpret
+        self.donate = donate
         self._impl = spec.temporal_fn(
             params, warm=warm, skip=skip, block_rows=block_rows,
-            interpret=interpret,
+            interpret=interpret, donate=donate,
         )
         self._shape: tuple[int, int, int] | None = None
         self._cost_log: list = []  # device scalars; folded lazily so the

@@ -1,0 +1,157 @@
+"""Overlap-and-donate plane — conformance cells + donation contracts.
+
+The double-buffered (overlapped) halo schedule must be bit-identical to
+the serialized schedule on every shape class the serving layer produces:
+odd heights, heights below the halo, and W % 32 ≠ 0 tails — plus sweep-
+count parity, because the overlap claim is "same work, hidden exchange",
+not "different convergence". Donation must never change bits either:
+donated warm state and bucket batches are updated in place on capable
+platforms and silently copied on CPU, so the only observable contract is
+no aliasing error + unchanged output, which is exactly what these cells
+pin on both the lazy and AOT engines and the temporal state machine.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.canny.params import CannyParams
+from repro.core.canny.reference import canny_reference
+from repro.core.patterns.stencil import overlap_strips
+from repro.data.images import synthetic_image
+from repro.kernels import common
+from repro.kernels.gaussian.gaussian import gaussian_blur_strips
+from repro.kernels.hysteresis.ops import (
+    hysteresis_from_masks,
+    packed_fixpoint_count,
+)
+from repro.serve.aot import AotCannyEngine
+from repro.serve.engine import CannyEngine
+from repro.stream import TemporalCanny
+
+PARAMS = CannyParams(sigma=1.4, radius=2, low=0.08, high=0.2)
+
+
+def _masks(h, w, seed):
+    rng = np.random.default_rng(seed)
+    strong = rng.random((h, w)) < 0.05
+    weak = (rng.random((h, w)) < 0.35) | strong
+    return jnp.asarray(strong), jnp.asarray(weak)
+
+
+# ---------------- overlapped == serialized conformance cells -----------------
+@pytest.mark.parametrize(
+    "shape",
+    [
+        (37, 53),  # odd height, W % 32 != 0 tail
+        (21, 33),  # below one default strip
+        (64, 96),  # exact grid (the no-padding control)
+        (2, 40),  # height below the packed halo+strip flow
+        (1, 33),  # single row: no vertical propagation at all
+        (96, 64),
+    ],
+    ids=lambda s: f"{s[0]}x{s[1]}",
+)
+def test_overlapped_hysteresis_bit_identical(shape):
+    h, w = shape
+    strong, weak = _masks(h, w, seed=h * 100 + w)
+    ser = hysteresis_from_masks(strong, weak, overlap=False)
+    ovl = hysteresis_from_masks(strong, weak, overlap=True)
+    assert (np.asarray(ser) == np.asarray(ovl)).all()
+
+
+@pytest.mark.parametrize(
+    "b,h,w,bh", [(2, 96, 64, 16), (1, 64, 32, 16), (3, 128, 96, 32)]
+)
+def test_overlapped_fixpoint_sweep_count_parity(b, h, w, bh):
+    rng = np.random.default_rng(b * 1000 + h)
+    strong = rng.random((b, h, w)) < 0.03
+    weak = (rng.random((b, h, w)) < 0.35) | strong
+    sw = common.pack_mask(jnp.asarray(strong, jnp.uint8))
+    ww = common.pack_mask(jnp.asarray(weak, jnp.uint8))
+    ser = packed_fixpoint_count(sw, ww, bh, overlap=False)
+    ovl = packed_fixpoint_count(sw, ww, bh, overlap=True)
+    assert (np.asarray(ser[0]) == np.asarray(ovl[0])).all()
+    assert int(ser[1]) == int(ovl[1])  # HBM-level sweep launches
+    assert int(ser[2]) == int(ovl[2])  # productive in-VMEM dilations
+
+
+def test_overlap_strips_matches_single_launch():
+    rng = np.random.default_rng(7)
+    b, h, w, bh, r = 2, 128, 64, 16, 2
+    x = jnp.asarray(rng.random((b, h, w)).astype(np.float32))
+    top = jnp.asarray(rng.random((b, r, w)).astype(np.float32))
+    bot = jnp.asarray(rng.random((b, r, w)).astype(np.float32))
+
+    def launch(ops, slabs, row_start):
+        return gaussian_blur_strips(ops[0], 1.4, r, bh, halos=slabs)
+
+    single = launch((x,), (top, bot), 0)
+    split = overlap_strips(launch, (x,), (top, bot), block_rows=bh)
+    assert (np.asarray(single) == np.asarray(split)).all()
+
+
+def test_overlap_strips_serializes_when_no_interior():
+    rng = np.random.default_rng(8)
+    b, h, w, bh, r = 1, 32, 64, 16, 2  # 2 strips: nothing to hide behind
+    x = jnp.asarray(rng.random((b, h, w)).astype(np.float32))
+    top = jnp.asarray(rng.random((b, r, w)).astype(np.float32))
+    bot = jnp.asarray(rng.random((b, r, w)).astype(np.float32))
+    calls = []
+
+    def launch(ops, slabs, row_start):
+        calls.append(row_start)
+        return gaussian_blur_strips(ops[0], 1.4, r, bh, halos=slabs)
+
+    split = overlap_strips(launch, (x,), (top, bot), block_rows=bh)
+    assert calls == [0]  # single serialized launch, not a 3-way split
+    assert (np.asarray(split) == np.asarray(launch((x,), (top, bot), 0))).all()
+
+
+# ---------------- donation: unchanged bits, no aliasing errors ---------------
+@pytest.mark.parametrize("backend", ["fused", "pallas", "jnp"])
+def test_temporal_donation_bits_unchanged(backend):
+    frames = [synthetic_image(48, 64, seed=3)] * 2 + [
+        synthetic_image(48, 64, seed=s) for s in (4, 5)
+    ]
+    plain = TemporalCanny(PARAMS, backend=backend, warm=True, skip=True,
+                          donate=False)
+    donating = TemporalCanny(PARAMS, backend=backend, warm=True, skip=True,
+                             donate=True)
+    for f in frames:
+        a, _ = plain.step(jnp.asarray(f))
+        b, _ = donating.step(jnp.asarray(f))
+        assert (np.asarray(a) == np.asarray(b)).all()
+        assert (np.asarray(a) == canny_reference(f, PARAMS)).all()
+
+
+def test_packed_temporal_builds_donating_step():
+    det = TemporalCanny(PARAMS, backend="fused", warm=True, skip=True,
+                        donate=True)
+    det.step(jnp.asarray(synthetic_image(48, 64, seed=1)))
+    impl = det._impl
+    assert impl.donate is True
+    assert len(impl._steps) == 1  # one outer jit per (skip, block geometry)
+    # the gate scalar is device-resident: no per-frame host transfer
+    assert isinstance(impl._have_prev, jax.Array)
+
+
+def test_lazy_engine_donation_bits_unchanged():
+    sizes = [(33, 47), (64, 64), (50, 70), (33, 47)]
+    reqs = [synthetic_image(h, w, seed=20 + i) for i, (h, w) in enumerate(sizes)]
+    plain = CannyEngine(PARAMS, bucket_multiple=32, max_batch=4, donate=False)
+    donating = CannyEngine(PARAMS, bucket_multiple=32, max_batch=4, donate=True)
+    for a, b, r in zip(plain.process(reqs), donating.process(reqs), reqs):
+        assert (a == b).all()
+        assert (a == canny_reference(r, PARAMS)).all()
+
+
+def test_aot_engine_donation_bits_unchanged():
+    reqs = [synthetic_image(32, 32, seed=30 + i) for i in range(3)]
+    kw = dict(buckets=[(32, 32)], bucket_multiple=32, max_batch=4)
+    plain = AotCannyEngine(PARAMS, donate=False, **kw)
+    donating = AotCannyEngine(PARAMS, donate=True, **kw)
+    for a, b, r in zip(plain.process(reqs), donating.process(reqs), reqs):
+        assert (a == b).all()
+        assert (a == canny_reference(r, PARAMS)).all()

@@ -11,6 +11,8 @@ from repro.roofline.analysis import (
     _result_bytes,
     _wire_bytes,
     collective_bytes_from_text,
+    cost_dict,
+    kernel_bandwidth,
 )
 from repro.roofline.analytic import analytic_flops, attention_flops
 from repro.roofline.model_flops import active_params, model_flops
@@ -70,6 +72,26 @@ def test_group_size_parsing():
 def test_result_bytes_parsing():
     line = "%ar = f32[32,128]{1,0} all-reduce(%dot), replica_groups=[2,4]<=[8]"
     assert _result_bytes(line, "all-reduce") == 32 * 128 * 4
+
+
+def test_kernel_bandwidth_on_compiled_program():
+    # real compiled executable: cost_dict must normalize the CPU PJRT
+    # list-of-dicts form and kernel_bandwidth must yield a positive pct
+    x = jnp.ones((256, 256), jnp.float32)
+    compiled = jax.jit(lambda a: a * 2.0 + 1.0).lower(x).compile()
+    cost = cost_dict(compiled)
+    assert isinstance(cost, dict)
+    bw = kernel_bandwidth(compiled, measured_s=1e-3, attainable_bps=1e9)
+    assert bw["bytes_accessed"] > 0
+    assert bw["achieved_bps"] == pytest.approx(bw["bytes_accessed"] / 1e-3)
+    assert bw["pct"] == pytest.approx(100.0 * bw["achieved_bps"] / 1e9)
+
+
+def test_kernel_bandwidth_degenerate_inputs():
+    x = jnp.ones((8, 8), jnp.float32)
+    compiled = jax.jit(lambda a: a + 1.0).lower(x).compile()
+    assert kernel_bandwidth(compiled, 0.0, 1e9)["achieved_bps"] == 0.0
+    assert kernel_bandwidth(compiled, 1e-3, 0.0)["pct"] is None
 
 
 def test_model_flops_sanity():
