@@ -50,7 +50,10 @@ host) and null elsewhere — rows from older artifacts are backfilled with
 nulls on merge. Standalone modes, each merging its rows into the same
 artifact: ``--serve-saturation [--frames N]`` (CI ``serving-slo`` job),
 ``--perf-floor [--frames N]`` (CI gate: 1080p warm+skip must beat cold),
-``--roofline-smoke`` (CI quality job: bandwidth accounting stays live).
+``--perf-floor-sharded [--frames N]`` (CI gate: 1080p warm+skip on a
+data×model MESH must beat the cold mesh detector — run under 8 forced
+host devices, DESIGN.md §14), and ``--roofline-smoke`` (CI quality job:
+bandwidth accounting stays live).
 """
 
 from __future__ import annotations
@@ -86,7 +89,7 @@ from repro.core.canny.hysteresis import (
 )
 from repro.core.canny.nms import nms_stage
 from repro.core.canny.sobel import sobel_stage
-from repro.core.patterns.dist import StencilCtx
+from repro.core.patterns.dist import Dist, StencilCtx
 from repro.core.patterns.partition import tile_counts
 from repro.data.images import synthetic_batch, synthetic_image
 from repro.kernels.fused_canny.ops import fused_canny
@@ -498,7 +501,19 @@ def stream_fps_hd():
     stream_fps(frames=4, h=2160, w=3840, hold=2, tag="_4k")
 
 
-def pod_farm_fps(frames=24, h=256, w=256, hold=6, block_rows=32, tag=""):
+def _bench_mesh_dist() -> Dist:
+    """A data×model mesh over whatever this process sees: 1×1 when jax
+    initialized single-device (the shard_map composition itself), 2×4
+    under the CI jobs' 8 forced virtual devices."""
+    n = len(jax.devices())
+    data = 2 if n >= 2 else 1
+    model = max(d for d in (1, 2, 4) if data * d <= n)
+    mesh = jax.make_mesh((data, model), ("data", "model"))
+    return Dist(mesh=mesh, batch_axes=("data",), space_axis="model")
+
+
+def pod_farm_fps(frames=24, h=256, w=256, hold=6, block_rows=32, tag="",
+                 mesh_row=False):
     """Pod-farm stream throughput: 1 vs 2 pod ranks, cold vs warm+skip.
 
     Each rank is a ``PodWorker`` over its strided slice of the SAME
@@ -509,7 +524,9 @@ def pod_farm_fps(frames=24, h=256, w=256, hold=6, block_rows=32, tag=""):
     and the front-end launch counters. Default size is 256²: the smallest
     frame where the skipped front-end work reliably outweighs the
     per-frame skip-mask pass (at 128² dispatch overhead dominates and
-    warm+skip is a wash).
+    warm+skip is a wash). ``mesh_row=True`` adds a single-rank warm+skip
+    configuration whose temporal state is sharded over a data×model mesh
+    of every visible device (the warm_dist plane, DESIGN.md §14).
     """
     import threading
 
@@ -560,6 +577,35 @@ def pod_farm_fps(frames=24, h=256, w=256, hold=6, block_rows=32, tag=""):
                 dt / frames * 1e6,
                 f"{frames/dt:.2f} fps frontend_launches={fe}/{frames}",
             )
+    if mesh_row:
+        # warm-mesh row: ONE rank whose warm/skip state is SHARDED over a
+        # data×model mesh of every visible device (DESIGN.md §14). Single
+        # rank on purpose — thread-concurrent shard_map launches would
+        # deadlock the collectives; a mesh rank parallelizes on the mesh,
+        # not the farm. Bit-exactness vs the 1-pod cold run is asserted
+        # with everything else below.
+        dist = _bench_mesh_dist()
+
+        def make_mesh_worker():
+            return PodWorker(
+                PodCtx(0, 1), PARAMS, warm=True, skip=True,
+                block_rows=block_rows, dist=dist,
+            )
+
+        make_mesh_worker().step(jnp.asarray(synthetic_image(h, w, seed=99)))
+        wk = make_mesh_worker()
+        src = SyntheticStream(frames, h, w, seed=0, hold=hold, n_moving=4)
+        t0 = time.perf_counter()
+        outs[(1, "warmskip_mesh")] = list(reassemble([list(wk.run(src))]))
+        dt = time.perf_counter() - t0
+        fe = wk.cost_totals().get("frontend_launches", 0)
+        shape = "x".join(str(s) for s in dist.mesh.devices.shape)
+        row(
+            f"pod_farm_fps_p1_warmskip_mesh{tag}",
+            dt / frames * 1e6,
+            f"{frames/dt:.2f} fps frontend_launches={fe}/{frames} "
+            f"mesh={shape}",
+        )
     base = outs[(1, "cold")]
     exact = all(
         all((a == b).all() for a, b in zip(base, out)) for out in outs.values()
@@ -947,6 +993,56 @@ def perf_floor(frames=6) -> None:
     )
 
 
+def perf_floor_sharded(frames=6) -> None:
+    """CI perf-floor gate, sharded: warm+skip MESH must not lose to the
+    cold MESH detector at 1080p (run under 8 forced host devices in CI;
+    degrades to a 1×1 mesh single-device — still the full shard_map
+    composition — elsewhere). The sharded skip gate's consensus joins and
+    halo-extended mask pass must at least pay for themselves on a held
+    stream, and the edges must stay bit-identical to the stateless cold
+    mesh detector (DESIGN.md §14)."""
+    from repro.stream import SyntheticStream, TemporalCanny
+
+    dist = _bench_mesh_dist()
+    frames_, h, w, hold, br = frames, 1080, 1920, 3, 32
+    source = SyntheticStream(frames_, h, w, seed=0, hold=hold, n_moving=4)
+    shape = "x".join(str(s) for s in dist.mesh.devices.shape)
+
+    cold = make_canny(PARAMS, dist, backend="fused", bucket_multiple=32)
+    cold(jnp.asarray(source.frame(0)))  # compile outside the clock
+    t0 = time.perf_counter()
+    outs_cold = [np.asarray(cold(jnp.asarray(f))) for f in source]
+    us_cold = (time.perf_counter() - t0) / frames_ * 1e6
+    row(
+        "perf_floor_sharded_1080p_cold",
+        us_cold,
+        f"{1e6/us_cold:.2f} fps mesh={shape}",
+    )
+
+    kw = dict(warm=True, skip=True, block_rows=br, dist=dist)
+    TemporalCanny(PARAMS, **kw).step(jnp.asarray(source.frame(0)))
+    det = TemporalCanny(PARAMS, **kw)
+    t0 = time.perf_counter()
+    outs_ws = [np.asarray(det(jnp.asarray(f))) for f in source]
+    us_ws = (time.perf_counter() - t0) / frames_ * 1e6
+    tot = det.cost_totals()
+    ratio = us_cold / us_ws
+    exact = all((a == b).all() for a, b in zip(outs_cold, outs_ws))
+    row(
+        "perf_floor_sharded_1080p",
+        us_ws,
+        f"warmskip_mesh_vs_cold_mesh={ratio:.2f}x (floor 1.0) "
+        f"bit_exact={exact} frontend_launches={tot['frontend_launches']}"
+        f"/{frames_} mesh={shape}",
+    )
+    assert exact, "sharded warm+skip stream diverged from the cold mesh"
+    assert us_ws <= us_cold, (
+        f"1080p sharded warm+skip ({us_ws:.0f}us/frame) lost to the cold "
+        f"mesh detector ({us_cold:.0f}us/frame) — the sharded skip path "
+        "regressed"
+    )
+
+
 def roofline_smoke(h=256, w=256) -> None:
     """CI quality-job smoke: the roofline wiring must produce a real
     bandwidth_pct on a compiled kernel — no silent n/a regressions."""
@@ -972,7 +1068,7 @@ def main() -> None:
         sharded_throughput()
         stream_fps()
         stream_fps_hd()
-        pod_farm_fps()
+        pod_farm_fps(mesh_row=True)
         pod_farm_fps_hd()
         pod_churn_fps()
         per_stage_parity()
@@ -989,6 +1085,15 @@ if __name__ == "__main__":
     if "--sharded-payload" in sys.argv:
         print("name,us_per_call,derived")
         _sharded_payload()
+    elif "--perf-floor-sharded" in sys.argv:
+        n = (
+            int(sys.argv[sys.argv.index("--frames") + 1])
+            if "--frames" in sys.argv
+            else 6
+        )
+        print("name,us_per_call,derived")
+        perf_floor_sharded(frames=n)
+        print(f"# wrote {write_artifact()}", file=sys.stderr)
     elif "--perf-floor" in sys.argv:
         n = (
             int(sys.argv[sys.argv.index("--frames") + 1])

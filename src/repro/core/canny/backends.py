@@ -23,8 +23,12 @@ over every backend, or the combination FAILS LOUDLY):
   skip — the static-strip front-end skip on top of warm.
 
 ``warm_dist`` (warm state under a mesh detector) is declared separately
-because no backend supports it today: temporal state is worker-local by
-design. The conformance matrix (tests/test_differential.py) derives its
+because it is a genuinely distinct capability: the temporal state words
+must live SHARDED with the mesh and every temporal decision (warm-seed
+gate, skip gate, fixpoint trip count) must be a cross-shard consensus.
+The Pallas backends claim it (DESIGN.md §14); the jnp backend keeps its
+temporal state worker-local. The conformance matrix
+(tests/test_differential.py) derives its
 parametrization from these declarations — a cell a spec claims must be
 bit-identical to the reference; a cell it does not claim must raise
 ``UnsupportedFeature``. Silent fallbacks cannot hide in either case.

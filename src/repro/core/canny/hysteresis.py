@@ -34,7 +34,7 @@ def double_threshold(nms_mag: jax.Array, params: CannyParams):
     return strong, weak
 
 
-def warm_seed(strong, weak, prev_strong, prev_weak, prev_edges):
+def warm_seed(strong, weak, prev_strong, prev_weak, prev_edges, ctx=None):
     """Temporal warm-start seed for the hysteresis fixpoint — EXACT.
 
     The fixpoint is the least fixed point of the monotone map
@@ -53,9 +53,21 @@ def warm_seed(strong, weak, prev_strong, prev_weak, prev_edges):
     inputs are (b, h, w) / (b, h, w//32). An all-zero previous state is a
     valid "no history" value: the gate passes and the extra seed is empty,
     i.e. frame 0 is automatically cold.
+
+    ``ctx`` joins the per-image grow-only gate under ``shard_map``: when
+    the row axis is sharded, every shard sees only a strip of each image,
+    so the gate must be the consensus over the SPACE axis (and the space
+    axis only — batch shards hold different images, and each image's gate
+    is decided by the shards that hold its rows). Pass a ``StencilCtx``
+    whose ``sync_axes`` is exactly the space axis; locally (or with
+    unsharded rows) it degrades to the identity.
     """
     removed = (prev_strong & ~strong) | (prev_weak & ~weak)
-    grew_only = ~jnp.any(removed != 0, axis=(-2, -1))  # (b,)
+    removed_any = jnp.any(removed != 0, axis=(-2, -1))  # (b,)
+    if ctx is not None:
+        grew_only = ctx.sum_global(removed_any.astype(jnp.int32)) == 0
+    else:
+        grew_only = ~removed_any
     extra = jnp.where(
         grew_only[..., None, None], prev_edges & weak, jnp.zeros_like(prev_edges)
     )

@@ -11,7 +11,8 @@ stage path: a non-local ``Dist`` runs the same batch-grid kernels inside
 ppermute halo exchange — per-stage halos exchanged BETWEEN launches on
 the staged path; DESIGN.md §8/§10), and the temporal plane threads the
 packed warm-seed fixpoint plus the static-strip front-end skip through
-one shared ``PackedTemporal`` state machine. The two backends differ
+one shared ``PackedTemporal`` state machine — locally or with the state
+sharded across the mesh (``warm_dist``; DESIGN.md §14). The two backends differ
 only in their front-end step functions; everything else — capabilities
 included — is declared, not special-cased.
 """
@@ -30,6 +31,7 @@ from repro.kernels.sobel.ops import sobel
 from repro.kernels.nms.ops import nms
 from repro.kernels.hysteresis.ops import hysteresis_from_masks
 from repro.kernels.fused_canny.ops import (
+    _shard_grid,
     fused_canny,
     fused_canny_warm,
     fused_canny_warm_skip,
@@ -207,6 +209,13 @@ class PackedTemporal:
     default gate) each stream updates its state in place instead of
     allocating fresh HBM every frame. ``donate=None`` auto-selects by
     platform (CPU ignores donation, harmlessly).
+
+    A non-local ``dist`` shards the WHOLE state plane with the mesh: the
+    state buffers allocate at the sharded-grid padded height (rows split
+    over the space axis inside the step's shard_map) and the batch pads
+    to a multiple of the data-axis size with zero frames (static after
+    frame 0, cropped from the returned edges). Donation and the step
+    cache are unchanged — ``dist`` is just one more static key.
     """
 
     def __init__(
@@ -220,12 +229,19 @@ class PackedTemporal:
         warm_skip_step,
         zero_fe,
         donate: bool | None = None,
+        dist: Dist = LOCAL,
     ):
+        if dist.pod_axis is not None:
+            raise ValueError(
+                "temporal state machines never see the pod axis — build "
+                "per-rank detectors via Dist.pod_slice (stream/pod.py)"
+            )
         self.params = params
         self.warm = warm
         self.skip = skip
         self.block_rows = block_rows
         self.interpret = interpret
+        self.dist = dist
         self._warm_step = warm_step
         self._warm_skip_step = warm_skip_step
         self._zero_fe = zero_fe
@@ -261,6 +277,7 @@ class PackedTemporal:
             ("l2_norm", p.l2_norm),
             ("block_rows", bh),
             ("interpret", self.interpret),
+            ("dist", self.dist),  # hashable (frozen dataclass) → static
         )
         fn = _make_step_fn(
             self._warm_step,
@@ -275,20 +292,50 @@ class PackedTemporal:
     def step(self, x: jax.Array):
         b, h, w = x.shape
         p = self.params
-        bh = self.block_rows or common.pick_block_rows(h, min_rows=p.radius + 2)
+        if self.dist.is_local:
+            bh = self.block_rows or common.pick_block_rows(
+                h, min_rows=p.radius + 2
+            )
+            hp = -(-h // bh) * bh
+            bp = b
+        else:
+            # state allocates at the SHARDED grid's padded height (rows
+            # pad to a multiple of space_size * block_rows, see
+            # _shard_grid) and the batch pads to the data-axis multiple
+            hp, _, bh = _shard_grid(h, self.dist, p.radius + 2, self.block_rows)
+            dsz = self.dist.batch_size()
+            bp = -(-b // dsz) * dsz
         wp = -(-w // 32) * 32
         if wp != w:  # edge cols + the true-size table keep this bit-exact
             x = jnp.pad(x, ((0, 0), (0, 0), (0, wp - w)), mode="edge")
-        true_hw = jnp.broadcast_to(jnp.asarray([h, w], jnp.int32), (b, 2))
-        hp = -(-h // bh) * bh
+        if bp != b:
+            # zero pad frames: static after frame 0 (no sweeps, no strips,
+            # consensus counters unaffected), cropped from the edges below
+            x = jnp.pad(x, ((0, bp - b), (0, 0), (0, 0)))
+        true_hw = jnp.broadcast_to(jnp.asarray([h, w], jnp.int32), (bp, 2))
         if self._state is None:
             # three DISTINCT zero buffers: donation rejects the same buffer
-            # appearing under two donated arguments
+            # appearing under two donated arguments. Under a mesh the
+            # initial state is placed with the SAME NamedSharding the
+            # step's out_specs produce — otherwise frame 0 (default-
+            # sharded zeros) and frame 1 (sharded step outputs) present
+            # different input shardings and jit silently compiles the
+            # whole step twice
+            if self.dist.is_local:
+                shard = lambda v: v  # noqa: E731
+            else:
+                sharding = jax.sharding.NamedSharding(
+                    self.dist.mesh, self.dist.batch_spec()
+                )
+                shard = lambda v: jax.device_put(v, sharding)  # noqa: E731
             self._state = tuple(
-                jnp.zeros((b, hp, wp // 32), jnp.uint32) for _ in range(3)
+                shard(jnp.zeros((bp, hp, wp // 32), jnp.uint32))
+                for _ in range(3)
             )
-            self._prev_frame = jnp.zeros((b, hp, wp), jnp.float32)
-            self._fe = self._zero_fe(b, hp, wp)
+            self._prev_frame = shard(jnp.zeros((bp, hp, wp), jnp.float32))
+            self._fe = jax.tree_util.tree_map(
+                shard, self._zero_fe(bp, hp, wp)
+            )
         if self._have_prev is None:
             # device-resident gate: one transfer per reset, none per frame
             self._have_prev = jnp.zeros((), bool)
@@ -308,24 +355,25 @@ class PackedTemporal:
             edges, state, cost = step_fn(x, *self._state, true_hw)
         if self.warm:
             self._state = tuple(state)
-        return edges[..., :w], cost
+        edges = edges[..., :w]
+        return (edges[:b] if bp != b else edges), cost
 
 
 def _fused_temporal(params, *, warm=True, skip=False, block_rows=None,
-                    interpret=None, donate=None):
+                    interpret=None, donate=None, dist=LOCAL):
     return PackedTemporal(
         params, warm, skip, block_rows, interpret,
         _fused_warm_step, _fused_warm_skip_step, lambda b, hp, wp: (),
-        donate=donate,
+        donate=donate, dist=dist,
     )
 
 
 def _staged_temporal(params, *, warm=True, skip=False, block_rows=None,
-                     interpret=None, donate=None):
+                     interpret=None, donate=None, dist=LOCAL):
     return PackedTemporal(
         params, warm, skip, block_rows, interpret,
         staged_canny_warm, _staged_warm_skip_step, _staged_zero_fe,
-        donate=donate,
+        donate=donate, dist=dist,
     )
 
 
@@ -338,6 +386,7 @@ register_backend_spec(
         dist=True,
         warm=True,
         skip=True,
+        warm_dist=True,
     )
 )
 register_backend_spec(
@@ -349,5 +398,6 @@ register_backend_spec(
         dist=True,
         warm=True,
         skip=True,
+        warm_dist=True,
     )
 )

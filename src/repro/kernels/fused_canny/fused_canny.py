@@ -202,16 +202,15 @@ def fused_canny_strips(
     ``prev_out`` carries the previous frame's outputs (same structure as
     this emit's outputs). Static strips copy ``prev_out`` instead of
     recomputing (fully-static tiles skip the stencil math via ``pl.when``)
-    — bit-identical by purity of the front-end. Only valid on the local
-    path (``halos``/``row_offset`` unset): the streaming layer keeps
-    temporal state per worker, never per shard.
+    — bit-identical by purity of the front-end. The mask path composes
+    with ``halos``/``row_offset``: a sharded temporal step passes its
+    shard-local mask (computed against halo-exchanged frame rows) next to
+    the exchanged slabs — the two mechanisms touch disjoint refs.
     """
     if emit not in ("nms", "code", "packed"):
         raise ValueError(emit)
     if (skip_mask is None) != (prev_out is None):
         raise ValueError("skip_mask and prev_out come together")
-    if skip_mask is not None and halos is not None:
-        raise ValueError("the strip-mask path is local-only (no halo slabs)")
     if interpret is None:
         interpret = common.default_interpret()
     b, h, w = imgs.shape

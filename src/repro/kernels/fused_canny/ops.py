@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+from jax.sharding import PartitionSpec as P
 
 from repro import compat
 from repro.core.canny.hysteresis import warm_seed
@@ -328,10 +329,229 @@ def static_strip_mask(
     return static_strip_masks(cur, prev, block_rows, (halo,))[0]
 
 
+def sharded_strip_masks(
+    cur: jax.Array,
+    prev: jax.Array,
+    block_rows: int,
+    halos: tuple[int, ...],
+    ctx: StencilCtx,
+) -> tuple[jax.Array, ...]:
+    """``static_strip_masks`` under ``shard_map``: shard-local (B, Hl, W)
+    row strips + ONE halo exchange per frame → the same per-(image, local
+    strip) masks the local path computes for the matching global strips.
+
+    Interior shard boundaries compare the neighbour shard's actual rows
+    (exchanged via ``ctx.pad_rows``) — exactly the rows the global-grid
+    mask reads across the seam. Global boundaries extend with
+    edge-replicated rows, which is bit-equal to the local path's range
+    clamping: the replicated rows mirror row 0 / the last row, whose
+    equality is already counted inside the clamped range, so the AND over
+    the extended range equals the AND over the clamped one.
+    """
+    if cur.shape != prev.shape:
+        raise ValueError(f"frame shapes differ: {cur.shape} vs {prev.shape}")
+    b, hl, _ = cur.shape
+    if hl % block_rows:
+        raise ValueError(f"H={hl} not a multiple of block_rows={block_rows}")
+    n = hl // block_rows
+    hm = max(halos)
+    # one exchange (per frame) at the widest stencil; every width gathers
+    # from the same extended row-equality cumsum, like the local helper
+    eq = jnp.all(
+        ctx.pad_rows(cur, hm, pad_mode="edge")
+        == ctx.pad_rows(prev, hm, pad_mode="edge"),
+        axis=-1,
+    ).astype(jnp.int32)
+    csum = jnp.concatenate(
+        [jnp.zeros((b, 1), jnp.int32), jnp.cumsum(eq, axis=1)], axis=1
+    )
+    out = []
+    for halo in halos:
+        lo = np.arange(n) * block_rows + (hm - halo)
+        hi = (np.arange(n) + 1) * block_rows + hm + halo
+        out.append((csum[:, hi] - csum[:, lo]) == jnp.asarray(hi - lo, jnp.int32))
+    return tuple(out)
+
+
+def warm_ctxs(dist: Dist) -> tuple[StencilCtx, StencilCtx, StencilCtx | None]:
+    """The three stencil contexts of a sharded temporal step: (frontend
+    edge-pad exchange, hysteresis zero-pad consensus, warm-seed gate).
+
+    The first two join over ALL sync axes (trip counts must be globally
+    uniform); the gate context joins over the SPACE axis ONLY — batch
+    shards hold different images, and each image's grow-only verdict is
+    decided by the shards that hold its rows (None when rows unsharded:
+    the local per-image gate is already exact).
+    """
+    fctx = StencilCtx(dist.space_axis, "edge", sync_axes=dist.sync_axes())
+    hctx = StencilCtx(dist.space_axis, "zero", sync_axes=dist.sync_axes())
+    gctx = (
+        StencilCtx(dist.space_axis, "zero", sync_axes=(dist.space_axis,))
+        if dist.space_axis is not None
+        else None
+    )
+    return fctx, hctx, gctx
+
+
+def _sharded_fused_warm(
+    imgs: jax.Array,
+    prev_strong_w: jax.Array,
+    prev_weak_w: jax.Array,
+    prev_edges_w: jax.Array,
+    sigma: float,
+    radius: int,
+    low: float,
+    high: float,
+    l2_norm: bool,
+    block_rows: int | None,
+    interpret: bool | None,
+    true_hw: jax.Array | None,
+    dist: Dist,
+):
+    """``fused_canny_warm`` inside ONE shard_map: the packed temporal
+    state words live sharded with the mesh (batch over ``batch_axes``,
+    rows over ``space_axis``) and never rendezvous on a host — only the
+    halo slabs and the consensus scalars cross shards."""
+    b, h, w = imgs.shape
+    _check_dist_batch(b, dist)
+    h2 = radius + 2
+    hp, hl, bh = _shard_grid(h, dist, h2, block_rows)
+    padded = _pad_rows_to(imgs, hp, "edge")
+    if true_hw is None:
+        true_hw = jnp.broadcast_to(jnp.asarray([h, w], jnp.int32), (b, 2))
+    fctx, hctx, gctx = warm_ctxs(dist)
+    space = dist.space_axis
+
+    def local_fn(x, ps, pw, pe, hw):
+        off = lax.axis_index(space) * hl if space is not None else 0
+        row_off = jnp.full((1, 1), off, jnp.int32)
+        strong_w, weak_w = overlap_strips(
+            lambda ops, slabs, r0: fused_canny_strips(
+                ops[0], sigma, radius, low, high, l2_norm, "packed", bh,
+                interpret, hw, halos=slabs, row_offset=row_off + r0,
+            ),
+            (x,), fctx.halo_rows(x, h2), block_rows=bh,
+        )
+        seed = warm_seed(strong_w, weak_w, ps, pw, pe, ctx=gctx)
+        packed, launches, dilations = packed_fixpoint_count(
+            seed, weak_w, bh, interpret, ctx=hctx
+        )
+        edges = common.unpack_mask(packed)
+        return edges, strong_w, weak_w, packed, launches, dilations
+
+    fn = compat.shard_map(
+        local_fn,
+        mesh=dist.mesh,
+        in_specs=(dist.batch_spec(),) * 4 + (dist.table_spec(),),
+        # launch/dilation counts are the psum'd consensus values —
+        # identical on every device (packed_fixpoint_count), so P()
+        out_specs=(dist.batch_spec(),) * 4 + (P(), P()),
+        check_vma=False,
+    )
+    edges, strong_w, weak_w, packed, launches, dilations = fn(
+        padded, prev_strong_w, prev_weak_w, prev_edges_w,
+        true_hw.astype(jnp.int32),
+    )
+    edges = common.crop_rows(edges, h)
+    return edges, (strong_w, weak_w, packed), (launches, dilations)
+
+
+def _sharded_fused_warm_skip(
+    imgs: jax.Array,
+    prev_imgs: jax.Array,
+    prev_strong_w: jax.Array,
+    prev_weak_w: jax.Array,
+    prev_edges_w: jax.Array,
+    have_prev: jax.Array,
+    sigma: float,
+    radius: int,
+    low: float,
+    high: float,
+    l2_norm: bool,
+    block_rows: int | None,
+    interpret: bool | None,
+    true_hw: jax.Array | None,
+    dist: Dist,
+):
+    """``fused_canny_warm_skip`` inside ONE shard_map.
+
+    The static-strip mask is computed shard-locally from halo-extended
+    frame diffs (``sharded_strip_masks``); the all-static launch-skip gate
+    joins the per-shard tile counts over EVERY sync axis so the
+    ``lax.cond`` predicate is globally uniform — mandatory, because the
+    compute branch holds a pallas launch and non-uniform branching under
+    shard_map deadlocks the surrounding collectives. The frontend halo
+    slabs are exchanged BEFORE the cond for the same reason; a skipped
+    frame pays one h2-row exchange and two psum scalars, nothing else.
+    """
+    b, h, w = imgs.shape
+    _check_dist_batch(b, dist)
+    h2 = radius + 2
+    hp, hl, bh = _shard_grid(h, dist, h2, block_rows)
+    padded = _pad_rows_to(imgs, hp, "edge")
+    prev_padded = _pad_rows_to(prev_imgs.astype(jnp.float32), hp, "edge")
+    if true_hw is None:
+        true_hw = jnp.broadcast_to(jnp.asarray([h, w], jnp.int32), (b, 2))
+    fctx, hctx, gctx = warm_ctxs(dist)
+    space = dist.space_axis
+
+    def local_fn(x, px, ps, pw, pe, hprev, hw):
+        off = lax.axis_index(space) * hl if space is not None else 0
+        row_off = jnp.full((1, 1), off, jnp.int32)
+        slabs = fctx.halo_rows(x, h2)  # exchange OUTSIDE the cond
+        (static,) = sharded_strip_masks(x, px, bh, (h2,), fctx)
+        static = static & hprev
+        n_static = fctx.sum_global(jnp.sum(static.astype(jnp.int32)))
+        n_tiles = fctx.sum_global(jnp.asarray(static.size, jnp.int32))
+
+        def reuse(_):
+            return ps, pw, jnp.int32(0)
+
+        def compute(_):
+            # masks slice the grid per-strip, so no overlap_strips here:
+            # the slabs bind whole and static tiles copy stored words
+            s_w, wk_w = fused_canny_strips(
+                x, sigma, radius, low, high, l2_norm, "packed", bh,
+                interpret, hw, halos=slabs, row_offset=row_off,
+                skip_mask=static.astype(jnp.int32), prev_out=(ps, pw),
+            )
+            return s_w, wk_w, jnp.int32(1)
+
+        strong_w, weak_w, fe_launches = lax.cond(
+            n_static == n_tiles, reuse, compute, None
+        )
+        fe_strips = n_tiles - n_static
+        seed = warm_seed(strong_w, weak_w, ps, pw, pe, ctx=gctx)
+        packed, launches, dilations = packed_fixpoint_count(
+            seed, weak_w, bh, interpret, ctx=hctx
+        )
+        edges = common.unpack_mask(packed)
+        return (
+            edges, strong_w, weak_w, packed,
+            launches, dilations, fe_launches, fe_strips,
+        )
+
+    fn = compat.shard_map(
+        local_fn,
+        mesh=dist.mesh,
+        in_specs=(dist.batch_spec(),) * 5 + (P(), dist.table_spec()),
+        out_specs=(dist.batch_spec(),) * 4 + (P(),) * 4,
+        check_vma=False,
+    )
+    edges, strong_w, weak_w, packed, launches, dilations, fe_launches, fe_strips = fn(
+        padded, prev_padded, prev_strong_w, prev_weak_w, prev_edges_w,
+        have_prev, true_hw.astype(jnp.int32),
+    )
+    edges = common.crop_rows(edges, h)
+    state = (strong_w, weak_w, packed, padded)
+    return edges, state, (launches, dilations, fe_launches, fe_strips)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(
         "sigma", "radius", "low", "high", "l2_norm", "block_rows", "interpret",
+        "dist",
     ),
 )
 def fused_canny_warm_skip(
@@ -349,6 +569,7 @@ def fused_canny_warm_skip(
     block_rows: int | None = None,
     interpret: bool | None = None,
     true_hw: jax.Array | None = None,
+    dist: Dist = LOCAL,
 ):
     """``fused_canny_warm`` + the static-strip FRONT-END skip.
 
@@ -372,11 +593,24 @@ def fused_canny_warm_skip(
     against next step) and ``cost = (launches, dilations,
     frontend_launches, frontend_strips)`` int32 scalars —
     ``frontend_strips`` counts recomputed (image, strip) tiles.
+
+    A non-local ``dist`` runs the whole step inside ``shard_map`` with the
+    state words sharded like the batch (``_sharded_fused_warm_skip``);
+    both mechanisms and all four cost scalars survive sharding
+    bit-identically. Note the sharded grid pads rows to a multiple of
+    ``space_size * block_rows``, so partially-static tile counts can
+    differ from the local grid's (the masks are exact either way).
     """
     imgs = imgs.astype(jnp.float32)
     b, h, w = imgs.shape
     if w % 32:
         raise ValueError(f"fused_canny_warm_skip needs W % 32 == 0, got W={w}")
+    if not dist.is_local:
+        return _sharded_fused_warm_skip(
+            imgs, prev_imgs, prev_strong_w, prev_weak_w, prev_edges_w,
+            have_prev, sigma, radius, low, high, l2_norm, block_rows,
+            interpret, true_hw, dist,
+        )
     h2 = radius + 2
     bh = block_rows or common.pick_block_rows(h, min_rows=h2)
     padded, h = common.pad_rows_to_multiple(imgs, bh)
@@ -413,6 +647,7 @@ def fused_canny_warm_skip(
     jax.jit,
     static_argnames=(
         "sigma", "radius", "low", "high", "l2_norm", "block_rows", "interpret",
+        "dist",
     ),
 )
 def fused_canny_warm(
@@ -428,6 +663,7 @@ def fused_canny_warm(
     block_rows: int | None = None,
     interpret: bool | None = None,
     true_hw: jax.Array | None = None,
+    dist: Dist = LOCAL,
 ):
     """One streaming frame step: fused front-end + WARM-STARTED hysteresis.
 
@@ -446,11 +682,21 @@ def fused_canny_warm(
                     cost   = (launches, dilations) int32 scalars — see
                              ``packed_fixpoint_count`` — for the
                              warm-savings stats).
+
+    A non-local ``dist`` keeps the state words sharded with the mesh
+    (``_sharded_fused_warm``): the warm-seed gate joins over the space
+    axis, the fixpoint over every sync axis, and the result — edges,
+    state AND counts — is bit-identical to the local step.
     """
     imgs = imgs.astype(jnp.float32)
     b, h, w = imgs.shape
     if w % 32:
         raise ValueError(f"fused_canny_warm needs W % 32 == 0, got W={w}")
+    if not dist.is_local:
+        return _sharded_fused_warm(
+            imgs, prev_strong_w, prev_weak_w, prev_edges_w, sigma, radius,
+            low, high, l2_norm, block_rows, interpret, true_hw, dist,
+        )
     h2 = radius + 2
     bh = block_rows or common.pick_block_rows(h, min_rows=h2)
     padded, h = common.pad_rows_to_multiple(imgs, bh)

@@ -100,16 +100,15 @@ def gaussian_blur_strips(
     edge-replicate rule — under ``shard_map`` they carry the adjacent
     shard's rows (``StencilCtx.halo_rows``) so the shard-local grid
     stitches into one global stencil bit-identically. ``skip_mask`` +
-    ``prev_out`` select the temporal strip-mask path (local only): a
-    strip whose ±radius input rows are bitwise unchanged copies the
-    stored previous blur — bit-identical by purity.
+    ``prev_out`` select the temporal strip-mask path (composes with
+    ``halos`` for the sharded temporal step): a strip whose ±radius input
+    rows are bitwise unchanged copies the stored previous blur —
+    bit-identical by purity.
     """
     if interpret is None:
         interpret = common.default_interpret()
     if (skip_mask is None) != (prev_out is None):
         raise ValueError("skip_mask and prev_out come together")
-    if skip_mask is not None and halos is not None:
-        raise ValueError("the strip-mask path is local-only (no halo slabs)")
     b, h, w = imgs.shape
     bh = block_rows or common.pick_block_rows(h)
     if h % bh != 0:

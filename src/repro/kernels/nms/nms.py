@@ -109,8 +109,6 @@ def nms_strips(
         interpret = common.default_interpret()
     if (skip_mask is None) != (prev_out is None):
         raise ValueError("skip_mask and prev_out come together")
-    if skip_mask is not None and halos is not None:
-        raise ValueError("the strip-mask path is local-only (no halo slabs)")
     b, h, w = mag.shape
     bh = block_rows or common.pick_block_rows(h)
     if h % bh != 0:

@@ -161,14 +161,13 @@ def sobel_strips(
     ``true_hw`` is the (B, 2) pre-padding size table (defaults to the
     full grid); ``halos``/``row_offset`` are the shard-composition inputs
     (see ``fused_canny_strips``); ``skip_mask``/``prev_out`` the temporal
-    strip-mask path (local only, ``prev_out = (mag, dirs)``).
+    strip-mask path (``prev_out = (mag, dirs)``; composes with ``halos``
+    for the sharded temporal step).
     """
     if interpret is None:
         interpret = common.default_interpret()
     if (skip_mask is None) != (prev_out is None):
         raise ValueError("skip_mask and prev_out come together")
-    if skip_mask is not None and halos is not None:
-        raise ValueError("the strip-mask path is local-only (no halo slabs)")
     b, h, w = imgs.shape
     bh = block_rows or common.pick_block_rows(h)
     if h % bh != 0:

@@ -135,12 +135,15 @@ def main():
     elif pods > 1:
         mode = f"pod-farm x{pods}"
     else:
-        mode = f"farm x{args.workers}"
+        # the non-pod mesh farm may have forced a single warm lane —
+        # report the count the scheduler actually built
+        mode = f"farm x{len(sched.farm.workers)}"
     mesh_desc = "" if dist.is_local else f" mesh={args.mesh}"
-    # non-pod mesh mode shares one stateless shard_map detector across
-    # workers, so temporal warm-start is off regardless of --no-warm; pod
-    # mode keeps warm/skip state POD-local (when the per-pod slice is a
-    # plain device) — say which applies
+    # a warm_dist backend keeps temporal warm/skip state ON under a mesh
+    # (sharded with it — one single-lane detector on the non-pod farm,
+    # per-rank sharded detectors on the pod farm); backends without the
+    # claim degrade to a stateless shared detector, warm off — say which
+    # applied by looking at what the scheduler constructed
     stateful = dist.is_local or bool(sched.detectors)
     warm_desc = "off" if (args.no_warm or not stateful) else "on"
     if args.skip and stateful:

@@ -334,9 +334,13 @@ class PodWorker:
       * LOCAL → a stateful ``TemporalCanny`` — temporal warm-start (and
         the static-strip front-end skip, ``skip=True``) with pod-local
         state;
-      * non-local → one mesh detector (``make_canny(dist=...)``) running
-        the fused kernels inside shard_map over the rank's sub-mesh —
-        stateless, so it runs cold (exactness is unaffected).
+      * non-local + a ``warm_dist`` backend → a stateful ``TemporalCanny``
+        whose warm/skip state is SHARDED over the rank's sub-mesh
+        (``TemporalCanny(dist=...)``) — the temporal economics survive
+        multi-device ranks;
+      * non-local otherwise → one stateless mesh detector
+        (``make_canny(dist=...)``) running cold (exactness unaffected);
+        a skip request that cannot be honoured raises.
 
     ``run`` yields rank-tagged ``(seq, edges)`` pairs ready for
     ``reassemble``; ``step`` is the bare frame→(edges, cost) callable the
@@ -368,21 +372,38 @@ class PodWorker:
             )
             self.step = self.temporal.step
         else:
-            from repro.core.canny.backends import UnsupportedFeature
+            from repro.core.canny.backends import UnsupportedFeature, backend_spec
             from repro.core.canny.pipeline import make_canny
 
-            # a mesh rank's detector is stateless and runs cold no matter
-            # what the backend claims; a skip request would be silently
-            # dropped — fail fast, unconditionally
-            if skip:
-                raise UnsupportedFeature(
-                    "skip=True on a mesh pod rank: non-trivial "
-                    "Dist.pod_slice ranks share one stateless "
-                    "make_canny(dist=...) detector, which runs cold — "
-                    "warm/skip state needs a LOCAL per-rank slice"
+            name = backend or "fused"
+            if warm and backend_spec(name).supports(
+                dist=True, warm=True, skip=skip
+            ):
+                # warm_dist backend: the rank keeps a TemporalCanny whose
+                # state is sharded over its OWN sub-mesh — warm (and skip)
+                # economics survive multi-device ranks
+                from repro.stream.temporal import TemporalCanny
+
+                self.temporal = TemporalCanny(
+                    params, warm=warm, skip=skip, backend=name,
+                    block_rows=block_rows, dist=dist,
                 )
-            det = make_canny(params, dist, backend=backend or "fused")
-            self.step = lambda x: (det(x), None)
+                self.step = self.temporal.step
+            elif skip:
+                # a skip request the backend cannot honour under a mesh
+                # would be silently dropped — fail fast, unconditionally
+                raise UnsupportedFeature(
+                    f"skip=True on a mesh pod rank: backend {name!r} does "
+                    "not claim warm_dist, so the rank would fall back to a "
+                    "stateless cold make_canny(dist=...) detector — "
+                    "warm/skip state needs a warm_dist backend or a LOCAL "
+                    "per-rank slice"
+                )
+            else:
+                # no warm_dist claim (or warm=False): stateless mesh
+                # detector, runs cold — exactness is unaffected
+                det = make_canny(params, dist, backend=name)
+                self.step = lambda x: (det(x), None)
 
     def run(self, source: Iterable[np.ndarray]) -> Iterator[tuple[int, np.ndarray]]:
         """Process this rank's strided slice; yield ``(seq, uint8 edges)``."""

@@ -275,12 +275,16 @@ class StreamWorker:
 class FarmScheduler:
     """Farm of warm-start Canny pipelines over any frame source.
 
-    ``dist`` routes every worker through ONE shared mesh-aware detector
-    (``make_canny(dist=...)``): frames still dispatch round-robin, but
-    each detector call runs the fused kernels inside shard_map across the
-    whole mesh — the "one queue drains across devices" configuration.
-    Temporal warm-start state stays per-worker-local, so the shared-
-    detector mesh path runs cold (exactness is unaffected).
+    ``dist`` routes the stream through the mesh. With a ``warm_dist``
+    backend (the Pallas ones) and ``warm=True`` the farm builds ONE
+    ``TemporalCanny(dist=...)`` whose warm/skip state is sharded across
+    the mesh, driven by a SINGLE worker lane — the temporal state machine
+    is not thread-safe, and concurrent shard_map launches from multiple
+    threads deadlock the collectives, so device parallelism comes from
+    the mesh itself. Otherwise every worker shares ONE stateless
+    mesh-aware detector (``make_canny(dist=...)``): frames still dispatch
+    round-robin, but the shared-detector path runs cold (exactness is
+    unaffected; a skip request that would be dropped raises instead).
 
     A ``dist`` with a POD axis selects the pod-farm mode instead: one
     worker per pod rank, each owning its OWN detector over its
@@ -361,28 +365,48 @@ class FarmScheduler:
             )
             return
         if detector is None and dist is not None and not dist.is_local:
-            from repro.core.canny.backends import UnsupportedFeature
+            from repro.core.canny.backends import UnsupportedFeature, backend_spec
             from repro.core.canny.pipeline import make_canny
 
-            # THIS path is a stateless shared detector and runs cold no
-            # matter what the backend claims; a skip request would be
-            # silently dropped — fail fast, unconditionally (warm alone
-            # keeps the documented degrade-to-cold behaviour for CLI
-            # defaults)
-            if skip:
-                raise UnsupportedFeature(
-                    "skip=True under a shared mesh detector: the "
-                    "non-pod mesh farm shares one stateless "
-                    "make_canny(dist=...) detector, which runs cold — "
-                    "use a pod-axis Dist with local per-rank slices for "
-                    "warm/skip state"
+            name = backend or "fused"
+            if warm and backend_spec(name).supports(
+                dist=True, warm=True, skip=skip
+            ):
+                # warm_dist backend: ONE TemporalCanny whose warm/skip
+                # state lives sharded with the mesh, driven by a SINGLE
+                # worker lane. The state machine is not thread-safe, and
+                # concurrent shard_map launches from multiple host
+                # threads deadlock the collectives — parallelism comes
+                # from the mesh, the lone worker just overlaps host prep
+                # with the device step.
+                t = TemporalCanny(
+                    params, warm=warm, skip=skip, backend=name,
+                    block_rows=block_rows, dist=dist,
                 )
-            # device parallelism comes from the mesh (BucketedCanny
-            # serializes concurrent launches internally), thread overlap
-            # from per-worker host prep; make_canny validates the
-            # backend's dist capability at construction
-            detector = make_canny(params, dist, backend=backend or "fused")
-            devices = [None]  # shard_map owns placement; workers share it
+                self.detectors.append(t)
+                detector = t.step
+                devices = [None]  # shard_map owns placement
+                n_workers = 1
+            elif skip:
+                # THIS path is a stateless shared detector and runs cold
+                # no matter what was asked; a skip request would be
+                # silently dropped — fail fast (warm alone keeps the
+                # documented degrade-to-cold behaviour for CLI defaults)
+                raise UnsupportedFeature(
+                    f"skip=True under a shared mesh detector: backend "
+                    f"{name!r} does not claim warm_dist, so the non-pod "
+                    "mesh farm shares one stateless make_canny(dist=...) "
+                    "detector, which runs cold — use a warm_dist backend "
+                    "('fused'/'pallas') or a pod-axis Dist with local "
+                    "per-rank slices for warm/skip state"
+                )
+            else:
+                # device parallelism comes from the mesh (BucketedCanny
+                # serializes concurrent launches internally), thread
+                # overlap from per-worker host prep; make_canny validates
+                # the backend's dist capability at construction
+                detector = make_canny(params, dist, backend=name)
+                devices = [None]  # shard_map owns placement; workers share it
         workers = []
         for k in range(n_workers):
             if detector is not None:

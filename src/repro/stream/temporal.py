@@ -68,8 +68,19 @@ class JnpTemporal:
     bit-identical by purity."""
 
     def __init__(self, params: CannyParams, *, warm=True, skip=False,
-                 block_rows=None, interpret=None, donate=None):
+                 block_rows=None, interpret=None, donate=None, dist=LOCAL):
         del block_rows, interpret  # no strip grid / Pallas on this path
+        if not dist.is_local:
+            # defensive: the jnp spec does not claim warm_dist, so the
+            # registry rejects this before construction — keep the state
+            # machine itself honest should that gate ever be bypassed
+            from repro.core.canny.backends import UnsupportedFeature
+
+            raise UnsupportedFeature(
+                "backend 'jnp' keeps its temporal state worker-local; "
+                "sharded warm state needs a warm_dist backend "
+                "('fused'/'pallas')"
+            )
         self.params = params
         self.warm = warm
         self.skip = skip
@@ -169,6 +180,12 @@ class TemporalCanny:
     whenever the input shape changes; ``reset()`` forces the next frame
     cold.
 
+    A non-local ``dist`` keeps the temporal state SHARDED with the mesh:
+    the spec must claim ``warm_dist`` (validated at construction) and the
+    state machine's step runs inside ``shard_map`` with the same halo
+    exchange and consensus joins as the cold mesh detector — edges,
+    state and cost counters all bit-identical to the local stream.
+
     The backend resolves through the ``BackendSpec`` registry and its
     warm/skip (and ``dist``) capabilities are validated here, at
     construction — no backend-name ``if`` chains, no silent fallbacks.
@@ -195,28 +212,21 @@ class TemporalCanny:
             temporal=True, warm=warm, skip=skip
         )
         if not dist.is_local:
-            # TemporalCanny IS the per-worker temporal state plane; mesh
-            # detectors come from make_canny(dist=...) and run cold — so
-            # any non-local dist here is the (unsupported) warm+dist cell
-            spec.require(dist=True, warm=True)
-            # dist is not yet threaded into temporal_fn: the moment a
-            # spec claims warm_dist, the plumbing must be built, not
-            # silently skipped (the failure class this registry exists
-            # to eliminate)
-            raise NotImplementedError(
-                f"backend {self.backend!r} claims warm_dist but "
-                "TemporalCanny does not thread dist into its temporal "
-                "impl yet — wire spec.temporal_fn(dist=...) first"
-            )
+            # sharded temporal state: the spec must claim warm_dist (the
+            # registry raises UnsupportedFeature naming the warm+dist
+            # cell otherwise) and the state machine threads dist through
+            # to the sharded step entries
+            spec.require(dist=True, warm=warm, skip=skip)
         self.params = params
         self.warm = warm
         self.skip = skip
         self.block_rows = block_rows
         self.interpret = interpret
+        self.dist = dist
         self.donate = donate
         self._impl = spec.temporal_fn(
             params, warm=warm, skip=skip, block_rows=block_rows,
-            interpret=interpret, donate=donate,
+            interpret=interpret, donate=donate, dist=dist,
         )
         self._shape: tuple[int, int, int] | None = None
         self._cost_log: list = []  # device scalars; folded lazily so the
@@ -224,7 +234,13 @@ class TemporalCanny:
 
     # -- state plane ---------------------------------------------------------
     def reset(self) -> None:
+        """Force the next frame cold: drop the device state AND the
+        host-side shape latch (a stale latch would let a same-shaped
+        stream skip the reset path) and fold any pending cost scalars so
+        a reset stream never leaves unsynced device references behind."""
         self._impl.reset()
+        self._shape = None
+        self._fold_costs()
 
     # -- frame plane ---------------------------------------------------------
     def step(self, frame: jax.Array):
@@ -236,8 +252,16 @@ class TemporalCanny:
             raise ValueError(f"expected (h,w) or (b,h,w), got {frame.shape}")
         if self._shape != x.shape:
             self.reset()
-            self._shape = x.shape
-        edges, cost = self._impl.step(x)
+        try:
+            edges, cost = self._impl.step(x)
+        except BaseException:
+            # commit the shape latch only AFTER a successful step: a step
+            # that died mid-flight may have partially threaded (or, under
+            # donation, invalidated) the impl state, and a committed latch
+            # would let the NEXT same-shaped frame run against it
+            self.reset()
+            raise
+        self._shape = x.shape
         self._cost_log.append(cost)
         if len(self._cost_log) >= 1024:  # bound the pending-scalar window
             self._fold_costs()
@@ -249,8 +273,12 @@ class TemporalCanny:
     # -- stats plane ---------------------------------------------------------
     def _fold_costs(self) -> None:
         log, self._cost_log = self._cost_log, []
+        if not log:
+            return
         self._cost_done[0] += len(log)
-        for c in log:
+        # ONE batched transfer for the whole window: per-scalar int()
+        # casts would block on up to 1024×4 separate device syncs
+        for c in jax.device_get([tuple(c) for c in log]):
             self._cost_done[1] += int(c[0])
             self._cost_done[2] += int(c[1])
             # without an explicit counter, every frame is exactly one

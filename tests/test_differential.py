@@ -133,10 +133,29 @@ def test_matrix_is_generated_not_enumerated():
     assert {"jnp", "pallas", "fused"} <= names
     for name in names:
         assert sum(c["backend"] == name for c in CELLS) == 6
-    # the shipped support surface: everything except warm-state-under-mesh
+    # the shipped support surface, derived from the specs' own claims (the
+    # matrix may not second-guess the registry)...
+    by_name = {s.name: s for s in backend_specs()}
     for c in CELLS:
-        want = not (c["dist"] and c["mode"] != "cold")
+        warm = c["mode"] != "cold"
+        skip = c["mode"] == "warm+skip"
+        want = by_name[c["backend"]].supports(
+            dist=c["dist"], warm=warm, skip=skip
+        )
         assert c["supported"] == want, c
+    # ...and the claims themselves, pinned so a regression in a spec is a
+    # test failure, not a silently shrunk matrix: the Pallas backends
+    # carry their temporal state sharded with the mesh (warm_dist,
+    # DESIGN.md §14); the jnp backend keeps it worker-local.
+    for name in ("fused", "pallas"):
+        assert by_name[name].warm_dist, name
+        for mode in ("warm", "warm+skip"):
+            assert {"backend": name, "dist": True, "mode": mode,
+                    "supported": True} in CELLS
+    assert not by_name["jnp"].warm_dist
+    for mode in ("warm", "warm+skip"):
+        assert {"backend": "jnp", "dist": True, "mode": mode,
+                "supported": False} in CELLS
 
 
 @pytest.mark.parametrize("cell", CELLS, ids=_cell_id)
@@ -202,17 +221,54 @@ def test_jnp_backend_serves_everywhere():
 
 
 def test_scheduler_rejects_skip_under_a_shared_mesh_detector():
+    """A backend WITHOUT warm_dist ('jnp') cannot honour skip on the
+    non-pod mesh farm — the shared detector would silently run cold, so
+    construction must raise with the missing capability named."""
     from repro.stream import FarmScheduler
 
-    with pytest.raises(UnsupportedFeature, match="warm"):
-        FarmScheduler(PARAMS, skip=True, dist=_mesh_dist())
+    with pytest.raises(UnsupportedFeature, match="warm_dist"):
+        FarmScheduler(PARAMS, skip=True, dist=_mesh_dist(), backend="jnp")
+
+
+def test_scheduler_builds_a_single_lane_warm_mesh_temporal():
+    """A warm_dist backend (the default 'fused') turns the non-pod mesh
+    farm into ONE sharded TemporalCanny on ONE worker lane (concurrent
+    shard_map launches would deadlock the collectives) — and the stream
+    stays bit-identical to the serial reference."""
+    from repro.stream import FarmScheduler
+
+    sched = FarmScheduler(
+        PARAMS, skip=True, dist=_mesh_dist(), block_rows=16
+    )
+    assert len(sched.farm.workers) == 1
+    assert len(sched.detectors) == 1
+    assert not sched.detectors[0].dist.is_local
+    frames = _all_static(frames=3)
+    for i, edges in enumerate(sched.run(iter(frames))):
+        assert (edges == canny_reference(frames[i], PARAMS)).all(), i
+    assert sched.detectors[0].cost_totals()["frames"] == 3
 
 
 def test_pod_worker_rejects_skip_on_a_mesh_rank():
     from repro.stream import PodCtx, PodWorker
 
-    with pytest.raises(UnsupportedFeature, match="warm"):
-        PodWorker(PodCtx(0, 2), PARAMS, dist=_mesh_dist(), skip=True)
+    with pytest.raises(UnsupportedFeature, match="warm_dist"):
+        PodWorker(
+            PodCtx(0, 2), PARAMS, dist=_mesh_dist(), skip=True,
+            backend="jnp",
+        )
+
+
+def test_pod_worker_builds_a_warm_mesh_temporal():
+    """With a warm_dist backend the mesh rank gets a stateful sharded
+    TemporalCanny (w.temporal set), not the stateless cold fallback."""
+    from repro.stream import PodCtx, PodWorker
+
+    w = PodWorker(
+        PodCtx(0, 2), PARAMS, dist=_mesh_dist(), skip=True, block_rows=16
+    )
+    assert w.temporal is not None
+    assert not w.temporal.dist.is_local
 
 
 def test_stage_plane_mesh_requires_stage_dist():
@@ -265,6 +321,30 @@ def test_per_stage_static_savings_match_fused():
         ]
     assert costs["pallas"][1:] == costs["fused"][1:]
     assert all(c == (1, 0, 0, 0) for c in costs["fused"][1:])
+
+
+@pytest.mark.parametrize(
+    "name", [s.name for s in backend_specs() if s.warm_dist and s.skip]
+)
+def test_warm_mesh_launch_parity_on_static_stream(name):
+    """Launch-count parity, sharded vs local: from frame 1 on, a static
+    stream costs the SAME per-frame tuple (1 verify launch, 0 dilations,
+    0 front-end launches, 0 recomputed strips) whether the temporal state
+    lives locally or sharded with the mesh — the sharded skip gate and
+    consensus counters add no hidden work. Frame 0 is excluded: the
+    sharded row grid may pad to a different strip count (documented on
+    ``fused_canny_warm_skip``), so only the steady state is comparable."""
+    det_m = TemporalCanny(
+        PARAMS, warm=True, skip=True, backend=name, block_rows=16,
+        dist=_mesh_dist(),
+    )
+    det_l = TemporalCanny(PARAMS, warm=True, skip=True, backend=name, block_rows=16)
+    costs_m, costs_l = [], []
+    for f in _all_static(frames=5):
+        costs_m.append(tuple(int(c) for c in det_m.step(jnp.asarray(f))[1]))
+        costs_l.append(tuple(int(c) for c in det_l.step(jnp.asarray(f))[1]))
+    assert costs_m[1:] == costs_l[1:]
+    assert all(c == (1, 0, 0, 0) for c in costs_m[1:])
 
 
 @pytest.mark.parametrize("name", SKIP_BACKENDS)
@@ -322,3 +402,8 @@ def test_over_claiming_spec_fails_loudly():
             assert spec.warm, f"{spec.name}: skip without warm is incoherent"
         if spec.temporal_fn is None:
             assert not (spec.warm or spec.skip), spec.name
+        if spec.warm_dist:
+            # sharded temporal state presupposes both of its halves
+            assert spec.warm and spec.dist, (
+                f"{spec.name}: warm_dist without warm+dist is incoherent"
+            )

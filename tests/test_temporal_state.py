@@ -1,0 +1,138 @@
+"""TemporalCanny state-plane regressions — the host-side wrapper bugs.
+
+These pin three wrapper-level contracts that the conformance matrix
+cannot see (it never makes a step fail, never resets mid-stream, and
+never counts host↔device transfers):
+
+  * the shape latch commits only AFTER ``_impl.step`` succeeds — a step
+    that dies mid-flight (fault injection, OOM, a donated buffer gone
+    bad) must leave the detector cold, or the NEXT same-shaped frame
+    would warm-seed from partially-threaded (or invalidated) state;
+  * ``reset()`` drops the shape latch and folds the pending cost log —
+    a stale latch would let a same-shaped stream bypass the reset path,
+    and unfolded device scalars would leak across the reset;
+  * ``_fold_costs`` syncs the whole pending window in ONE batched
+    ``jax.device_get`` — per-scalar ``int(...)`` casts would block on up
+    to 1024×4 separate device round-trips.
+
+The backend is 'jnp' throughout: the contracts live in the TemporalCanny
+wrapper and are backend-agnostic, and the portable path keeps this file
+Pallas-free and fast.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.canny import CannyParams
+from repro.data.images import synthetic_image
+from repro.stream import TemporalCanny
+
+PARAMS = CannyParams(sigma=1.4, radius=2, low=0.08, high=0.2)
+
+
+def _det(**kw):
+    kw.setdefault("warm", True)
+    return TemporalCanny(PARAMS, backend="jnp", **kw)
+
+
+def _frame(seed=3, h=32, w=40):
+    return jnp.asarray(synthetic_image(h, w, seed=seed))
+
+
+# ---------------- shape latch commits only on success ------------------------
+def test_failed_step_leaves_the_detector_cold():
+    """Regression: the latch used to commit BEFORE ``_impl.step`` ran, so
+    a raising step left ``_shape`` set and the next same-shaped frame
+    skipped the reset path, warm-seeding from whatever state the dead
+    step left behind."""
+    det = _det()
+    det.step(_frame())  # establish warm state + latch
+    assert det._shape is not None
+    boom = RuntimeError("injected mid-step failure")
+    real_step = det._impl.step
+    det._impl.step = lambda x: (_ for _ in ()).throw(boom)
+    with pytest.raises(RuntimeError, match="injected"):
+        det.step(_frame(seed=4))
+    det._impl.step = real_step
+    # the failure reset everything: no latch, no device state — the next
+    # same-shaped frame goes through the cold path
+    assert det._shape is None
+    assert det._impl._state is None
+    edges, _ = det.step(_frame(seed=4))
+    assert det._shape == (1, 32, 40)  # committed again, after success
+    # and the cold rerun is the real answer (state was rebuilt, not reused)
+    ref = TemporalCanny(PARAMS, backend="jnp", warm=False)
+    assert (np.asarray(edges) == np.asarray(ref(_frame(seed=4)))).all()
+
+
+def test_failed_first_step_does_not_commit_the_latch():
+    det = _det()
+    det._impl.step = lambda x: (_ for _ in ()).throw(ValueError("dead on frame 0"))
+    with pytest.raises(ValueError, match="dead"):
+        det.step(_frame())
+    assert det._shape is None  # the old code had (1, 32, 40) here
+
+
+def test_shape_change_still_resets():
+    det = _det()
+    det.step(_frame(h=32, w=40))
+    det.step(_frame(h=48, w=64))  # different shape → reset → fresh latch
+    assert det._shape == (1, 48, 64)
+    assert det.cost_totals()["frames"] == 2
+
+
+# ---------------- reset() clears the latch and the pending log ---------------
+def test_reset_clears_shape_latch_and_folds_pending_costs():
+    """Regression: ``reset()`` used to drop only the device state, so the
+    shape latch survived (same-shaped streams skipped the reset path) and
+    pending cost scalars from before the reset sat unfolded."""
+    det = _det()
+    for i in range(3):
+        det.step(_frame(seed=10 + i))
+    assert det._shape is not None
+    assert len(det._cost_log) == 3
+    det.reset()
+    assert det._shape is None
+    assert det._cost_log == []
+    # the pre-reset frames were folded, not dropped
+    assert det.cost_totals()["frames"] == 3
+    # and a post-reset frame keeps accumulating on top
+    det.step(_frame(seed=20))
+    assert det.cost_totals()["frames"] == 4
+
+
+def test_cost_totals_folds_pending_scalars():
+    det = _det()
+    for i in range(4):
+        det.step(_frame(seed=30 + i))
+    tot = det.cost_totals()
+    assert tot["frames"] == 4
+    assert tot["launches"] >= 4  # every frame runs ≥1 hysteresis launch
+    assert det._cost_log == []  # folded, nothing left pending
+
+
+# ---------------- one batched transfer per fold ------------------------------
+def test_fold_costs_is_one_device_get(monkeypatch):
+    """Regression: folding used to ``int(...)`` each scalar — up to
+    1024×4 blocking device syncs per window. Pin: ONE ``jax.device_get``
+    for the whole pending log, and NONE when the log is empty."""
+    det = _det()
+    frames = 5
+    for i in range(frames):
+        det.step(_frame(seed=40 + i))
+    calls = []
+    real = jax.device_get
+
+    def counting(tree):
+        calls.append(tree)
+        return real(tree)
+
+    monkeypatch.setattr(jax, "device_get", counting)
+    tot = det.cost_totals()
+    assert tot["frames"] == frames
+    assert len(calls) == 1, f"{len(calls)} transfers for one fold window"
+    # empty log → early return, no transfer at all
+    det.cost_totals()
+    assert len(calls) == 1
