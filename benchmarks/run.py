@@ -31,6 +31,11 @@ the LM table reads the dry-run artifacts.
   per_stage_parity               backend parity plane: per-stage vs fused
                                  on identical serving + stream workloads,
                                  cold vs warm+skip, bit-exact asserted
+  operator_zoo                   the classical-operator comparison row:
+                                 sobel_op/prewitt/roberts/log_op vs canny
+                                 through the SAME bucketed serving plane
+                                 at 256² and 1080p, each bit-exact vs its
+                                 own numpy oracle
   serve_saturation               AOT continuous-batching plane: offered
                                  load (Poisson arrivals) swept as
                                  fractions of back-to-back capacity;
@@ -52,8 +57,10 @@ artifact: ``--serve-saturation [--frames N]`` (CI ``serving-slo`` job),
 ``--perf-floor [--frames N]`` (CI gate: 1080p warm+skip must beat cold),
 ``--perf-floor-sharded [--frames N]`` (CI gate: 1080p warm+skip on a
 data×model MESH must beat the cold mesh detector — run under 8 forced
-host devices, DESIGN.md §14), and ``--roofline-smoke`` (CI quality job:
-bandwidth accounting stays live).
+host devices, DESIGN.md §14), ``--operator-zoo [--batch N]`` (CI
+conformance job: every registered operator's throughput row, bit-exact
+vs its own oracle), and ``--roofline-smoke`` (CI quality job: bandwidth
+accounting stays live).
 """
 
 from __future__ import annotations
@@ -752,6 +759,40 @@ def per_stage_parity(h=256, w=256, b=4, frames=24, hold=6, block_rows=32):
     assert fe_counts[("pallas", "warmskip")] < 3 * frames
 
 
+def operator_zoo(b=4):
+    """Throughput of every registered edge operator through the one
+    bucketed serving plane, at 256² and 1080p — the paper's comparative-
+    study table, measured on identical plumbing (same buckets, same
+    batch-grid strips, same halo handling), with every operator's output
+    asserted bit-exact against its OWN numpy oracle."""
+    from repro.core.canny import (
+        backend_spec,
+        backend_specs,
+        make_detector,
+        registered_ops,
+    )
+
+    for h, w, tag in ((256, 256, "_256"), (1080, 1920, "_1080p")):
+        imgs = synthetic_batch(b, h, w, seed=31)
+        jimgs = jnp.asarray(imgs)
+        for op in registered_ops():
+            det = make_detector(PARAMS, op=op, bucket_multiple=64)
+            out = np.asarray(det(jimgs))  # doubles as the warmup
+            us = _timeit(lambda: np.asarray(det(jimgs)), warmup=0)
+            name = ("jnp" if op == "canny"
+                    else next(s.name for s in backend_specs() if s.op == op))
+            ref_fn = backend_spec(name).ref_fn or canny_reference
+            exact = all(
+                (out[i] == ref_fn(imgs[i], PARAMS)).all() for i in range(b)
+            )
+            row(
+                f"operator_zoo_{op}{tag}",
+                us,
+                f"{b*h*w/us:.2f} MPx/s backend={name} bit_exact={exact}",
+            )
+            assert exact, f"{op} diverged from its oracle at {h}x{w}"
+
+
 def _offered_run_continuous(engine, reqs, gaps, linger_ms, slo_ms):
     """One offered-load run through the continuous plane: seeded arrival
     gaps, per-ticket latency samples, outputs in submission order."""
@@ -1072,6 +1113,7 @@ def main() -> None:
         pod_farm_fps_hd()
         pod_churn_fps()
         per_stage_parity()
+        operator_zoo()
         serve_saturation()
         roofline_table()
     finally:
@@ -1102,6 +1144,15 @@ if __name__ == "__main__":
         )
         print("name,us_per_call,derived")
         perf_floor(frames=n)
+        print(f"# wrote {write_artifact()}", file=sys.stderr)
+    elif "--operator-zoo" in sys.argv:
+        b = (
+            int(sys.argv[sys.argv.index("--batch") + 1])
+            if "--batch" in sys.argv
+            else 4
+        )
+        print("name,us_per_call,derived")
+        operator_zoo(b=b)
         print(f"# wrote {write_artifact()}", file=sys.stderr)
     elif "--roofline-smoke" in sys.argv:
         print("name,us_per_call,derived")

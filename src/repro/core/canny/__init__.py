@@ -24,7 +24,13 @@ from repro.core.canny.reference import (
     hysteresis_reference,
     gaussian_kernel1d,
 )
-from repro.core.canny.pipeline import canny, canny_local_stages, make_canny
+from repro.core.canny.pipeline import (
+    canny,
+    canny_local_stages,
+    make_canny,
+    make_detector,
+    registered_ops,
+)
 from repro.core.canny.gaussian import gaussian_stage
 from repro.core.canny.sobel import sobel_stage
 from repro.core.canny.nms import nms_stage
@@ -44,6 +50,8 @@ __all__ = [
     "register_backend_spec",
     "canny",
     "make_canny",
+    "make_detector",
+    "registered_ops",
     "canny_local_stages",
     "canny_reference",
     "gaussian_reference",

@@ -61,6 +61,14 @@ class BackendSpec:
     dist: bool = False
     warm: bool = False
     skip: bool = False
+    # which edge operator this backend computes ("canny", "sobel",
+    # "prewitt", "roberts", "log"); the ``make_detector(op=...)`` resolver
+    # and the CLIs' ``--op`` flag group backends by this field
+    op: str = "canny"
+    # numpy oracle for conformance cells: (img_u8_2d, params) → edges u8.
+    # None means the classic ``canny_reference`` — set it for non-Canny
+    # operators so the generated matrix pins each against ITS own math.
+    ref_fn: Callable | None = None
     # stage plane composes under shard_map directly (jnp stages do; the
     # Pallas stage fns distribute through their serving entry instead)
     stage_dist: bool = False
@@ -165,10 +173,20 @@ def conformance_cells():
     tagged supported/unsupported straight from the specs. The test
     harness parametrizes from THIS — cells are generated, never
     hand-enumerated, so a new backend is covered the moment its spec
-    registers."""
-    for spec in backend_specs():
+    registers.
+
+    The generator reads the LIVE registry at yield time: a
+    ``register_backend_spec(..., override=True)`` after the generator was
+    created (or between cells) is reflected in every cell not yet
+    yielded — materialized snapshots cannot go stale against the specs
+    they claim to describe."""
+    _load_kernel_specs()
+    for name in list(_SPECS):
         for dist in (False, True):
             for mode in ("cold", "warm", "warm+skip"):
+                spec = _SPECS.get(name)
+                if spec is None:  # deregistered mid-iteration
+                    continue
                 warm = mode != "cold"
                 skip = mode == "warm+skip"
                 yield {

@@ -223,6 +223,58 @@ def make_canny(
     return run
 
 
+def registered_ops() -> list[str]:
+    """Every edge operator the registry can serve (``"canny"`` plus the
+    operator zoo once the kernel package registers)."""
+    from repro.core.canny.backends import backend_specs
+
+    return sorted({s.op for s in backend_specs()})
+
+
+def make_detector(
+    params: CannyParams = CannyParams(),
+    dist: Dist = Dist(),
+    op: str = "canny",
+    backend: str | None = None,
+    local_sweeps: int = 2,
+    bucket_multiple: int | None = 64,
+) -> Callable[[jax.Array], jax.Array]:
+    """Operator-aware ``make_canny``: resolve ``op`` through the registry.
+
+    ``backend=None`` picks the operator's registered backend (``"jnp"``
+    for Canny — the portable default — and the sole registered spec for
+    each zoo operator); an explicit ``backend`` is validated against
+    ``op`` so a detector never silently computes a different operator
+    than it was asked for. Everything downstream — buckets, mesh,
+    capability validation — is ``make_canny``, one construction path for
+    the whole zoo.
+    """
+    from repro.core.canny.backends import backend_specs
+
+    if backend is None:
+        candidates = [s.name for s in backend_specs() if s.op == op]
+        if not candidates:
+            raise ValueError(
+                f"no backend registered for operator {op!r} "
+                f"(registered operators: {registered_ops()})"
+            )
+        backend = "jnp" if op == "canny" else candidates[0]
+    else:
+        spec = backend_spec(backend)
+        if spec.op != op:
+            raise ValueError(
+                f"backend {backend!r} computes operator {spec.op!r}, "
+                f"not {op!r}"
+            )
+    return make_canny(
+        params,
+        dist,
+        backend=backend,
+        local_sweeps=local_sweeps,
+        bucket_multiple=bucket_multiple,
+    )
+
+
 def canny(
     img: jax.Array,
     params: CannyParams = CannyParams(),

@@ -13,12 +13,22 @@ import numpy as np
 
 
 def even_tiles(extent: int, parts: int) -> list[tuple[int, int]]:
-    """Split [0, extent) into ``parts`` contiguous near-equal intervals.
+    """Split [0, extent) into at most ``parts`` contiguous near-equal
+    intervals.
 
-    Sizes differ by at most 1 (the optimal static balance).
+    Sizes differ by at most 1 (the optimal static balance), and every
+    tile is NON-EMPTY: ``parts`` is clamped to ``extent`` (a zero-size
+    tile is a zero-height strip, which breaks stencil halo math — the
+    halo of an empty strip aliases its neighbour), so callers get
+    ``min(parts, extent)`` tiles back. ``extent == 0`` yields no tiles.
     """
     if parts <= 0:
         raise ValueError("parts must be positive")
+    if extent < 0:
+        raise ValueError("extent must be non-negative")
+    parts = min(parts, extent)
+    if parts == 0:
+        return []
     base, rem = divmod(extent, parts)
     tiles = []
     start = 0
@@ -40,10 +50,22 @@ def tile_counts(shape: tuple[int, int], grid: tuple[int, int]) -> np.ndarray:
     )
 
 
-def assert_balanced(counts: np.ndarray, tolerance_ratio: float = 0.02) -> None:
-    """Raise if any shard's work deviates more than ``tolerance_ratio``."""
+def assert_balanced(
+    counts: np.ndarray, tolerance_ratio: float = 0.02, tolerance_abs: int = 1
+) -> None:
+    """Raise if any shard's work deviates more than ``tolerance_ratio``.
+
+    ``tolerance_abs`` is the granularity floor: when ``max - min`` is at
+    most this many work items the tiling is already optimal by
+    construction (``even_tiles`` sizes differ by at most 1, which on tiny
+    extents — the clamped ``parts > extent`` case included — can be a
+    large *ratio* while being the best possible static balance).
+    """
+    counts = np.asarray(counts)
+    if counts.size == 0:
+        return
     mx, mn = counts.max(), counts.min()
-    if mx == 0:
+    if mx == 0 or mx - mn <= tolerance_abs:
         return
     skew = (mx - mn) / mx
     if skew > tolerance_ratio:

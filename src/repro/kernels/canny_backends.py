@@ -377,6 +377,10 @@ def _staged_temporal(params, *, warm=True, skip=False, block_rows=None,
     )
 
 
+# the operator zoo (sobel_op/prewitt/roberts/log_op) registers alongside
+# the Canny backends — one lazy kernel import brings in the whole zoo
+import repro.kernels.operator_backends  # noqa: E402,F401  (registers)
+
 register_backend_spec(
     BackendSpec(
         name="pallas",

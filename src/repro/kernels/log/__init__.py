@@ -1,0 +1,4 @@
+from repro.kernels.log.ops import log_edges, log_edges_jnp
+from repro.kernels.log.ref import log_edges_ref
+
+__all__ = ["log_edges", "log_edges_jnp", "log_edges_ref"]

@@ -1,0 +1,105 @@
+"""Jit'd LoG entry points: Pallas kernel + pure-jnp fallback."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.canny.gaussian import gaussian_stage
+from repro.core.canny.params import CannyParams
+from repro.core.patterns.dist import LOCAL, Dist, StencilCtx
+from repro.core.patterns.stencil import overlap_strips
+from repro.kernels import common
+from repro.kernels.fused_canny.ops import _run_sharded
+from repro.kernels.log.log import _PAIRS, log_strips
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sigma", "radius", "high", "block_rows", "interpret", "dist"),
+)
+def log_edges(
+    img: jax.Array,
+    sigma: float = 1.4,
+    radius: int = 2,
+    high: float = 0.2,
+    block_rows: int | None = None,
+    interpret: bool | None = None,
+    true_hw: jax.Array | None = None,
+    dist: Dist = LOCAL,
+) -> jax.Array:
+    """(h, w) or (b, h, w) → uint8 zero-crossing LoG edges (mesh-aware)."""
+    imgs, had_batch = common.as_batch(img.astype(jnp.float32))
+    h2 = radius + 2
+    if not dist.is_local:
+
+        def shard_fn(x, hw, row_off, bh, ctx):
+            return overlap_strips(
+                lambda ops, slabs, r0: log_strips(
+                    ops[0], sigma, radius, high, bh, interpret, None, hw,
+                    halos=slabs, row_offset=row_off + r0,
+                ),
+                (x,), ctx.halo_rows(x, h2), block_rows=bh,
+            )
+
+        out = _run_sharded(imgs, true_hw, h2, block_rows, dist, shard_fn)
+        return out if had_batch else out[0]
+    bh = block_rows or common.pick_block_rows(imgs.shape[-2], min_rows=h2)
+    padded, h = common.pad_rows_to_multiple(imgs, bh)
+    if true_hw is None:
+        true_hw = jnp.broadcast_to(
+            jnp.asarray([h, imgs.shape[-1]], jnp.int32), (imgs.shape[0], 2)
+        )
+    out = log_strips(padded, sigma, radius, high, bh, interpret, None, true_hw)
+    out = common.crop_rows(out, h)
+    return out if had_batch else out[0]
+
+
+def _replicate_true(x: jax.Array, ht, wt, grow, gcol) -> jax.Array:
+    """Overwrite rows/cols past the per-image true extent with the last
+    TRUE row/col (rows first — the shared border-fix order)."""
+    b, h, w = x.shape
+    ridx = jnp.broadcast_to(jnp.clip(ht - 1, 0, h - 1), (b, 1, w))
+    bot = jnp.take_along_axis(x, ridx, axis=1)
+    x = jnp.where(grow >= ht, bot, x)
+    cidx = jnp.broadcast_to(jnp.clip(wt - 1, 0, w - 1), (b, h, 1))
+    right = jnp.take_along_axis(x, cidx, axis=2)
+    return jnp.where(gcol >= wt, right, x)
+
+
+def log_edges_jnp(
+    imgs: jax.Array, true_hw: jax.Array, params: CannyParams
+) -> jax.Array:
+    """Pure-jnp fallback: blur → laplacian → zero-crossing with the SAME
+    two-layer true-size border replication as the kernel."""
+    imgs = imgs.astype(jnp.float32)
+    b, h, w = imgs.shape
+    hw = true_hw.astype(jnp.int32)
+    ht = hw[:, 0].reshape(b, 1, 1)
+    wt = hw[:, 1].reshape(b, 1, 1)
+    grow = lax.broadcasted_iota(jnp.int32, (1, h, 1), 1)
+    gcol = lax.broadcasted_iota(jnp.int32, (1, 1, w), 2)
+
+    blur = gaussian_stage(imgs, StencilCtx(None, "edge"), params)
+    blur = _replicate_true(blur, ht, wt, grow, gcol)
+
+    p = jnp.pad(blur, ((0, 0), (1, 1), (1, 1)), mode="edge")
+    n_ = p[:, 0:h, 1 : 1 + w]
+    w_ = p[:, 1 : 1 + h, 0:w]
+    c_ = p[:, 1 : 1 + h, 1 : 1 + w]
+    e_ = p[:, 1 : 1 + h, 2 : 2 + w]
+    s_ = p[:, 2 : 2 + h, 1 : 1 + w]
+    lap = n_ + w_ + (-4.0) * c_ + e_ + s_
+    lap = _replicate_true(lap, ht, wt, grow, gcol)
+
+    p2 = jnp.pad(lap, ((0, 0), (1, 1), (1, 1)), mode="edge")
+    edges = jnp.zeros((b, h, w), dtype=bool)
+    for dy, dx in _PAIRS:
+        a = p2[:, 1 + dy : 1 + dy + h, 1 + dx : 1 + dx + w]
+        bb = p2[:, 1 - dy : 1 - dy + h, 1 - dx : 1 - dx + w]
+        edges = edges | ((a * bb < 0) & (jnp.abs(a - bb) >= params.high))
+    edges = edges & ~((grow >= ht) | (gcol >= wt))
+    return edges.astype(jnp.uint8)

@@ -1,0 +1,47 @@
+"""Pure-numpy Laplacian-of-Gaussian oracle.
+
+LoG = separable Gaussian blur (the Canny oracle's, bit-for-bit) → 3x3
+Laplacian with edge-replicate borders → zero-crossing detection: a pixel
+is an edge iff, along ANY of the four opposite-neighbour axes (N/S, W/E
+and the two diagonals) of the edge-padded Laplacian, the two neighbours
+have opposite signs AND their difference clears the ``params.high``
+slope threshold (the classical |a - b| >= T gate that rejects
+flat-region noise crossings).
+
+Accumulation discipline matches ``reference._correlate3``: f32
+left-assoc in (dy, dx) order, zero taps skipped by the jnp/Pallas paths
+(exact no-ops).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.canny.params import CannyParams
+from repro.core.canny.reference import _correlate3, gaussian_reference
+
+_LAP = np.array([[0, 1, 0], [1, -4, 1], [0, 1, 0]], dtype=np.float32)
+
+# (dy, dx) of the "forward" neighbour per opposite pair
+_PAIRS = ((1, 0), (0, 1), (1, 1), (1, -1))
+
+
+def log_response_ref(img: np.ndarray, params: CannyParams) -> np.ndarray:
+    """The Laplacian of the blurred image (f32) — fix-point for tests."""
+    blur = gaussian_reference(img, params)
+    return _correlate3(blur, _LAP)
+
+
+def log_edges_ref(
+    img: np.ndarray, params: CannyParams = CannyParams()
+) -> np.ndarray:
+    """Zero-crossing LoG edge map (uint8 0/1) — the conformance oracle."""
+    lap = log_response_ref(img, params)
+    h, w = lap.shape
+    p = np.pad(lap, ((1, 1), (1, 1)), mode="edge")
+    edges = np.zeros((h, w), dtype=bool)
+    for dy, dx in _PAIRS:
+        a = p[1 + dy : 1 + dy + h, 1 + dx : 1 + dx + w]
+        b = p[1 - dy : 1 - dy + h, 1 - dx : 1 - dx + w]
+        edges |= (a * b < 0) & (np.abs(a - b) >= params.high)
+    return edges.astype(np.uint8)

@@ -1,0 +1,158 @@
+"""Register the classical edge-operator zoo with the backend registry.
+
+Four operators from the comparative-study candidate set ride the SAME
+serving plane as Canny — ``BucketedCanny`` buckets, ``CannyEngine`` /
+``AotCannyEngine``, ``FarmScheduler`` (cold shared-detector lanes), the
+pod plane, and both CLIs resolve them through ``BackendSpec`` exactly
+like the Canny backends:
+
+  sobel_op — thresholded Sobel magnitude (no blur, no hysteresis)
+  prewitt  — thresholded Prewitt magnitude
+  roberts  — thresholded 2x2 Roberts-cross magnitude
+  log_op   — Laplacian-of-Gaussian zero-crossing detector
+
+Capability claims are HONEST, and deliberately narrow:
+
+  dist  — yes for all four: each serving entry runs its batch-grid
+          kernel inside ``shard_map`` with ``StencilCtx.halo_rows``
+          exchange (the shared ``_run_sharded`` scaffolding).
+  warm  — NO, structurally: warm-start reuses a previous frame's
+          fixpoint state to seed an iterative solve, and none of these
+          operators HAS a fixpoint — their output is a single pure
+          stencil pass, so there is no state whose reuse could save
+          sweeps. A warm claim would be a lie the conformance matrix
+          could not distinguish from a silent fallback.
+  skip  — NO: the static-strip skip is defined on top of warm's threaded
+          per-frame state (``require`` enforces skip ⇒ warm); with no
+          temporal plane there is no stored previous output to copy.
+
+``temporal_fn`` stays ``None``, so ``TemporalCanny`` (and every warm /
+warm+skip conformance cell) raises ``UnsupportedFeature`` naming the
+missing feature instead of silently running cold. ``ref_fn`` points each
+spec at ITS numpy oracle — the generated conformance matrix pins every
+claimed cell bit-exact against per-operator ground truth.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.canny.backends import BackendSpec, register_backend_spec
+from repro.core.canny.params import CannyParams
+from repro.core.patterns.dist import LOCAL, Dist
+from repro.kernels.log.ops import log_edges
+from repro.kernels.log.ref import log_edges_ref
+from repro.kernels.prewitt.ops import prewitt_edges
+from repro.kernels.prewitt.ref import prewitt_edges_ref
+from repro.kernels.roberts.ops import roberts_edges
+from repro.kernels.roberts.ref import roberts_edges_ref
+from repro.kernels.sobel.ops import sobel_edges
+from repro.kernels.sobel.ref import sobel_edges_ref
+
+
+def _sobel_serving(
+    imgs: jax.Array,
+    true_hw: jax.Array,
+    params: CannyParams,
+    interpret: bool | None = None,
+    dist: Dist = LOCAL,
+) -> jax.Array:
+    return sobel_edges(
+        imgs.astype(jnp.float32),
+        high=params.high,
+        l2_norm=params.l2_norm,
+        interpret=interpret,
+        true_hw=true_hw,
+        dist=dist,
+    )
+
+
+def _prewitt_serving(
+    imgs: jax.Array,
+    true_hw: jax.Array,
+    params: CannyParams,
+    interpret: bool | None = None,
+    dist: Dist = LOCAL,
+) -> jax.Array:
+    return prewitt_edges(
+        imgs.astype(jnp.float32),
+        high=params.high,
+        l2_norm=params.l2_norm,
+        interpret=interpret,
+        true_hw=true_hw,
+        dist=dist,
+    )
+
+
+def _roberts_serving(
+    imgs: jax.Array,
+    true_hw: jax.Array,
+    params: CannyParams,
+    interpret: bool | None = None,
+    dist: Dist = LOCAL,
+) -> jax.Array:
+    return roberts_edges(
+        imgs.astype(jnp.float32),
+        high=params.high,
+        l2_norm=params.l2_norm,
+        interpret=interpret,
+        true_hw=true_hw,
+        dist=dist,
+    )
+
+
+def _log_serving(
+    imgs: jax.Array,
+    true_hw: jax.Array,
+    params: CannyParams,
+    interpret: bool | None = None,
+    dist: Dist = LOCAL,
+) -> jax.Array:
+    return log_edges(
+        imgs.astype(jnp.float32),
+        sigma=params.sigma,
+        radius=params.radius,
+        high=params.high,
+        interpret=interpret,
+        true_hw=true_hw,
+        dist=dist,
+    )
+
+
+register_backend_spec(
+    BackendSpec(
+        name="sobel_op",
+        serving_fn=_sobel_serving,
+        dist=True,
+        op="sobel",
+        ref_fn=sobel_edges_ref,
+    )
+)
+register_backend_spec(
+    BackendSpec(
+        name="prewitt",
+        serving_fn=_prewitt_serving,
+        dist=True,
+        op="prewitt",
+        ref_fn=prewitt_edges_ref,
+    )
+)
+register_backend_spec(
+    BackendSpec(
+        name="roberts",
+        serving_fn=_roberts_serving,
+        dist=True,
+        op="roberts",
+        ref_fn=roberts_edges_ref,
+    )
+)
+register_backend_spec(
+    BackendSpec(
+        name="log_op",
+        serving_fn=_log_serving,
+        dist=True,
+        op="log",
+        ref_fn=log_edges_ref,
+    )
+)

@@ -1,0 +1,4 @@
+from repro.kernels.prewitt.ops import prewitt_edges, prewitt_edges_jnp
+from repro.kernels.prewitt.ref import prewitt_edges_ref
+
+__all__ = ["prewitt_edges", "prewitt_edges_jnp", "prewitt_edges_ref"]

@@ -1,0 +1,97 @@
+"""Jit'd Prewitt entry points: Pallas kernel + pure-jnp fallback.
+
+``prewitt_edges`` is the serving entry (mesh-aware via the shared
+``_run_sharded`` scaffolding); ``prewitt_edges_jnp`` is the portable
+fallback with identical true-size semantics — both bit-match
+``ref.prewitt_edges_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.canny.params import CannyParams
+from repro.core.canny.sobel import fold_true_border, zero_outside_true
+from repro.core.patterns.dist import LOCAL, Dist
+from repro.core.patterns.stencil import overlap_strips
+from repro.kernels import common
+from repro.kernels.fused_canny.ops import _run_sharded
+from repro.kernels.prewitt.prewitt import prewitt_strips
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("high", "l2_norm", "block_rows", "interpret", "dist"),
+)
+def prewitt_edges(
+    img: jax.Array,
+    high: float = 0.2,
+    l2_norm: bool = True,
+    block_rows: int | None = None,
+    interpret: bool | None = None,
+    true_hw: jax.Array | None = None,
+    dist: Dist = LOCAL,
+) -> jax.Array:
+    """(h, w) or (b, h, w) → uint8 thresholded Prewitt edges (mesh-aware)."""
+    imgs, had_batch = common.as_batch(img.astype(jnp.float32))
+    if not dist.is_local:
+
+        def shard_fn(x, hw, row_off, bh, ctx):
+            return overlap_strips(
+                lambda ops, slabs, r0: prewitt_strips(
+                    ops[0], high, l2_norm, bh, interpret, None, hw,
+                    halos=slabs, row_offset=row_off + r0,
+                ),
+                (x,), ctx.halo_rows(x, 1), block_rows=bh,
+            )
+
+        out = _run_sharded(imgs, true_hw, 1, block_rows, dist, shard_fn)
+        return out if had_batch else out[0]
+    bh = block_rows or common.pick_block_rows(imgs.shape[-2], min_rows=1)
+    padded, h = common.pad_rows_to_multiple(imgs, bh)
+    if true_hw is None:
+        true_hw = jnp.broadcast_to(
+            jnp.asarray([h, imgs.shape[-1]], jnp.int32), (imgs.shape[0], 2)
+        )
+    out = prewitt_strips(padded, high, l2_norm, bh, interpret, None, true_hw)
+    out = common.crop_rows(out, h)
+    return out if had_batch else out[0]
+
+
+def prewitt_edges_jnp(
+    imgs: jax.Array, true_hw: jax.Array, params: CannyParams
+) -> jax.Array:
+    """Pure-jnp fallback with the SAME true-size border semantics."""
+    imgs = imgs.astype(jnp.float32)
+    b, h, w = imgs.shape
+    hw = true_hw.astype(jnp.int32)
+    ht = hw[:, 0].reshape(b, 1, 1)
+    wt = hw[:, 1].reshape(b, 1, 1)
+    grow = lax.broadcasted_iota(jnp.int32, (1, h, 1), 1)
+    gcol = lax.broadcasted_iota(jnp.int32, (1, 1, w), 2)
+    p = jnp.pad(imgs, ((0, 0), (1, 1), (1, 1)), mode="edge")
+    win = {}
+    for dy in range(3):
+        for dx in range(3):
+            win[(dy, dx)] = lax.slice_in_dim(
+                lax.slice_in_dim(p, dy, dy + h, axis=-2), dx, dx + w, axis=-1
+            )
+    win = fold_true_border(win, (grow, ht, gcol, wt))
+    gx = (
+        -win[(0, 0)] + win[(0, 2)] - win[(1, 0)] + win[(1, 2)]
+        - win[(2, 0)] + win[(2, 2)]
+    )
+    gy = (
+        -win[(0, 0)] - win[(0, 1)] - win[(0, 2)]
+        + win[(2, 0)] + win[(2, 1)] + win[(2, 2)]
+    )
+    if params.l2_norm:
+        mag = jnp.sqrt(gx * gx + gy * gy)
+    else:
+        mag = jnp.abs(gx) + jnp.abs(gy)
+    mag = zero_outside_true(mag, (grow, ht, gcol, wt))
+    return (mag >= params.high).astype(jnp.uint8)

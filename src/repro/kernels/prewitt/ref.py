@@ -1,0 +1,36 @@
+"""Pure-numpy Prewitt oracle — the semantic ground truth for the
+``prewitt`` backend.
+
+Same border discipline as the Canny oracle's Sobel stage: edge-replicate
+the input (one-step clamp for a 3x3 stencil), correlate, threshold the
+gradient magnitude at ``params.high``. Accumulation is f32 left-assoc in
+(dy, dx) order, like ``reference._correlate3`` — the jnp/Pallas paths
+reproduce it bit-for-bit by summing the non-zero taps in the same order
+(zero-tap adds are exact no-ops for finite floats).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.canny.params import CannyParams
+from repro.core.canny.reference import _correlate3
+
+_PREWITT_X = np.array([[-1, 0, 1], [-1, 0, 1], [-1, 0, 1]], dtype=np.float32)
+_PREWITT_Y = np.array([[-1, -1, -1], [0, 0, 0], [1, 1, 1]], dtype=np.float32)
+
+
+def prewitt_magnitude_ref(img: np.ndarray, params: CannyParams) -> np.ndarray:
+    img = img.astype(np.float32)
+    gx = _correlate3(img, _PREWITT_X)
+    gy = _correlate3(img, _PREWITT_Y)
+    if params.l2_norm:
+        return np.sqrt(gx * gx + gy * gy).astype(np.float32)
+    return (np.abs(gx) + np.abs(gy)).astype(np.float32)
+
+
+def prewitt_edges_ref(
+    img: np.ndarray, params: CannyParams = CannyParams()
+) -> np.ndarray:
+    """Thresholded Prewitt edge map (uint8 0/1) — the conformance oracle."""
+    return (prewitt_magnitude_ref(img, params) >= params.high).astype(np.uint8)

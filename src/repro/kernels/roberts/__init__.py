@@ -1,0 +1,4 @@
+from repro.kernels.roberts.ops import roberts_edges, roberts_edges_jnp
+from repro.kernels.roberts.ref import roberts_edges_ref
+
+__all__ = ["roberts_edges", "roberts_edges_jnp", "roberts_edges_ref"]

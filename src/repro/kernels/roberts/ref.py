@@ -1,0 +1,31 @@
+"""Pure-numpy Roberts-cross oracle.
+
+Roberts is a 2x2 FORWARD stencil — each output reads its own pixel plus
+the (+1, +1) neighbourhood, so only the bottom/right borders need the
+edge-replicate clamp (there are no dy/dx = -1 reads). gx/gy are single
+subtractions (exact in floats), magnitude and threshold as elsewhere.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.canny.params import CannyParams
+
+
+def roberts_magnitude_ref(img: np.ndarray, params: CannyParams) -> np.ndarray:
+    img = img.astype(np.float32)
+    h, w = img.shape
+    p = np.pad(img, ((0, 1), (0, 1)), mode="edge")
+    gx = p[:h, :w] - p[1 : h + 1, 1 : w + 1]
+    gy = p[1 : h + 1, :w] - p[:h, 1 : w + 1]
+    if params.l2_norm:
+        return np.sqrt(gx * gx + gy * gy).astype(np.float32)
+    return (np.abs(gx) + np.abs(gy)).astype(np.float32)
+
+
+def roberts_edges_ref(
+    img: np.ndarray, params: CannyParams = CannyParams()
+) -> np.ndarray:
+    """Thresholded Roberts edge map (uint8 0/1) — the conformance oracle."""
+    return (roberts_magnitude_ref(img, params) >= params.high).astype(np.uint8)

@@ -1,4 +1,4 @@
-from repro.kernels.sobel.ops import sobel
-from repro.kernels.sobel.ref import sobel_ref
+from repro.kernels.sobel.ops import sobel, sobel_edges, sobel_edges_jnp
+from repro.kernels.sobel.ref import sobel_edges_ref, sobel_ref
 
-__all__ = ["sobel", "sobel_ref"]
+__all__ = ["sobel", "sobel_edges", "sobel_edges_jnp", "sobel_edges_ref", "sobel_ref"]

@@ -1,4 +1,10 @@
-"""Jit'd public wrapper for the fused Sobel Pallas kernel."""
+"""Jit'd public wrappers for the fused Sobel Pallas kernel.
+
+``sobel`` is the Canny pipeline's gradient stage; ``sobel_edges`` is the
+standalone thresholded Sobel detector (the operator zoo's ``sobel_op``
+backend) — the same pinned kernel with the magnitude thresholded at
+``high``, mesh-aware through the shared ``_run_sharded`` scaffolding.
+"""
 
 from __future__ import annotations
 
@@ -6,7 +12,12 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
+from repro.core.canny.params import CannyParams
+from repro.core.canny.sobel import sobel_stage
+from repro.core.patterns.dist import LOCAL, Dist, StencilCtx
+from repro.core.patterns.stencil import overlap_strips
 from repro.kernels import common
 from repro.kernels.sobel.sobel import sobel_strips
 
@@ -25,3 +36,66 @@ def sobel(
     mag, dirs = sobel_strips(padded, l2_norm, bh, interpret)
     mag, dirs = common.crop_rows(mag, h), common.crop_rows(dirs, h)
     return (mag, dirs) if had_batch else (mag[0], dirs[0])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("high", "l2_norm", "block_rows", "interpret", "dist"),
+)
+def sobel_edges(
+    img: jax.Array,
+    high: float = 0.2,
+    l2_norm: bool = True,
+    block_rows: int | None = None,
+    interpret: bool | None = None,
+    true_hw: jax.Array | None = None,
+    dist: Dist = LOCAL,
+) -> jax.Array:
+    """(h, w) or (b, h, w) → uint8 thresholded Sobel edges (mesh-aware).
+
+    The magnitude is the pinned ``sobel_strips`` output (true-size border
+    anchoring included), so the comparison against ``high`` is
+    deterministic — the threshold needs no kernel of its own.
+    """
+    imgs, had_batch = common.as_batch(img.astype(jnp.float32))
+    if not dist.is_local:
+        from repro.kernels.fused_canny.ops import _run_sharded
+
+        def shard_fn(x, hw, row_off, bh, ctx):
+            mag, _ = overlap_strips(
+                lambda ops, slabs, r0: sobel_strips(
+                    ops[0], l2_norm, bh, interpret, None, hw,
+                    halos=slabs, row_offset=row_off + r0,
+                ),
+                (x,), ctx.halo_rows(x, 1), block_rows=bh,
+            )
+            return (mag >= high).astype(jnp.uint8)
+
+        out = _run_sharded(imgs, true_hw, 1, block_rows, dist, shard_fn)
+        return out if had_batch else out[0]
+    bh = block_rows or common.pick_block_rows(imgs.shape[-2], min_rows=1)
+    padded, h = common.pad_rows_to_multiple(imgs, bh)
+    if true_hw is None:
+        true_hw = jnp.broadcast_to(
+            jnp.asarray([h, imgs.shape[-1]], jnp.int32), (imgs.shape[0], 2)
+        )
+    mag, _ = sobel_strips(padded, l2_norm, bh, interpret, None, true_hw)
+    out = (common.crop_rows(mag, h) >= high).astype(jnp.uint8)
+    return out if had_batch else out[0]
+
+
+def sobel_edges_jnp(
+    imgs: jax.Array, true_hw: jax.Array, params: CannyParams
+) -> jax.Array:
+    """Pure-jnp fallback: the shared ``sobel_stage`` clamp rule + threshold."""
+    imgs = imgs.astype(jnp.float32)
+    b, h, w = imgs.shape
+    hw = true_hw.astype(jnp.int32)
+    ht = hw[:, 0].reshape(b, 1, 1)
+    wt = hw[:, 1].reshape(b, 1, 1)
+    grow = lax.broadcasted_iota(jnp.int32, (1, h, 1), 1)
+    gcol = lax.broadcasted_iota(jnp.int32, (1, 1, w), 2)
+    mag, _ = sobel_stage(
+        imgs, StencilCtx(None, "edge"), params, clamp=(grow, ht, gcol, wt)
+    )
+    return (mag >= params.high).astype(jnp.uint8)

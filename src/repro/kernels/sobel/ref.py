@@ -1,11 +1,13 @@
-"""Pure-jnp oracle for the Sobel kernel."""
+"""Oracles for the Sobel kernel: pure-jnp stage + numpy edge detector."""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.canny.params import CannyParams
+from repro.core.canny.reference import sobel_reference
 from repro.core.canny.sobel import sobel_stage
 from repro.core.patterns.dist import StencilCtx
 
@@ -13,3 +15,13 @@ from repro.core.patterns.dist import StencilCtx
 def sobel_ref(img: jax.Array, l2_norm: bool = True):
     params = CannyParams(l2_norm=l2_norm)
     return sobel_stage(img.astype(jnp.float32), StencilCtx(None, "edge"), params)
+
+
+def sobel_edges_ref(
+    img: np.ndarray, params: CannyParams = CannyParams()
+) -> np.ndarray:
+    """Numpy oracle for the standalone ``sobel_op`` backend: the Canny
+    oracle's Sobel magnitude (on the RAW image — no blur stage in the
+    classical Sobel detector) thresholded at ``params.high``."""
+    mag, _ = sobel_reference(np.asarray(img, np.float32), params)
+    return (mag >= params.high).astype(np.uint8)

@@ -25,7 +25,13 @@ import time
 
 import numpy as np
 
-from repro.core.canny import CannyParams, backend_specs, canny_reference
+from repro.core.canny import (
+    CannyParams,
+    backend_spec,
+    backend_specs,
+    canny_reference,
+    registered_ops,
+)
 from repro.data.images import synthetic_image
 from repro.launch.mesh import dist_from_spec
 from repro.serve.engine import CannyEngine
@@ -39,7 +45,7 @@ def parse_sizes(spec: str) -> list[tuple[int, int]]:
     return sizes
 
 
-def serve_aot(args, params, sizes, dist):
+def serve_aot(args, params, sizes, dist, ref_fn):
     """The continuous plane: AOT warmup, Poisson arrivals, SLO scoring."""
     from repro.serve.admission import ContinuousBatcher
     from repro.serve.aot import AotCannyEngine
@@ -55,7 +61,8 @@ def serve_aot(args, params, sizes, dist):
     )
     mesh_desc = "local" if dist.is_local else f"mesh={args.mesh}"
     print(
-        f"aot engine: backend={args.backend} buckets={sorted(engine.hw_buckets)} "
+        f"aot engine: op={args.op} backend={args.backend} "
+        f"buckets={sorted(engine.hw_buckets)} "
         f"lanes={list(engine.lanes)} → {len(engine._exe)} executables "
         f"compiled in {engine.warmup_s:.2f}s {mesh_desc}"
     )
@@ -100,7 +107,7 @@ def serve_aot(args, params, sizes, dist):
 
         if not args.no_verify:
             i = int(rng.integers(total))
-            want = canny_reference(reqs[i], params)
+            want = ref_fn(reqs[i], params)
             ok = (tickets[i].result() == want).all()
             print(f"  verify request {i} {reqs[i].shape}: "
                   f"{'bit-exact vs numpy oracle' if ok else 'MISMATCH'}")
@@ -124,15 +131,25 @@ def main():
     ap.add_argument("--per-wave", type=int, default=12)
     ap.add_argument("--bucket", type=int, default=64)
     ap.add_argument("--max-batch", type=int, default=8)
-    # serving-capable backends straight from the BackendSpec registry;
-    # the engine validates dist capability at construction (fail fast).
-    # The default must come from the registry too — argparse never
-    # validates defaults, and on a no-Pallas host "fused" is not there.
+    # operators and serving-capable backends straight from the
+    # BackendSpec registry; the engine validates dist capability at
+    # construction (fail fast). The backend default resolves AFTER parse
+    # — it depends on --op, and on a no-Pallas host "fused" is not there.
     serving = [s.name for s in backend_specs() if s.serving_fn]
     ap.add_argument(
+        "--op",
+        default="canny",
+        choices=registered_ops(),
+        help="edge operator to serve; the backend resolves through the "
+        "registry and sampled requests verify against the OPERATOR'S "
+        "numpy oracle",
+    )
+    ap.add_argument(
         "--backend",
-        default="fused" if "fused" in serving else serving[0],
+        default=None,
         choices=serving,
+        help="serving backend (default: 'fused' for canny when "
+        "registered, else the operator's registered backend)",
     )
     ap.add_argument("--sigma", type=float, default=1.4)
     ap.add_argument("--low", type=float, default=0.08)
@@ -169,11 +186,27 @@ def main():
     )
     args = ap.parse_args()
 
+    if args.backend is None:
+        candidates = [
+            s.name for s in backend_specs() if s.serving_fn and s.op == args.op
+        ]
+        args.backend = "fused" if "fused" in candidates else candidates[0]
+    else:
+        spec = backend_spec(args.backend)
+        if spec.op != args.op:
+            raise SystemExit(
+                f"backend {args.backend!r} computes operator {spec.op!r}, "
+                f"not {args.op!r} (backends for {args.op!r}: "
+                f"{[s.name for s in backend_specs() if s.op == args.op]})"
+            )
+    # every operator verifies against ITS oracle, not canny's
+    ref_fn = backend_spec(args.backend).ref_fn or canny_reference
+
     params = CannyParams(sigma=args.sigma, low=args.low, high=args.high)
     sizes = parse_sizes(args.sizes)
     dist = dist_from_spec(args.mesh)
     if args.aot:
-        return serve_aot(args, params, sizes, dist)
+        return serve_aot(args, params, sizes, dist, ref_fn)
     engine = CannyEngine(
         params,
         backend=args.backend,
@@ -183,7 +216,8 @@ def main():
     )
     mesh_desc = "local" if dist.is_local else f"mesh={args.mesh}"
     print(
-        f"engine: backend={args.backend} bucket_multiple={args.bucket} "
+        f"engine: op={args.op} backend={args.backend} "
+        f"bucket_multiple={args.bucket} "
         f"max_batch={args.max_batch} sizes={sizes} {mesh_desc}"
     )
 
@@ -208,7 +242,7 @@ def main():
 
         if not args.no_verify:
             i = int(rng.integers(len(reqs)))
-            want = canny_reference(reqs[i], params)
+            want = ref_fn(reqs[i], params)
             ok = (edges[i] == want).all()
             print(f"  verify request {i} {reqs[i].shape}: "
                   f"{'bit-exact vs numpy oracle' if ok else 'MISMATCH'}")

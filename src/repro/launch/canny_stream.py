@@ -19,7 +19,14 @@ import time
 
 import numpy as np
 
-from repro.core.canny import CannyParams, backend_specs, canny_reference
+from repro.core.canny import (
+    CannyParams,
+    backend_spec,
+    backend_specs,
+    canny_reference,
+    make_detector,
+    registered_ops,
+)
 from repro.launch.mesh import dist_from_spec
 from repro.stream import FarmScheduler, Prefetcher, SyntheticStream
 
@@ -62,10 +69,22 @@ def main():
     # choices come from the BackendSpec registry — a new backend shows up
     # here (and is capability-validated downstream) with zero CLI edits
     ap.add_argument(
+        "--op",
+        default="canny",
+        choices=registered_ops(),
+        help="edge operator to stream; non-canny operators have no "
+        "temporal plane, so they run COLD through a shared detector "
+        "(and verify against the OPERATOR'S numpy oracle)",
+    )
+    ap.add_argument(
         "--backend",
         default=None,
-        choices=[s.name for s in backend_specs() if s.temporal_fn],
-        help="any registered temporal-capable backend (default: auto)",
+        choices=[
+            s.name for s in backend_specs()
+            if (s.temporal_fn if s.op == "canny" else s.serving_fn)
+        ],
+        help="any registered backend for --op: temporal-capable for "
+        "canny, serving-capable for the operator zoo (default: auto)",
     )
     ap.add_argument(
         "--timeout", type=float, default=None,
@@ -102,6 +121,48 @@ def main():
     pods = dist.pod_size() if not dist.is_local else 1
     if args.skip and args.no_warm:
         raise SystemExit("--skip needs warm-start (drop --no-warm)")
+    detector = None
+    ref = canny_reference
+    if args.backend is not None and backend_spec(args.backend).op != args.op:
+        raise SystemExit(
+            f"backend {args.backend!r} computes operator "
+            f"{backend_spec(args.backend).op!r}, not {args.op!r} "
+            f"(backends for {args.op!r}: "
+            f"{[s.name for s in backend_specs() if s.op == args.op]})"
+        )
+    if args.op != "canny":
+        # the operator zoo streams COLD: these operators are single-pass
+        # stencils with no fixpoint, so there is no temporal state to
+        # warm-seed or skip from — all workers share one bucketed
+        # mesh-aware detector resolved through the registry
+        if args.skip:
+            raise SystemExit(
+                f"--skip needs a temporal plane and operator {args.op!r} "
+                "has none (a single stencil pass leaves no warm state to "
+                "reuse) — drop --skip"
+            )
+        if args.engine:
+            raise SystemExit(
+                "--engine drives a Canny micro-batching engine; zoo "
+                "operators stream through the farm's shared detector — "
+                "drop --engine"
+            )
+        if pods > 1:
+            raise SystemExit(
+                f"operator {args.op!r} has no per-rank temporal state to "
+                "own, so a pod farm buys nothing — use a DATAxMODEL mesh "
+                "(the shared cold detector shards over it) or run local"
+            )
+        try:
+            detector = make_detector(
+                params, dist, op=args.op, backend=args.backend
+            )
+        except ValueError as e:  # backend/op mismatch, unclaimed dist, …
+            raise SystemExit(str(e))
+        name = args.backend or next(
+            s.name for s in backend_specs() if s.op == args.op
+        )
+        ref = backend_spec(name).ref_fn or canny_reference
     if args.engine and pods > 1:
         raise SystemExit(
             "--engine batches frames through one queue and cannot dispatch "
@@ -120,11 +181,12 @@ def main():
     sched = FarmScheduler(
         params,
         n_workers=args.workers,
-        warm=not args.no_warm,
+        warm=not args.no_warm and args.op == "canny",
         skip=args.skip,
         queue_depth=args.queue_depth,
         backend=args.backend,
         block_rows=args.block_rows,
+        detector=detector,
         dist=dist,
         max_restarts=max_restarts,
         timeout=args.timeout,
@@ -144,12 +206,13 @@ def main():
     # per-rank sharded detectors on the pod farm); backends without the
     # claim degrade to a stateless shared detector, warm off — say which
     # applied by looking at what the scheduler constructed
-    stateful = dist.is_local or bool(sched.detectors)
+    stateful = args.op == "canny" and (dist.is_local or bool(sched.detectors))
     warm_desc = "off" if (args.no_warm or not stateful) else "on"
     if args.skip and stateful:
         warm_desc += "+skip"
     print(
-        f"stream: {args.frames} frames {args.height}x{args.width} hold={args.hold} "
+        f"stream: op={args.op} {args.frames} frames "
+        f"{args.height}x{args.width} hold={args.hold} "
         f"| {mode} warm={warm_desc}{mesh_desc}",
         flush=True,
     )
@@ -166,7 +229,7 @@ def main():
     for i, edges in enumerate(runner):
         edge_px += int(edges.sum())
         if args.verify_every and i % args.verify_every == 0:
-            want = canny_reference(source.frame(i), params)
+            want = ref(source.frame(i), params)
             if not (edges == want).all():
                 mismatches += 1
                 print(f"frame {i}: MISMATCH vs numpy oracle", flush=True)

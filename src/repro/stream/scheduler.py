@@ -152,8 +152,18 @@ class StreamStats:
 
     def latency_ms(self, q: float) -> float:
         """q-quantile of per-request enqueue→complete latency (the SLO
-        metric; empty until the continuous plane records requests)."""
+        metric). ``nan`` before the first request completes — a 0.0 here
+        would read as a perfect latency on a scoreboard rendered early."""
+        if not self.request_ms:
+            return float("nan")
         return percentile(self.request_ms, q)
+
+    @staticmethod
+    def _fmt_ms(window, q: float) -> str:
+        """Render a latency quantile, ``-`` for an empty window."""
+        if not window:
+            return "-"
+        return f"{percentile(window, q):.1f}ms"
 
     def slo(self) -> dict:
         """The SLO scoreboard: bound, pass/fail counts, attainment."""
@@ -180,9 +190,9 @@ class StreamStats:
         )
         line = (
             f"frames={self.frames} fps={self.fps():.2f} "
-            f"prep_p50={percentile(self.prep_ms, 0.5):.1f}ms "
-            f"compute_p50={percentile(self.compute_ms, 0.5):.1f}ms "
-            f"compute_p95={percentile(self.compute_ms, 0.95):.1f}ms "
+            f"prep_p50={self._fmt_ms(self.prep_ms, 0.5)} "
+            f"compute_p50={self._fmt_ms(self.compute_ms, 0.5)} "
+            f"compute_p95={self._fmt_ms(self.compute_ms, 0.95)} "
             f"queue_depth~{depth:.1f} "
             f"hysteresis: launches={self.launches} dilations={self.dilations} "
             f"frontend: launches={self.frontend_launches}"
@@ -407,6 +417,11 @@ class FarmScheduler:
                 # the backend's dist capability at construction
                 detector = make_canny(params, dist, backend=name)
                 devices = [None]  # shard_map owns placement; workers share it
+        elif detector is not None and dist is not None and not dist.is_local:
+            # an externally-built mesh detector (e.g. the operator zoo's
+            # shared cold BucketedCanny): same rule — shard_map owns
+            # placement, so workers must not commit frames to one device
+            devices = [None]
         workers = []
         for k in range(n_workers):
             if detector is not None:

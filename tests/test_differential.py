@@ -55,6 +55,8 @@ PARAMS = CannyParams(sigma=1.4, radius=2, low=0.08, high=0.2)
 CORPUS_SIZES = [(37, 53), (64, 96), (21, 33), (48, 64)]
 
 CELLS = list(conformance_cells())
+BY_NAME = {s.name: s for s in backend_specs()}
+ZOO = ("sobel_op", "prewitt", "roberts", "log_op")
 SKIP_BACKENDS = [s.name for s in backend_specs() if s.skip and s.temporal_fn]
 STRIP_SKIP_BACKENDS = [
     s.name for s in backend_specs()
@@ -131,11 +133,13 @@ def test_matrix_is_generated_not_enumerated():
     cannot silently drop a backend or a feature axis."""
     names = {c["backend"] for c in CELLS}
     assert {"jnp", "pallas", "fused"} <= names
+    # ...and the operator zoo registers alongside the Canny backends
+    assert set(ZOO) <= names
     for name in names:
         assert sum(c["backend"] == name for c in CELLS) == 6
     # the shipped support surface, derived from the specs' own claims (the
     # matrix may not second-guess the registry)...
-    by_name = {s.name: s for s in backend_specs()}
+    by_name = BY_NAME
     for c in CELLS:
         warm = c["mode"] != "cold"
         skip = c["mode"] == "warm+skip"
@@ -156,6 +160,18 @@ def test_matrix_is_generated_not_enumerated():
     for mode in ("warm", "warm+skip"):
         assert {"backend": "jnp", "dist": True, "mode": mode,
                 "supported": False} in CELLS
+    # the zoo's honest claims, pinned: cold serving everywhere (local AND
+    # mesh, each against the operator's OWN oracle), and NO temporal
+    # cells — a single-pass operator has no fixpoint state to warm-seed,
+    # so a warm/skip claim would be a lie
+    for name in ZOO:
+        assert by_name[name].ref_fn is not None, name
+        for dist in (False, True):
+            assert {"backend": name, "dist": dist, "mode": "cold",
+                    "supported": True} in CELLS
+            for mode in ("warm", "warm+skip"):
+                assert {"backend": name, "dist": dist, "mode": mode,
+                        "supported": False} in CELLS
 
 
 @pytest.mark.parametrize("cell", CELLS, ids=_cell_id)
@@ -165,10 +181,11 @@ def test_conformance_corpus(cell):
             _make_detector(cell)
         return
     det = _make_detector(cell)
+    ref_fn = BY_NAME[cell["backend"]].ref_fn or canny_reference
     for i, (h, w) in enumerate(CORPUS_SIZES):
         img = synthetic_image(h, w, seed=100 + i)
         got = np.asarray(det(jnp.asarray(img)))
-        want = canny_reference(img, PARAMS)
+        want = ref_fn(img, PARAMS)
         assert got.shape == want.shape
         assert (got == want).all(), (
             f"{_cell_id(cell)} diverged on corpus image {h}x{w}"
@@ -183,12 +200,43 @@ def test_conformance_corpus(cell):
 )
 def test_conformance_streams(cell, stream_name):
     det = _make_detector(cell)
+    ref_fn = BY_NAME[cell["backend"]].ref_fn or canny_reference
     for i, frame in enumerate(STREAMS[stream_name]()):
         got = np.asarray(det(jnp.asarray(frame)))
-        want = canny_reference(frame, PARAMS)
+        want = ref_fn(frame, PARAMS)
         assert (got == want).all(), (
             f"{_cell_id(cell)} diverged on {stream_name} frame {i}"
         )
+
+
+def test_override_is_visible_to_an_already_created_generator():
+    """``register_backend_spec(..., override=True)`` after a
+    ``conformance_cells()`` generator exists must be reflected in every
+    cell not yet yielded — the generator reads the LIVE registry at yield
+    time, so a materialized snapshot cannot go stale against the spec it
+    claims to describe (the historical bug: an override between cell
+    generation and consumption kept serving the OLD claims)."""
+    from repro.core.canny.backends import _SPECS
+
+    from repro.core.canny import BackendSpec, register_backend_spec
+
+    name = "override-probe"
+    register_backend_spec(BackendSpec(name=name, serving_fn=lambda *a: None))
+    try:
+        gen = conformance_cells()
+        next(gen)  # the generator is live BEFORE the override lands
+        register_backend_spec(
+            BackendSpec(name=name, serving_fn=lambda *a: None, dist=True),
+            override=True,
+        )
+        cells = [c for c in gen if c["backend"] == name]
+        assert len(cells) == 6
+        # pre-override the probe did not claim dist; the override does,
+        # and the not-yet-yielded cells must say so
+        assert {"backend": name, "dist": True, "mode": "cold",
+                "supported": True} in cells, cells
+    finally:  # the registry is process-global — leave no probe behind
+        _SPECS.pop(name, None)
 
 
 # ---------------- fail-fast construction (no silent fallbacks) --------------

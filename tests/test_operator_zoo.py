@@ -1,0 +1,175 @@
+"""Property + capability tests for the classical edge-operator zoo.
+
+``sobel_op``/``prewitt``/``roberts``/``log_op`` ride the SAME bucketed
+serving plane as Canny (kernels/operator_backends.py). These properties
+hammer the shape edges the corpus misses — heights below the stage halo,
+widths off the 32-pixel packed-word grid, bucket padding that puts the
+true border mid-array — through the bucketed serving path, compare the
+jnp fallbacks against the same oracles, and pin the zoo's honest
+capability surface: cold cells bit-exact against each operator's OWN
+numpy oracle, temporal/stage-plane requests refused with the missing
+feature named, and the ``make_detector(op=...)`` resolver honest about
+what it builds.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.canny import (
+    CannyParams,
+    UnsupportedFeature,
+    backend_spec,
+    backend_specs,
+    canny_reference,
+    make_canny,
+    make_detector,
+    registered_ops,
+)
+from repro.data.images import synthetic_image
+from repro.stream import TemporalCanny
+
+PARAMS = CannyParams(sigma=1.4, radius=2, low=0.08, high=0.2)
+SETTINGS = dict(max_examples=10, deadline=None)
+ZOO = ("sobel_op", "prewitt", "roberts", "log_op")
+
+
+def _ref(name):
+    ref_fn = backend_spec(name).ref_fn
+    assert ref_fn is not None, f"{name} must carry its own oracle"
+    return ref_fn
+
+
+# ---------------- tiny/odd shapes through the serving path ------------------
+# the operator axis rides the strategy (st.sampled_from), not
+# pytest.mark.parametrize: the no-hypothesis stub in _hypothesis_compat
+# collects @given tests as argument-less skips, which parametrize rejects
+@given(
+    name=st.sampled_from(ZOO),
+    h=st.integers(1, 40), w=st.integers(1, 70), seed=st.integers(0, 10_000),
+)
+@settings(**SETTINGS)
+def test_zoo_bucketed_tiny_and_odd_shapes_bit_exact(name, h, w, seed):
+    """Bucket padding puts the TRUE border mid-array: each operator's
+    in-kernel border anchoring (the 3x3 neighbour fold, Roberts' 2x2
+    forward fold, LoG's two-layer replication) must reproduce its oracle
+    bit-for-bit on heights below the halo and widths off the packed-word
+    grid alike."""
+    img = synthetic_image(h, w, seed=seed)
+    det = make_canny(PARAMS, backend=name, bucket_multiple=32)
+    got = np.asarray(det(jnp.asarray(img)))
+    assert got.shape == img.shape
+    assert (got == _ref(name)(img, PARAMS)).all()
+
+
+@given(
+    name=st.sampled_from(ZOO),
+    b=st.integers(1, 3), h=st.integers(3, 40), w=st.integers(3, 70),
+    seed=st.integers(0, 10_000),
+)
+@settings(**SETTINGS)
+def test_zoo_batch_matches_per_image(name, b, h, w, seed):
+    """Batched serving == each image alone: the (batch, strip) grid axis
+    must not couple images, whatever the operator."""
+    imgs = [synthetic_image(h, w, seed=seed + i) for i in range(b)]
+    det = make_canny(PARAMS, backend=name, bucket_multiple=32)
+    batched = np.asarray(det(jnp.asarray(np.stack(imgs))))
+    for i, img in enumerate(imgs):
+        assert (batched[i] == np.asarray(det(jnp.asarray(img)))).all()
+
+
+@given(
+    name=st.sampled_from(ZOO),
+    h=st.integers(1, 33), w=st.integers(1, 50), seed=st.integers(0, 10_000),
+)
+@settings(**SETTINGS)
+def test_zoo_jnp_fallback_matches_oracle(name, h, w, seed):
+    """The jnp fallback is true-size-aware too: padded well past the true
+    extents (the bucket situation), it must crop back to the oracle."""
+    from repro.kernels.log.ops import log_edges_jnp
+    from repro.kernels.prewitt.ops import prewitt_edges_jnp
+    from repro.kernels.roberts.ops import roberts_edges_jnp
+    from repro.kernels.sobel.ops import sobel_edges_jnp
+
+    fallbacks = {
+        "sobel_op": sobel_edges_jnp,
+        "prewitt": prewitt_edges_jnp,
+        "roberts": roberts_edges_jnp,
+        "log_op": log_edges_jnp,
+    }
+    img = synthetic_image(h, w, seed=seed)
+    hp, wp = h + 7, w + 9  # arbitrary non-multiple padding
+    padded = np.pad(img, ((0, hp - h), (0, wp - w)), mode="edge")
+    got = np.asarray(
+        fallbacks[name](
+            jnp.asarray(padded[None], jnp.float32),
+            jnp.asarray([[h, w]], jnp.int32),
+            PARAMS,
+        )
+    )[0, :h, :w]
+    assert (got == _ref(name)(img, PARAMS)).all()
+
+
+@pytest.mark.parametrize("name", ZOO)
+def test_zoo_adversarial_shape_sweep(name):
+    """Deterministic slice of the property above (runs even without
+    hypothesis): heights below every operator's halo, widths off the
+    packed-word grid, and the degenerate 1x1 frame."""
+    det = make_canny(PARAMS, backend=name, bucket_multiple=32)
+    for i, (h, w) in enumerate(
+        [(1, 1), (2, 3), (5, 7), (16, 31), (33, 65), (40, 70)]
+    ):
+        img = synthetic_image(h, w, seed=40 + i)
+        got = np.asarray(det(jnp.asarray(img)))
+        assert got.shape == img.shape
+        assert (got == _ref(name)(img, PARAMS)).all(), (name, h, w)
+
+
+# ---------------- honest capability surface ---------------------------------
+@pytest.mark.parametrize("name", ZOO)
+def test_zoo_refuses_temporal_cells(name):
+    """No fixpoint → no warm state to seed: every warm / warm+skip
+    request must raise at construction with the missing plane named, not
+    silently run cold."""
+    with pytest.raises(UnsupportedFeature, match="temporal"):
+        TemporalCanny(PARAMS, warm=True, backend=name)
+    with pytest.raises(UnsupportedFeature, match="temporal"):
+        TemporalCanny(PARAMS, warm=True, skip=True, backend=name)
+
+
+@pytest.mark.parametrize("name", ZOO)
+def test_zoo_has_no_stage_plane(name):
+    """The zoo distributes through its serving entry only; asking for the
+    per-image stage plane (bucket_multiple=None) fails at construction."""
+    with pytest.raises(UnsupportedFeature, match="stage-plane"):
+        make_canny(PARAMS, backend=name, bucket_multiple=None)
+
+
+# ---------------- the make_detector resolver --------------------------------
+def test_make_detector_resolves_every_registered_op():
+    """One construction path for the whole zoo: every operator the
+    registry knows resolves to a bucketed detector that is bit-exact
+    against the OPERATOR'S oracle (canny included)."""
+    img = synthetic_image(19, 33, seed=3)
+    ops = registered_ops()
+    assert {"canny", "sobel", "prewitt", "roberts", "log"} <= set(ops)
+    for op in ops:
+        det = make_detector(PARAMS, op=op, bucket_multiple=32)
+        got = np.asarray(det(jnp.asarray(img)))
+        name = ("jnp" if op == "canny"
+                else next(s.name for s in backend_specs() if s.op == op))
+        ref_fn = backend_spec(name).ref_fn or canny_reference
+        assert (got == ref_fn(img, PARAMS)).all(), op
+
+
+def test_make_detector_rejects_backend_op_mismatch():
+    with pytest.raises(ValueError, match="computes operator"):
+        make_detector(PARAMS, op="prewitt", backend="roberts")
+    with pytest.raises(ValueError, match="computes operator"):
+        make_detector(PARAMS, op="canny", backend="log_op")
+
+
+def test_make_detector_rejects_unknown_op():
+    with pytest.raises(ValueError, match="no backend registered"):
+        make_detector(PARAMS, op="scharr")

@@ -27,13 +27,29 @@ SETTINGS = dict(max_examples=25, deadline=None)
 @settings(**SETTINGS)
 def test_even_tiles_cover_and_balance(extent, parts):
     tiles = even_tiles(extent, parts)
-    assert len(tiles) == parts
+    assert len(tiles) == min(parts, extent)  # clamp: never a zero-size tile
     assert tiles[0][0] == 0 and tiles[-1][1] == extent
     sizes = [b - a for a, b in tiles]
-    assert all(s >= 0 for s in sizes)
+    assert all(s >= 1 for s in sizes)
     assert max(sizes) - min(sizes) <= 1
     for (a0, b0), (a1, b1) in zip(tiles, tiles[1:]):
         assert b0 == a1  # contiguous
+
+
+def test_even_tiles_clamps_when_parts_exceed_extent():
+    """parts > extent used to silently emit zero-size tiles (a zero-height
+    strip downstream); the clamp returns exactly ``extent`` unit tiles."""
+    tiles = even_tiles(3, 8)
+    assert tiles == [(0, 1), (1, 2), (2, 3)]
+    assert all(b - a == 1 for a, b in tiles)
+
+
+def test_even_tiles_empty_extent():
+    assert even_tiles(0, 4) == []
+    with pytest.raises(ValueError):
+        even_tiles(5, 0)
+    with pytest.raises(ValueError):
+        even_tiles(-1, 2)
 
 
 def test_tile_counts_balanced():
@@ -43,9 +59,21 @@ def test_tile_counts_balanced():
     assert_balanced(counts2, tolerance_ratio=0.02)
 
 
+def test_tile_counts_tolerates_the_clamp():
+    """A tiny extent under a big grid clamps to unit tiles — optimal
+    balance even though the size *ratio* between (r+1)(c+1) and r*c tiles
+    of a slightly larger extent can exceed any ratio bound."""
+    counts = tile_counts((3, 5), (8, 8))
+    assert counts.shape == (3, 5)
+    assert_balanced(counts, tolerance_ratio=0.0)  # all 1s after the clamp
+    # sizes differing by 1 on a tiny extent: best possible static balance
+    assert_balanced(np.array([2, 2, 1]))
+
+
 def test_assert_balanced_raises():
     with pytest.raises(AssertionError):
         assert_balanced(np.array([100, 1]))
+    assert_balanced(np.array([], dtype=np.int64))  # vacuous, not a crash
 
 
 # ---------- scan -----------------------------------------------------------

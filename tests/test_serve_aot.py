@@ -168,6 +168,23 @@ def test_lingering_partial_slot_dispatches_at_deadline():
     assert list(b.stats.slot_occupancy) == [0.75]
 
 
+def test_zero_linger_dispatches_immediately():
+    """``linger_ms=0`` is the latency-floor fast path: a lone request on
+    a wide lane has ``deadline <= now`` the moment it enqueues, so the
+    dispatcher fires at its next pass without waiting for the slot to
+    fill OR any linger window. With max_batch=4 the fill trigger cannot
+    fire for one request — if the zero-linger deadline path regressed,
+    this would hang until the timeout instead of answering instantly."""
+    engine = make_engine(max_batch=4)
+    with ContinuousBatcher(engine, linger_ms=0.0, timeout=30.0) as b:
+        ticket = b.submit(synthetic_image(30, 30, seed=5))
+        out = ticket.result(timeout=30.0)
+    assert (out == canny_reference(synthetic_image(30, 30, seed=5), PARAMS)).all()
+    # no linger window rode the queue wait
+    assert (ticket.t_dispatch - ticket.t_enqueue) < 1.0
+    assert list(b.stats.slot_occupancy)  # the dispatch was recorded
+
+
 def test_buckets_never_share_a_slot():
     """Requests only pack with same-bucket requests: two buckets × two
     requests each dispatch as two launches, never one mixed launch."""

@@ -600,6 +600,30 @@ def test_stream_stats_watchdog_counts_slow_steps_and_stragglers():
     assert "slow_steps=" in line and "worker1" in line
 
 
+def test_stream_stats_empty_windows_render_cleanly():
+    """A scoreboard rendered before the first request completes must not
+    invent a perfect 0.0ms latency: quantiles of empty windows are nan
+    and the summary renders ``-`` for them."""
+    import math
+
+    from repro.stream.scheduler import StreamStats
+
+    stats = StreamStats()
+    assert math.isnan(stats.latency_ms(0.50))
+    assert math.isnan(stats.latency_ms(0.99))
+    line = stats.summary()  # must not crash on a fresh object
+    assert "prep_p50=- " in line
+    assert "compute_p50=- " in line
+    assert "compute_p95=- " in line
+    assert "0.0ms" not in line
+    # once a sample lands the real numbers come back
+    stats.record_compute(12.0)
+    stats.prep_ms.append(3.0)
+    line = stats.summary()
+    assert "compute_p50=12.0ms" in line
+    assert "prep_p50=3.0ms" in line
+
+
 def test_elastic_pod_farm_kill_and_revive_bit_identical():
     """The in-process tentpole: rank death mid-stream, deterministic
     re-ownership, cold revival — output equals the healthy oracle."""
